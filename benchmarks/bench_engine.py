@@ -1,0 +1,92 @@
+"""Beyond-paper engine benchmarks: batched TCCS throughput + kernel micro.
+
+CPU caveat recorded in the CSV: the batched engine's advantage is a TPU
+property (dense (B,N) propagation on VPU/MXU vs pointer chasing); on this
+container the Pallas kernels run in interpret mode and the dense engine
+pays Python dispatch, so absolute numbers here only validate correctness
+plumbing + scaling shape, not the TPU speedup claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import default_k, random_queries, timed, workload, write_csv
+from repro.core.core_time import edge_core_times
+from repro.core.pecb_index import build_pecb_index
+from repro.core.batch_query import to_device, batch_query
+
+
+def bench_batch_query(name: str = "fb_like", batches=(32, 128, 512)):
+    g = workload(name)
+    k = default_k(name)
+    idx = build_pecb_index(g, k, edge_core_times(g, k))
+    dix = to_device(idx)
+    rows = []
+    queries = random_queries(g, max(batches), seed=3)
+    u = jnp.asarray([q[0] for q in queries], jnp.int32)
+    ts = jnp.asarray([q[1] for q in queries], jnp.int32)
+    te = jnp.asarray([q[2] for q in queries], jnp.int32)
+
+    # sequential Algorithm 1 reference
+    t0 = time.perf_counter()
+    for (uu, a, b) in queries[:256]:
+        idx.query(uu, a, b)
+    seq_us = (time.perf_counter() - t0) / 256 * 1e6
+
+    for B in batches:
+        fn = jax.jit(batch_query)
+        out = fn(dix, u[:B], ts[:B], te[:B])
+        out.block_until_ready()          # compile
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            out = fn(dix, u[:B], ts[:B], te[:B])
+        out.block_until_ready()
+        us_per_q = (time.perf_counter() - t0) / (reps * B) * 1e6
+        rows.append([name, B, round(us_per_q, 2), round(seq_us, 2),
+                     round(seq_us / us_per_q, 3)])
+    write_csv("batch_query.csv",
+              ["workload", "batch", "batched_us_per_q", "alg1_us_per_q",
+               "speedup"], rows)
+    return rows
+
+
+def bench_kernels():
+    """Per-kernel micro: interpret-mode Pallas vs jnp reference (CPU)."""
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def run(tag, f_kernel, f_ref, *args):
+        out = f_kernel(*args)
+        jax.block_until_ready(out)
+        out, dt_k = timed(lambda: jax.block_until_ready(f_kernel(*args)))
+        out, dt_r = timed(lambda: jax.block_until_ready(f_ref(*args)))
+        rows.append([tag, round(dt_k * 1e3, 3), round(dt_r * 1e3, 3)])
+
+    n, m = 2000, 8000
+    src = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    alive = jnp.ones(m, bool)
+    run("degree_count(2k,8k)", ops.degree_count, ref.degree_count, src, dst, alive, n)
+
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    run("matmul(512)", ops.matmul, ref.matmul, a, b)
+
+    vals = jnp.asarray(rng.normal(size=(4096, 64)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 512, 4096), jnp.int32)
+    run("segment_sum(4k,64)", lambda *xs: ops.segment_sum(*xs),
+        lambda *xs: ref.segment_sum_sorted(*xs), vals, ids, 512)
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    run("flash_attn(256)", lambda q_: ops.flash_attention(q_, q_, q_, causal=True),
+        lambda q_: ref.flash_attention(q_, q_, q_, causal=True), q)
+
+    write_csv("kernels.csv", ["kernel", "pallas_interpret_ms", "jnp_ref_ms"], rows)
+    return rows

@@ -1,0 +1,129 @@
+"""Paper-figure benchmarks.
+
+One function per paper table/figure family:
+  * Figure 4 (index space)        -> bench_index_size
+  * Figure 5 (construction time)  -> bench_construction
+  * Figure 6 (query time)         -> bench_query
+  * Figures 7-9 (impact of k)     -> bench_vary_k
+Figures 10-12 (original timestamps) use the same code path on the
+fine-grained variants (no day aggregation) -> bench_fine_grained.
+
+Workloads are synthetic Table-3-shaped graphs (offline container; see
+DESIGN.md §5); the claims validated are the *relative* ones the paper
+makes: PECB builds 1-3 orders faster than EF, is the smallest index, and
+queries stay within the same order of magnitude.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import (build_all, default_k, random_queries, timed, workload,
+                     write_csv)
+
+WORKLOADS = ["fb_like", "cm_like", "em_like", "mo_like", "wk_like"]
+N_QUERIES = 1000
+
+
+def _query_us(idx, queries) -> float:
+    t0 = time.perf_counter()
+    for (u, ts, te) in queries:
+        idx.query(u, ts, te)
+    return (time.perf_counter() - t0) / len(queries) * 1e6
+
+
+def bench_index_size(workloads=WORKLOADS):
+    rows = []
+    for name in workloads:
+        k = default_k(name)
+        g, tab, pecb, ctm, ef, _ = build_all(name, k)
+        rows.append([name, k, pecb.nbytes(), ctm.nbytes(), ef.nbytes(),
+                     round(ef.nbytes() / pecb.nbytes(), 2)])
+    write_csv("index_size.csv",
+              ["workload", "k", "pecb_bytes", "ctmsf_bytes", "ef_bytes",
+               "ef_over_pecb"], rows)
+    return rows
+
+
+def bench_construction(workloads=WORKLOADS):
+    rows = []
+    for name in workloads:
+        k = default_k(name)
+        _, _, _, _, _, times = build_all(name, k)
+        rows.append([name, k, round(times["pecb_s"], 4), round(times["ctmsf_s"], 4),
+                     round(times["ef_s"], 4),
+                     round(times["ef_s"] / times["pecb_s"], 2)])
+    write_csv("construction.csv",
+              ["workload", "k", "pecb_s", "ctmsf_s", "ef_s", "ef_over_pecb"],
+              rows)
+    return rows
+
+
+def bench_query(workloads=WORKLOADS):
+    rows = []
+    for name in workloads:
+        k = default_k(name)
+        g, tab, pecb, ctm, ef, _ = build_all(name, k)
+        queries = random_queries(g, N_QUERIES)
+        rows.append([name, k,
+                     round(_query_us(pecb, queries), 2),
+                     round(_query_us(ctm, queries), 2),
+                     round(_query_us(ef, queries), 2)])
+    write_csv("query_time.csv",
+              ["workload", "k", "pecb_us", "ctmsf_us", "ef_us"], rows)
+    return rows
+
+
+def bench_vary_k(name: str = "cm_like"):
+    from .common import _KMAX_CACHE
+    from repro.core.kcore import k_max as kmax_fn
+    g = workload(name)
+    km = kmax_fn(g)
+    rows = []
+    for frac in (0.5, 0.6, 0.7, 0.8, 0.9):
+        k = max(2, int(round(frac * km)))
+        g, tab, pecb, ctm, ef, times = build_all(name, k)
+        queries = random_queries(g, N_QUERIES)
+        rows.append([name, frac, k,
+                     pecb.nbytes(), ef.nbytes(),
+                     round(times["pecb_s"], 4), round(times["ef_s"], 4),
+                     round(_query_us(pecb, queries), 2),
+                     round(_query_us(ef, queries), 2)])
+    write_csv("vary_k.csv",
+              ["workload", "frac", "k", "pecb_bytes", "ef_bytes",
+               "pecb_s", "ef_s", "pecb_us", "ef_us"], rows)
+    return rows
+
+
+def bench_fine_grained(name: str = "fb_like", factor: int = 8):
+    """Figures 10-12: finer timestamp granularity (t_max x factor).
+
+    EF degrades superlinearly with distinct timestamps; PECB scales with
+    *changes*, not timestamps.
+    """
+    from repro.core.temporal_graph import gen_temporal_graph, BENCH_WORKLOADS
+    from repro.core.core_time import edge_core_times
+    from repro.core.pecb_index import build_pecb_index
+    from repro.core.ef_index import EFIndex
+
+    cfgs = dict(BENCH_WORKLOADS[name])
+    rows = []
+    for mult in (1, factor):
+        cfgs2 = dict(cfgs)
+        cfgs2["t_max"] = cfgs["t_max"] * mult
+        g = gen_temporal_graph(**cfgs2)
+        k = default_k(name)
+        tab, t_tab = timed(edge_core_times, g, k)
+        pecb, t_p = timed(build_pecb_index, g, k, tab)
+        ef, t_e = timed(EFIndex, g, k, tab)
+        queries = random_queries(g, N_QUERIES // 2)
+        rows.append([name, g.t_max, round(t_tab + t_p, 4), round(t_tab + t_e, 4),
+                     pecb.nbytes(), ef.nbytes(),
+                     round(_query_us(pecb, queries), 2),
+                     round(_query_us(ef, queries), 2)])
+    write_csv("fine_grained.csv",
+              ["workload", "t_max", "pecb_s", "ef_s", "pecb_bytes", "ef_bytes",
+               "pecb_us", "ef_us"], rows)
+    return rows

@@ -1,0 +1,69 @@
+"""Shared benchmark helpers: workloads, index builders, timing, CSV."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+from repro.core.temporal_graph import BENCH_WORKLOADS, bench_graph
+from repro.core.core_time import edge_core_times
+from repro.core.pecb_index import build_pecb_index
+from repro.core.ctmsf_index import CTMSFIndex
+from repro.core.ef_index import EFIndex
+from repro.core.kcore import k_max
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+_KMAX_CACHE: dict = {}
+_GRAPH_CACHE: dict = {}
+
+
+def workload(name: str):
+    if name not in _GRAPH_CACHE:
+        _GRAPH_CACHE[name] = bench_graph(name)
+    return _GRAPH_CACHE[name]
+
+
+def default_k(name: str, frac: float = 0.7) -> int:
+    if name not in _KMAX_CACHE:
+        _KMAX_CACHE[name] = k_max(workload(name))
+    return max(2, int(round(frac * _KMAX_CACHE[name])))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def build_all(name: str, k: int):
+    """(core-time table, pecb, ctmsf, ef) + build seconds for each."""
+    g = workload(name)
+    tab, t_tab = timed(edge_core_times, g, k)
+    pecb, t_pecb = timed(build_pecb_index, g, k, tab)
+    ctm, t_ctm = timed(CTMSFIndex, g, k, tab)
+    ef, t_ef = timed(EFIndex, g, k, tab)
+    times = {"core_times_s": t_tab, "pecb_s": t_tab + t_pecb,
+             "ctmsf_s": t_tab + t_ctm, "ef_s": t_tab + t_ef}
+    return g, tab, pecb, ctm, ef, times
+
+
+def random_queries(g, n_q: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, g.n, n_q)
+    ts = rng.integers(1, g.t_max + 1, n_q)
+    te = np.minimum(ts + rng.integers(0, g.t_max, n_q), g.t_max)
+    return list(zip(u.tolist(), ts.tolist(), te.tolist()))
+
+
+def write_csv(name: str, header: list, rows: list):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

@@ -1,0 +1,58 @@
+"""Benchmark aggregator: one section per paper table/figure + engine benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _emit(title, header, rows):
+    print(f"\n== {title} ==")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small workloads only (CI)")
+    args = ap.parse_args(argv)
+
+    from . import bench_paper as bp
+    from . import bench_engine as be
+
+    workloads = ["fb_like", "cm_like"] if args.fast else bp.WORKLOADS
+
+    t0 = time.time()
+    _emit("Index space (Fig 4)",
+          ["workload", "k", "pecb_bytes", "ctmsf_bytes", "ef_bytes", "ef/pecb"],
+          bp.bench_index_size(workloads))
+    _emit("Construction time (Fig 5)",
+          ["workload", "k", "pecb_s", "ctmsf_s", "ef_s", "ef/pecb"],
+          bp.bench_construction(workloads))
+    _emit("Query time, 1000 random queries (Fig 6)",
+          ["workload", "k", "pecb_us", "ctmsf_us", "ef_us"],
+          bp.bench_query(workloads))
+    _emit("Impact of k (Figs 7-9)",
+          ["workload", "frac", "k", "pecb_bytes", "ef_bytes", "pecb_s", "ef_s",
+           "pecb_us", "ef_us"],
+          bp.bench_vary_k("cm_like"))
+    _emit("Fine-grained timestamps (Figs 10-12)",
+          ["workload", "t_max", "pecb_s", "ef_s", "pecb_bytes", "ef_bytes",
+           "pecb_us", "ef_us"],
+          bp.bench_fine_grained("fb_like", factor=4 if args.fast else 8))
+    _emit("Batched TCCS engine (beyond paper; CPU-interpret caveat in module doc)",
+          ["workload", "batch", "batched_us_per_q", "alg1_us_per_q", "speedup"],
+          be.bench_batch_query("fb_like", batches=(32, 128) if args.fast else (32, 128, 512)))
+    _emit("Pallas kernel micro (interpret mode vs jnp ref)",
+          ["kernel", "pallas_interpret_ms", "jnp_ref_ms"],
+          be.bench_kernels())
+    print(f"\n[benchmarks done in {time.time()-t0:.1f}s; CSVs in results/bench/]")
+
+
+if __name__ == "__main__":
+    main()

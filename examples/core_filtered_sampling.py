@@ -1,0 +1,90 @@
+"""Beyond-paper integration: PECB-driven temporal-core filtering for
+GraphSAGE neighbour sampling (ties the paper's technique to the assigned
+GNN architecture family).
+
+    PYTHONPATH=src python examples/core_filtered_sampling.py
+
+Idea: on a temporal interaction graph, sampling neighbours uniformly mixes
+in stale/weak contacts. The PECB index gives, per seed and time window, the
+k-core component the seed belongs to — a cohesion filter. We sample
+GraphSAGE neighbourhoods restricted to each seed's temporal core component
+and train on the induced subgraph; the k-core edge-mask fixpoint reuses the
+same peel round the index build plane uses (kernels/kcore_peel.py).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.temporal_graph import gen_temporal_graph
+from repro.core.core_time import edge_core_times
+from repro.core.pecb_index import build_pecb_index
+from repro.core.kcore import k_max
+from repro.data.graph_sampler import CSRGraph, sample_subgraph_batch
+from repro.models import gnn
+from repro.optim import adamw
+
+# --- temporal graph + index ----------------------------------------------
+g = gen_temporal_graph(n=500, m=8000, t_max=40, seed=3)
+k = max(2, int(0.5 * k_max(g)))
+index = build_pecb_index(g, k)
+print(f"graph n={g.n} m={g.m}; PECB index ready (k={k})")
+
+# --- core-filtered sampling ----------------------------------------------
+window = (10, 30)
+rng = np.random.default_rng(0)
+seeds = rng.choice(g.n, 32, replace=False)
+
+cohorts = {int(s): index.query(int(s), *window) for s in seeds}
+live_seeds = [s for s, c in cohorts.items() if c]
+print(f"{len(live_seeds)}/{len(seeds)} seeds are in a temporal {k}-core over {window}")
+
+# static graph restricted to the window, CSR for sampling
+src, dst, _ = g.project(*window)
+csr = CSRGraph(g.n, np.concatenate([src, dst]), np.concatenate([dst, src]))
+feats = rng.normal(size=(g.n, 32)).astype(np.float32)
+labels = rng.integers(0, 5, g.n).astype(np.int32)
+
+PAD_N, PAD_E = g.n, 8192
+
+
+def make_batch(filtered: bool):
+    seed_arr = np.asarray(live_seeds[:16], np.int64)
+    b = sample_subgraph_batch(csr, feats, labels, seed_arr, (10, 5), rng,
+                              pad_nodes=PAD_N, pad_edges=PAD_E)
+    if filtered:
+        # drop sampled edges whose endpoint leaves the seed's union cohort
+        allowed = np.zeros(g.n, bool)
+        for s in live_seeds[:16]:
+            for v in cohorts[s]:
+                allowed[v] = True
+        keep = allowed[b["src"]] & allowed[b["dst"]]
+        b["edge_mask"] = (b["edge_mask"] * keep).astype(np.float32)
+    return {kk: jnp.asarray(vv) for kk, vv in b.items()}
+
+
+cfg = gnn.SAGEConfig(d_in=32, d_hidden=32, n_classes=5)
+params = gnn.sage_init(cfg, jax.random.PRNGKey(0))
+opt_cfg = adamw.AdamWConfig(lr=3e-3, total_steps=60, warmup_steps=5)
+opt = adamw.init_state(params)
+step = jax.jit(lambda p, o, b: _step(p, o, b))
+
+
+def _step(p, o, b):
+    lval, grads = jax.value_and_grad(lambda pp: gnn.sage_loss(pp, cfg, b))(p)
+    p, o, m = adamw.apply_updates(opt_cfg, p, grads, o)
+    return p, o, lval
+
+
+for mode in (False, True):
+    p, o = params, opt
+    losses = []
+    for it in range(30):
+        b = make_batch(filtered=mode)
+        p, o, lval = step(p, o, b)
+        losses.append(float(lval))
+    kept = float(b["edge_mask"].sum())
+    print(f"{'core-filtered' if mode else 'uniform     '} sampling: "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({kept:.0f} active edges in last batch)")
+print("done — the paper's index is serving as a neighbourhood cohesion filter.")

@@ -1,0 +1,11 @@
+"""End-to-end serving driver (the paper's deployment kind): build the PECB
+index offline, serve batched TCCS queries with the device engine, verify
+exactness, report throughput.
+
+    PYTHONPATH=src python examples/serve_queries.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--workload", "cm_like", "--queries", "2048", "--batch", "256"])

@@ -1,0 +1,22 @@
+"""Config registry: one module per assigned architecture."""
+
+from . import base
+from .base import (ArchSpec, REGISTRY, all_cells, get, input_specs,
+                   cell_model_cfg, smoke_dims, abstract_params, init_params, model_flops,
+                   make_train_step, make_serve_step, param_specs, batch_specs)
+
+_ARCH_MODULES = (
+    "dbrx_132b", "qwen2_moe_a2_7b", "glm4_9b", "codeqwen1_5_7b",
+    "qwen1_5_110b", "meshgraphnet", "nequip", "graphsage_reddit",
+    "mace", "mind",
+)
+
+
+def load_all():
+    import importlib
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"{__name__}.{m}")
+    return dict(REGISTRY)
+
+
+load_all()

@@ -1,0 +1,400 @@
+"""Architecture/shape registry: the 10 assigned archs × their shape sets.
+
+Every (arch × shape) cell resolves to:
+  * a specialized model config (``cell_model_cfg``),
+  * ``input_specs`` — ShapeDtypeStruct stand-ins for every step input
+    (weak-type-correct, shardable, no device allocation),
+  * a step function (``make_step``) — ``train_step`` for training shapes,
+    ``serve_step``/``decode_step`` for inference shapes,
+  * partition specs for params / optimizer state / inputs (runtime.sharding).
+
+The full configs are exercised only via the dry-run; smoke tests use the
+``smoke_cfg`` reductions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models import gnn as gnn_mod
+from ..models import recsys as recsys_mod
+from ..models import transformer as tfm
+from ..optim import adamw
+from ..runtime import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str                    # 'lm-dense' | 'lm-moe' | 'gnn' | 'recsys'
+    model_cfg: Any
+    smoke_cfg: Any
+    shapes: dict
+    skips: dict                    # shape name -> reason (cell not run)
+    source: str = ""               # provenance note
+
+
+REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    if not REGISTRY:
+        from . import load_all  # circular-safe lazy load
+        load_all()
+    return REGISTRY[arch_id]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name) for every runnable cell."""
+    if not REGISTRY:
+        from . import load_all
+        load_all()
+    for aid, spec in REGISTRY.items():
+        for shape in spec.shapes:
+            if shape in spec.skips and not include_skipped:
+                continue
+            yield aid, shape
+
+
+# ----------------------------------------------------------------------
+# Shared shape tables (per assignment)
+# ----------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k":    dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k":  dict(kind="decode", seq=32768, batch=128),
+    "long_500k":   dict(kind="decode", seq=524288, batch=1),
+}
+LM_SKIPS = {
+    "long_500k": "pure full (quadratic) attention arch; 512k decode is out of "
+                 "scope per the shape definition (skip noted in DESIGN.md §6)",
+}
+
+GNN_SHAPES = {
+    # e = undirected edge count from the assignment; message passing uses the
+    # doubled (directed) arrays, reflected in input_specs.
+    "full_graph_sm": dict(kind="train", n=2_708, e=10_556, d_feat=1_433, graphs=1),
+    "minibatch_lg":  dict(kind="train", n=169_984, e=168_960, d_feat=602,
+                          graphs=1, seeds=1_024, fanout=(15, 10),
+                          pool_nodes=232_965, pool_edges=114_615_892),
+    "ogb_products":  dict(kind="train", n=2_449_029, e=61_859_140, d_feat=100, graphs=1),
+    "molecule":      dict(kind="train", n=30 * 128, e=64 * 128, d_feat=16, graphs=128),
+}
+
+RECSYS_SHAPES = {
+    "train_batch":    dict(kind="train", batch=65_536),
+    "serve_p99":      dict(kind="serve", batch=512, cands=100),
+    "serve_bulk":     dict(kind="serve", batch=262_144, cands=100),
+    "retrieval_cand": dict(kind="retrieval", batch=1, cands=1_000_000),
+}
+
+
+# ----------------------------------------------------------------------
+# Cell -> specialized model config
+# ----------------------------------------------------------------------
+
+def cell_model_cfg(spec: ArchSpec, shape_name: str, smoke: bool = False):
+    cfg = spec.smoke_cfg if smoke else spec.model_cfg
+    dims = spec.shapes[shape_name]
+    if spec.family == "gnn":
+        d_feat = dims["d_feat"] if not smoke else 8
+        if isinstance(cfg, gnn_mod.MGNConfig):
+            return dataclasses.replace(cfg, d_node_in=d_feat)
+        if isinstance(cfg, gnn_mod.SAGEConfig):
+            return dataclasses.replace(cfg, d_in=d_feat)
+        if isinstance(cfg, (gnn_mod.NequIPConfig, gnn_mod.MACEConfig)):
+            return dataclasses.replace(cfg, d_species=d_feat)
+    return cfg
+
+
+def smoke_dims(spec: ArchSpec, shape_name: str) -> dict:
+    """Reduced dims of the same kind, for CPU smoke tests."""
+    dims = dict(spec.shapes[shape_name])
+    if spec.family.startswith("lm"):
+        dims.update(seq=32, batch=2)
+    elif spec.family == "gnn":
+        graphs = min(dims.get("graphs", 1), 4)
+        dims.update(n=24 * graphs, e=48 * graphs, d_feat=8, graphs=graphs)
+        dims.pop("seeds", None)
+    else:
+        dims.update(batch=4)
+        if "cands" in dims:
+            dims.update(cands=16)
+    return dims
+
+
+# ----------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins per cell
+# ----------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(spec: ArchSpec, shape_name: str, dims: dict | None = None,
+                model_cfg=None) -> dict:
+    """Batch inputs for the cell's step function."""
+    dims = dims or spec.shapes[shape_name]
+    cfg = model_cfg or cell_model_cfg(spec, shape_name)
+    kind = dims["kind"]
+    if spec.family.startswith("lm"):
+        B, S = dims["batch"], dims["seq"]
+        if kind == "train":
+            return {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        if kind == "prefill":
+            return {"tokens": _sds((B, S), jnp.int32)}
+        if kind == "decode":
+            return {
+                "tokens": _sds((B, 1), jnp.int32),
+                "cache": tfm.abstract_cache(cfg, B, S),
+                "cache_len": _sds((), jnp.int32),
+            }
+    if spec.family == "gnn":
+        n = dims["n"]
+        # directed-doubled edges, padded to a 512 multiple so edge arrays
+        # shard evenly over every production mesh; padded edges carry
+        # edge_mask = 0 (jraph-style padding, honoured by every model)
+        e2 = int(np.ceil(2 * dims["e"] / 512)) * 512
+        out = {
+            "node_feat": _sds((n, dims["d_feat"]), jnp.float32),
+            "src": _sds((e2,), jnp.int32),
+            "dst": _sds((e2,), jnp.int32),
+            "edge_mask": _sds((e2,), jnp.float32),
+        }
+        if isinstance(cfg, gnn_mod.MGNConfig):
+            out["edge_feat"] = _sds((e2, cfg.d_edge_in), jnp.float32)
+            out["target"] = _sds((n, cfg.d_out), jnp.float32)
+        elif isinstance(cfg, gnn_mod.SAGEConfig):
+            out["labels"] = _sds((n,), jnp.int32)
+            out["seed_mask"] = _sds((n,), jnp.bool_)
+        else:  # geometric archs
+            out["pos"] = _sds((n, 3), jnp.float32)
+            out["graph_id"] = _sds((n,), jnp.int32)
+            out["energy_target"] = _sds((dims["graphs"],), jnp.float32)
+            out["force_target"] = _sds((n, 3), jnp.float32)
+        return out
+    if spec.family == "recsys":
+        B, H = dims["batch"], cfg.hist_len
+        out = {"hist_ids": _sds((B, H), jnp.int32), "hist_mask": _sds((B, H), jnp.float32)}
+        if kind == "train":
+            out["target_id"] = _sds((B,), jnp.int32)
+        elif kind == "serve":
+            out["cand_ids"] = _sds((B, dims["cands"]), jnp.int32)
+        else:  # retrieval
+            out["cand_ids"] = _sds((dims["cands"],), jnp.int32)
+        return out
+    raise ValueError(f"unknown cell {spec.id} x {shape_name}")
+
+
+def abstract_params(spec: ArchSpec, model_cfg) -> Any:
+    if spec.family.startswith("lm"):
+        return tfm.abstract_params(model_cfg)
+    if spec.family == "gnn":
+        init = _GNN_INIT[type(model_cfg)]
+        return jax.eval_shape(lambda: init(model_cfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: recsys_mod.mind_init(model_cfg, jax.random.PRNGKey(0)))
+
+
+_GNN_INIT = {
+    gnn_mod.MGNConfig: gnn_mod.mgn_init,
+    gnn_mod.SAGEConfig: gnn_mod.sage_init,
+    gnn_mod.NequIPConfig: gnn_mod.nequip_init,
+    gnn_mod.MACEConfig: gnn_mod.mace_init,
+}
+_GNN_LOSS = {
+    gnn_mod.MGNConfig: gnn_mod.mgn_loss,
+    gnn_mod.SAGEConfig: gnn_mod.sage_loss,
+    gnn_mod.NequIPConfig: gnn_mod.nequip_loss,
+    gnn_mod.MACEConfig: gnn_mod.mace_loss,
+}
+_GNN_FWD = {
+    gnn_mod.MGNConfig: gnn_mod.mgn_forward,
+    gnn_mod.SAGEConfig: gnn_mod.sage_forward,
+    gnn_mod.NequIPConfig: gnn_mod.nequip_forward,
+    gnn_mod.MACEConfig: gnn_mod.mace_forward,
+}
+
+
+def init_params(spec: ArchSpec, model_cfg, key):
+    if spec.family.startswith("lm"):
+        return tfm.init_params(model_cfg, key)
+    if spec.family == "gnn":
+        return _GNN_INIT[type(model_cfg)](model_cfg, key)
+    return recsys_mod.mind_init(model_cfg, key)
+
+
+# ----------------------------------------------------------------------
+# step functions
+# ----------------------------------------------------------------------
+
+def loss_for(spec: ArchSpec, model_cfg, take_fn=None) -> Callable:
+    if spec.family.startswith("lm"):
+        return lambda p, b: tfm.loss_fn(p, model_cfg, b["tokens"], b["labels"])
+    if spec.family == "gnn":
+        base = _GNN_LOSS[type(model_cfg)]
+        return lambda p, b: base(p, model_cfg, b)
+    return lambda p, b: recsys_mod.mind_loss(p, model_cfg, b, take_fn=take_fn)
+
+
+def make_train_step(spec: ArchSpec, model_cfg,
+                    opt_cfg: adamw.AdamWConfig | None = None,
+                    take_fn=None) -> Callable:
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    loss = loss_for(spec, model_cfg, take_fn=take_fn)
+
+    def train_step(params, opt_state, batch):
+        lval, grads = jax.value_and_grad(loss)(params, batch)
+        params, opt_state, metrics = adamw.apply_updates(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": lval, **metrics}
+
+    return train_step
+
+
+def make_serve_step(spec: ArchSpec, shape_name: str, model_cfg,
+                    take_fn=None, cand_take_fn=None) -> Callable:
+    kind = spec.shapes[shape_name]["kind"]
+    if spec.family.startswith("lm"):
+        if kind == "prefill":
+            def serve_step(params, batch):
+                logits, _ = tfm.forward(params, model_cfg, batch["tokens"])
+                return logits
+            return serve_step
+        if kind == "decode":
+            def serve_step(params, batch):
+                return tfm.decode_step(params, model_cfg, batch["tokens"],
+                                       batch["cache"], batch["cache_len"])
+            return serve_step
+    if spec.family == "recsys":
+        if kind == "serve":
+            return lambda params, batch: recsys_mod.mind_serve(
+                params, model_cfg, batch, take_fn=take_fn, cand_take_fn=cand_take_fn)
+        if kind == "retrieval":
+            return lambda params, batch: recsys_mod.mind_retrieval(
+                params, model_cfg, batch, take_fn=take_fn, cand_take_fn=cand_take_fn)
+    if spec.family == "gnn":
+        fwd = _GNN_FWD[type(model_cfg)]
+        return lambda params, batch: fwd(params, model_cfg, batch)
+    raise ValueError(f"no serve step for {spec.id} x {shape_name}")
+
+
+# ----------------------------------------------------------------------
+# partition specs per cell
+# ----------------------------------------------------------------------
+
+def param_specs(spec: ArchSpec, params_tree, mesh):
+    if spec.family.startswith("lm"):
+        return shd.lm_param_spec_tree(params_tree, mesh)
+    if spec.family == "gnn":
+        return shd.gnn_param_specs(params_tree)
+    return shd.mind_param_specs(params_tree)
+
+
+def batch_specs(spec: ArchSpec, shape_name: str, batch_tree, mesh):
+    dims = spec.shapes[shape_name]
+    kind = dims["kind"]
+    dp = shd.dp_axes(mesh)
+    if spec.family.startswith("lm"):
+        if kind in ("train", "prefill"):
+            return jax.tree.map(lambda _: P(dp, None), batch_tree)
+        cfg = cell_model_cfg(spec, shape_name)
+        return {
+            "tokens": P(dp, None),
+            "cache": shd.lm_cache_spec(mesh, cfg.n_kv),
+            "cache_len": P(),
+        }
+    if spec.family == "gnn":
+        return shd.gnn_batch_specs(batch_tree, mesh)
+    return shd.mind_batch_specs(batch_tree, mesh, retrieval=(kind == "retrieval"))
+
+
+def opt_specs(spec_tree_params):
+    return {"mu": spec_tree_params, "nu": spec_tree_params, "step": P()}
+
+
+# ----------------------------------------------------------------------
+# analytic MODEL_FLOPS per cell (the roofline "useful flops" numerator)
+# ----------------------------------------------------------------------
+
+def _mlp_flops(dims: list, rows: float) -> float:
+    return sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:])) * rows
+
+
+def model_flops(spec: ArchSpec, shape_name: str, dims: dict | None = None,
+                model_cfg=None) -> float:
+    """Analytic useful FLOPs for one step of this cell (global, all chips).
+
+    LM: the standard 6·N_active·tokens training approximation (+ quadratic
+    attention term), 2·N for inference. GNN/recsys: closed forms from the
+    layer algebra (documented inline). Training = 3x forward.
+    """
+    dims = dims or spec.shapes[shape_name]
+    cfg = model_cfg or cell_model_cfg(spec, shape_name)
+    kind = dims["kind"]
+    if spec.family.startswith("lm"):
+        B = dims["batch"]
+        S = dims["seq"]
+        N = cfg.active_param_count
+        L, Hq, dh = cfg.n_layer, cfg.n_head, cfg.d_head
+        if kind == "train":
+            tokens = B * S
+            return 6.0 * N * tokens + 3 * (2.0 * L * B * S * S * Hq * dh)  # causal-halved attn fwd=2BS²Hd
+        if kind == "prefill":
+            tokens = B * S
+            return 2.0 * N * tokens + 2.0 * L * B * S * S * Hq * dh
+        # decode: stream active params for B tokens + attend over the cache
+        return 2.0 * N * B + 4.0 * L * B * S * Hq * dh
+    if spec.family == "gnn":
+        n, e2 = dims["n"], 2 * dims["e"]
+        h = cfg.d_hidden
+        fwd = 0.0
+        if isinstance(cfg, gnn_mod.MGNConfig):
+            hid = [h] * cfg.mlp_layers
+            fwd += _mlp_flops([cfg.d_node_in] + hid + [h], n)
+            fwd += _mlp_flops([cfg.d_edge_in] + hid + [h], e2)
+            fwd += cfg.n_layers * (_mlp_flops([3 * h] + hid + [h], e2)
+                                   + _mlp_flops([2 * h] + hid + [h], n))
+            fwd += _mlp_flops([h] + hid + [cfg.d_out], n)
+        elif isinstance(cfg, gnn_mod.SAGEConfig):
+            fwd += 2 * _mlp_flops([cfg.d_in, h], n)            # self+neigh
+            fwd += (cfg.n_layers - 1) * 2 * _mlp_flops([h, h], n)
+            fwd += _mlp_flops([h, cfg.n_classes], n)
+        else:  # NequIP / MACE (Cartesian irreps: sizes 1, 3, 9; 3 paths each)
+            C = cfg.d_hidden
+            irrep_sz = 1 + 3 + 9
+            per_edge = (
+                _mlp_flops([cfg.n_rbf, cfg.radial_hidden, 3 * C * 3], 1.0)
+                + 2.0 * 3 * C * irrep_sz          # path products + radial weighting
+            )
+            per_node = 2.0 * C * C * irrep_sz      # channel mixes
+            layers = cfg.n_layers
+            fwd += layers * (per_edge * e2 + per_node * n)
+            if isinstance(cfg, gnn_mod.MACEConfig):
+                # correlation products + B-basis projections (orders 2, 3)
+                fwd += layers * n * (2.0 * (3 * C) * C + 2 * 2.0 * (2 * C) * C * 3
+                                     + 2 * 2.0 * (2 * C) * C * 9) * 2
+            fwd += _mlp_flops([C, C, 1], n)
+        return 3.0 * fwd if kind == "train" else fwd
+    # recsys (MIND)
+    B = dims["batch"]
+    H, d, K, iters = cfg.hist_len, cfg.embed_dim, cfg.n_interests, cfg.capsule_iters
+    fwd = 2.0 * B * H * d * d                 # bilinear S map
+    fwd += iters * (2 * 2.0 * B * K * H * d)  # routing einsums
+    if kind == "train":
+        fwd += 2.0 * B * B * d                # in-batch softmax logits
+        return 3.0 * fwd
+    C = dims.get("cands", 0)
+    fwd += 2.0 * B * K * C * d                # candidate scoring
+    return fwd

@@ -1,0 +1,199 @@
+"""Edge core times for all start times (paper §5, Def 4.3).
+
+``CT(e)_ts`` = earliest end time ``te`` such that edge ``e`` is in the k-core
+of ``[ts, te]``; ``INF`` (= ``t_max + 1``) when no such ``te`` exists (in
+particular whenever ``t(e) < ts``).
+
+Instead of the sequential decremental maintenance of Yu et al. [33], we use a
+data-parallel *least-fixpoint* formulation (our TPU-facing adaptation, see
+DESIGN.md §3):
+
+    c_v = k-th smallest over distinct neighbours u of  max(t_uv, c_u)
+          (t_uv = earliest timestamp >= ts among parallel (u,v) edges),
+    c_v = INF when v has < k distinct neighbours in [ts, t_max].
+
+Iterating this monotone operator from the lower bound ``c0_v`` = k-th
+smallest ``t_uv`` converges to the least fixpoint, which equals the true
+vertex core times: for any fixpoint c* and any te, S = {v : c*_v <= te}
+induces a subgraph of G_[ts,te] with min degree >= k, so S is inside the true
+k-core (hence true <= c*); Kleene iteration from below yields the least
+fixpoint (hence <= true). Edge core times follow as
+``CT(e)_ts = max(t_e, c_u, c_v)`` (§5: "the larger one among the core times
+of its terminal vertices", plus window membership t_e >= ts).
+
+Start times are processed ascending with warm starts: c_{ts} is a valid lower
+bound for c_{ts+1} because shrinking the window only raises core times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .temporal_graph import TemporalGraph
+
+
+def _simple_projection(g: TemporalGraph, ts: int):
+    """Doubled (directed) simple-graph arrays for window [ts, t_max]:
+    per (v, u) distinct pair the earliest timestamp >= ts."""
+    keep = g.t >= ts
+    s, d, t = g.src[keep], g.dst[keep], g.t[keep]
+    src_d = np.concatenate([s, d]).astype(np.int64)
+    dst_d = np.concatenate([d, s]).astype(np.int64)
+    t_d = np.concatenate([t, t]).astype(np.int64)
+    # group by (src, dst), keep min t
+    key = src_d * g.n + dst_d
+    order = np.lexsort((t_d, key))
+    key, t_d = key[order], t_d[order]
+    first = np.ones(key.shape[0], bool)
+    first[1:] = key[1:] != key[:-1]
+    key, t_d = key[first], t_d[first]
+    return (key // g.n).astype(np.int64), (key % g.n).astype(np.int64), t_d
+
+
+def vertex_core_times(g: TemporalGraph, k: int, ts: int,
+                      warm: np.ndarray | None = None) -> np.ndarray:
+    """int64[n] vertex core times for start time ts (INF = t_max + 1)."""
+    INF = g.t_max + 1
+    src_d, dst_d, t_d = _simple_projection(g, ts)
+    n = g.n
+    deg = np.bincount(src_d, minlength=n)
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum(deg, out=offsets[1:])
+    has_k = deg >= k
+    sel = offsets[:-1][has_k] + (k - 1)  # index of k-th smallest within segment
+
+    c = np.full(n, INF, np.int64)
+    if warm is not None:
+        c = np.maximum(warm, np.where(has_k, 0, INF))
+        c[~has_k] = INF
+    else:
+        # lower bound: k-th smallest edge timestamp per vertex
+        order = np.lexsort((t_d, src_d))
+        c[has_k] = t_d[order[sel]]
+    while True:
+        w = np.maximum(t_d, c[dst_d])
+        order = np.lexsort((w, src_d))
+        c_new = np.full(n, INF, np.int64)
+        c_new[has_k] = w[order[sel]]
+        c_new = np.minimum(c_new, INF)
+        if np.array_equal(c_new, c):
+            return c
+        c = c_new
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreTimeTable:
+    """Compressed core times for all start times (paper Table 1 layout).
+
+    Version records, sorted by (edge_id, ts_from): edge ``edge_id`` has core
+    time ``ct`` for every start time in ``[ts_from, ts_to]`` (inclusive);
+    ``ts_to`` is the paper's ``lst``. Only finite-CT versions are stored.
+    """
+
+    n: int
+    m: int
+    t_max: int
+    edge_id: np.ndarray   # int64[R]
+    ts_from: np.ndarray   # int64[R]
+    ts_to: np.ndarray     # int64[R]  (lst)
+    ct: np.ndarray        # int64[R]
+    vertex_ct: np.ndarray  # int64[t_max + 1, n]; row ts = vertex core times
+
+    @property
+    def INF(self) -> int:
+        return self.t_max + 1
+
+    @property
+    def num_versions(self) -> int:
+        return int(self.edge_id.shape[0])
+
+    def nbytes(self) -> int:
+        """Index-size accounting for the compressed core-time table alone
+        (4 int32 words per version record)."""
+        return self.num_versions * 16
+
+    def ct_at(self, edge: int, ts: int) -> int:
+        """CT(edge)_ts by scanning this edge's versions (test helper)."""
+        sel = (self.edge_id == edge) & (self.ts_from <= ts) & (ts <= self.ts_to)
+        idx = np.nonzero(sel)[0]
+        return int(self.ct[idx[0]]) if idx.size else self.INF
+
+
+def edge_core_times(g: TemporalGraph, k: int) -> CoreTimeTable:
+    """Compute CT(e)_ts for every edge and start time, delta-compressed."""
+    t_max = g.t_max
+    INF = t_max + 1
+    m = g.m
+    su, sv, st = g.src.astype(np.int64), g.dst.astype(np.int64), g.t.astype(np.int64)
+
+    cur = np.full(m, -1, np.int64)          # current CT per edge (-1 = unseen)
+    open_from = np.zeros(m, np.int64)       # ts at which `cur` became valid
+    recs_e, recs_a, recs_b, recs_c = [], [], [], []
+    vct = np.full((t_max + 2, g.n), INF, np.int64)
+
+    warm = None
+    for ts in range(1, t_max + 1):
+        c = vertex_core_times(g, k, ts, warm=warm)
+        warm = c
+        vct[ts] = c
+        ct_ts = np.maximum(st, np.maximum(c[su], c[sv]))
+        ct_ts = np.where(st >= ts, ct_ts, INF)
+        ct_ts = np.minimum(ct_ts, INF)
+        changed = ct_ts != cur
+        if changed.any():
+            idx = np.nonzero(changed)[0]
+            closing = idx[cur[idx] >= 0]
+            # close versions whose CT was finite
+            fin = closing[cur[closing] < INF]
+            if fin.size:
+                recs_e.append(fin)
+                recs_a.append(open_from[fin])
+                recs_b.append(np.full(fin.size, ts - 1, np.int64))
+                recs_c.append(cur[fin])
+            cur[idx] = ct_ts[idx]
+            open_from[idx] = ts
+    # close the tail versions
+    tail = np.nonzero((cur >= 0) & (cur < INF))[0]
+    if tail.size:
+        recs_e.append(tail)
+        recs_a.append(open_from[tail])
+        recs_b.append(np.full(tail.size, t_max, np.int64))
+        recs_c.append(cur[tail])
+
+    if recs_e:
+        edge_id = np.concatenate(recs_e)
+        ts_from = np.concatenate(recs_a)
+        ts_to = np.concatenate(recs_b)
+        ct = np.concatenate(recs_c)
+        order = np.lexsort((ts_from, edge_id))
+        edge_id, ts_from, ts_to, ct = edge_id[order], ts_from[order], ts_to[order], ct[order]
+    else:
+        edge_id = ts_from = ts_to = ct = np.zeros(0, np.int64)
+    return CoreTimeTable(g.n, m, t_max, edge_id, ts_from, ts_to, ct, vct[: t_max + 1])
+
+
+# ----------------------------------------------------------------------
+# Brute-force oracle (tests only): CT by scanning te for each (ts, e).
+# ----------------------------------------------------------------------
+
+def edge_core_time_naive(g: TemporalGraph, k: int, ts: int) -> np.ndarray:
+    """int64[m] CT(e)_ts by recomputing the k-core for every te."""
+    from .kcore import kcore_edge_mask
+
+    INF = g.t_max + 1
+    out = np.full(g.m, INF, np.int64)
+    for te in range(ts, g.t_max + 1):
+        s, d, ids = g.project(ts, te)
+        if ids.size == 0:
+            continue
+        # distinct-neighbour degrees: collapse parallel edges for peeling
+        key = np.minimum(s, d).astype(np.int64) * g.n + np.maximum(s, d)
+        uniq, inv = np.unique(key, return_inverse=True)
+        us, ud = (uniq // g.n).astype(np.int64), (uniq % g.n).astype(np.int64)
+        alive_simple = kcore_edge_mask(us, ud, g.n, k)
+        alive = alive_simple[inv]
+        newly = ids[alive]
+        out[newly] = np.minimum(out[newly], te)
+    return out

@@ -1,0 +1,141 @@
+"""CT-MSF (paper Def 4.6): minimum spanning forest under core-time weights.
+
+Two constructions:
+
+* :func:`kruskal_msf` — host oracle. Union-find over edges in ascending rank
+  ``(ct, edge_id)``; the rank total order makes the MSF unique, which is what
+  lets every structure in this repo (ECB forest, CTMSF baseline, Borůvka)
+  agree edge-for-edge.
+
+* :func:`boruvka_msf` — the TPU-facing adaptation (DESIGN.md §3). Kruskal is
+  pointer-sequential; Borůvka is O(log n) data-parallel rounds of
+  per-component ``segment_min`` + pointer-jumping hook/compress, all jnp.
+  With unique weights Borůvka selects exactly the Kruskal forest, so the two
+  are tested for array equality.
+
+Weights are packed as ``ct * (m+1) + edge_id`` in int64 so that the paper's
+tie-break on edge id is preserved inside a single scalar key.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# Host oracle
+# ----------------------------------------------------------------------
+
+def kruskal_msf(u: np.ndarray, v: np.ndarray, ct: np.ndarray, n: int) -> np.ndarray:
+    """bool[m] mask of MSF edges; rank = (ct, index) ascending."""
+    m = u.shape[0]
+    order = np.lexsort((np.arange(m), ct))
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    keep = np.zeros(m, bool)
+    for i in order:
+        ra, rb = find(int(u[i])), find(int(v[i]))
+        if ra != rb:
+            parent[ra] = rb
+            keep[i] = True
+    return keep
+
+
+# ----------------------------------------------------------------------
+# Borůvka in jnp (device path)
+# ----------------------------------------------------------------------
+
+def _pack_weight(ct: jnp.ndarray, m: int) -> jnp.ndarray:
+    # int32 packing (JAX x64 is off by default): requires (max_ct+1)*(m+1)
+    # < 2**31, asserted by the host wrapper; ample for every bench workload.
+    eid = jnp.arange(ct.shape[0], dtype=jnp.int32)
+    return ct.astype(jnp.int32) * jnp.int32(m + 1) + eid
+
+
+def boruvka_msf(u: jnp.ndarray, v: jnp.ndarray, ct: jnp.ndarray, n: int) -> jnp.ndarray:
+    """bool[m] MSF mask, pure jnp (jit-able; static n, m).
+
+    Each round: every component picks its minimum-weight outgoing edge
+    (segment_min over both endpoints' component labels), the picked edges are
+    committed to the forest, components hook along them, and labels are
+    compressed by pointer jumping. Unique weights guarantee no cycles among
+    picks except mutual pairs, which the standard (min-endpoint wins) rule
+    breaks.
+    """
+    m = int(u.shape[0])
+    if m == 0:
+        return jnp.zeros((0,), bool)
+    w = _pack_weight(ct, m)
+    INF = jnp.int32(np.iinfo(np.int32).max)
+
+    def round_body(state):
+        label, in_msf, _changed = state
+        cu, cv = label[u], label[v]
+        cross = cu != cv
+        ew = jnp.where(cross, w, INF)
+        # per-component minimum outgoing weight (weights are unique per edge)
+        best_u = jax.ops.segment_min(ew, cu, num_segments=n)
+        best_v = jax.ops.segment_min(ew, cv, num_segments=n)
+        best = jnp.minimum(best_u, best_v)              # [n] per-component min weight
+        has = best < INF
+        # an edge joins the forest if it is the best of either endpoint's component
+        is_best = cross & ((ew == best[cu]) | (ew == best[cv]))
+        in_msf = in_msf | is_best
+        # hook: component -> the other endpoint's component along its best edge
+        partner = jnp.full((n,), -1, jnp.int32)
+        bu = jnp.where(ew == best[cu], cv, -1)
+        bv = jnp.where(ew == best[cv], cu, -1)
+        partner = partner.at[cu].max(bu)
+        partner = partner.at[cv].max(bv)
+        partner = jnp.where(partner >= 0, partner, jnp.arange(n, dtype=jnp.int32))
+        # mutual-pair tie break: if partner[partner[c]] == c, smaller id wins as root
+        par = jnp.where(has, partner, jnp.arange(n, dtype=jnp.int32))
+        mutual = par[par] == jnp.arange(n, dtype=jnp.int32)
+        par = jnp.where(mutual & (jnp.arange(n, dtype=jnp.int32) < par), jnp.arange(n, dtype=jnp.int32), par)
+        # pointer jumping until converged (log n doublings suffice)
+        def jump(_, p):
+            return p[p]
+        par = jax.lax.fori_loop(0, int(np.ceil(np.log2(max(n, 2)))) + 1, jump, par)
+        new_label = par[label]
+        changed = jnp.any(new_label != label)
+        return new_label, in_msf, changed
+
+    def cond(state):
+        return state[2]
+
+    label0 = jnp.arange(n, dtype=jnp.int32)
+    in0 = jnp.zeros((m,), bool)
+    label, in_msf, _ = jax.lax.while_loop(cond, round_body, (label0, in0, jnp.array(True)))
+    return in_msf
+
+
+def boruvka_msf_np(u: np.ndarray, v: np.ndarray, ct: np.ndarray, n: int) -> np.ndarray:
+    """Convenience host wrapper (casts + device round-trip)."""
+    if u.shape[0] == 0:
+        return np.zeros(0, bool)
+    assert (int(ct.max()) + 1) * (u.shape[0] + 1) < 2**31, "int32 weight overflow"
+    fn = jax.jit(boruvka_msf, static_argnums=(3,))
+    return np.asarray(fn(jnp.asarray(u), jnp.asarray(v), jnp.asarray(ct), int(n)))
+
+
+def ct_msf_at(g, tab, ts: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(u, v, ct, msf_mask) of the CT-MSF for start time ``ts`` (host oracle).
+
+    Versions active at ts with finite core times are the MSF candidate edges.
+    """
+    from .ecb_forest import active_versions
+
+    e_ids, cts = active_versions(tab, ts)
+    u = g.src[e_ids].astype(np.int64)
+    v = g.dst[e_ids].astype(np.int64)
+    keep = kruskal_msf(u, v, cts.astype(np.int64), g.n)
+    return u, v, cts.astype(np.int64), keep

@@ -1,0 +1,320 @@
+"""ECB-Forest (paper §4.1, Def 4.9) and its incremental maintenance (§5).
+
+Forest nodes are *versions*: (graph edge, core time) pairs — the paper treats
+an edge whose core time changes as a new parallel edge (Table 2: e10/e11).
+Rank is the paper's total order: ``(CT, edge_id)`` ascending (edge ids are
+assigned in ``(t, u, v)`` order by :class:`TemporalGraph`, matching the
+paper's tie-break and its Table 2 numbering).
+
+Two constructions are provided:
+
+* :func:`build_forest_at` — from-scratch per start time, directly from
+  Def 4.9: Kruskal over ranks, then a union-find sweep in ascending rank
+  where each component tracks its maximum-rank node; a new node's left/right
+  children are the component maxima of its endpoints. Used as the reference
+  (uniqueness of the ECB forest follows from the total order) and by tests.
+
+* :class:`IncrementalBuilder` — the paper's Algorithm 2/3. For each new node
+  we locate ``l, r, eu, ev`` (findInsertion: incidence lookup + parent-chain
+  climb, O(h)) and then run the WE-operator cascade. We implement the cascade
+  as an explicit *sorted zipper merge* of the two ancestor chains: each loop
+  iteration re-hangs the lowest-ranked pending attachment (one WE
+  application); when the chains meet, the meeting node is the LCA of
+  Lemma 5.7 — the expired edge — and is deleted, its parent adopting the
+  merged chain. Hand-traced against the paper's Table 2 / Figure 3 example
+  (ts = 4, 3, 2): reproduces every entry including the e11 expiry, the e10
+  skip, and the e12 LCA deletion; also tested against
+  :func:`build_forest_at` on random graphs for every start time.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+from .core_time import CoreTimeTable
+
+NONE = -1
+
+
+# ----------------------------------------------------------------------
+# From-scratch reference construction (Def 4.9)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ForestSnapshot:
+    """ECB forest for one start time. Arrays indexed by *version id* into the
+    version table of the CoreTimeTable ordering used to build it."""
+
+    version_key: dict  # (edge_id, ct) -> local node index
+    u: np.ndarray
+    v: np.ndarray
+    ct: np.ndarray
+    edge_id: np.ndarray
+    left: np.ndarray
+    right: np.ndarray
+    parent: np.ndarray
+    in_forest: np.ndarray  # bool; False = version active at ts but not in MSF
+
+
+def active_versions(tab: CoreTimeTable, ts: int):
+    """(edge_id, ct) of versions valid at start time ts, rank-sorted."""
+    sel = (tab.ts_from <= ts) & (ts <= tab.ts_to)
+    e, c = tab.edge_id[sel], tab.ct[sel]
+    order = np.lexsort((e, c))
+    return e[order], c[order]
+
+
+def build_forest_at(g, tab: CoreTimeTable, ts: int) -> ForestSnapshot:
+    e_ids, cts = active_versions(tab, ts)
+    nn = e_ids.shape[0]
+    u = g.src[e_ids].astype(np.int64)
+    v = g.dst[e_ids].astype(np.int64)
+    left = np.full(nn, NONE, np.int64)
+    right = np.full(nn, NONE, np.int64)
+    parent = np.full(nn, NONE, np.int64)
+    in_forest = np.zeros(nn, bool)
+
+    # union-find over graph vertices; each root remembers the max-rank node
+    uf = {}
+    comp_max = {}
+
+    def find(x):
+        root = x
+        while uf.get(root, root) != root:
+            root = uf[root]
+        while uf.get(x, x) != x:
+            uf[x], x = root, uf[x]
+        return root
+
+    for i in range(nn):
+        a, b = int(u[i]), int(v[i])
+        ra, rb = find(a), find(b)
+        if ra == rb:
+            continue  # not in MSF (cycle)
+        in_forest[i] = True
+        la = comp_max.get(ra, NONE)
+        lb = comp_max.get(rb, NONE)
+        left[i], right[i] = la, lb
+        if la != NONE:
+            parent[la] = i
+        if lb != NONE:
+            parent[lb] = i
+        uf[ra] = rb
+        comp_max[rb] = i
+        comp_max.pop(ra, None)
+
+    key = {(int(e_ids[i]), int(cts[i])): i for i in range(nn)}
+    return ForestSnapshot(key, u, v, cts.astype(np.int64), e_ids.astype(np.int64),
+                          left, right, parent, in_forest)
+
+
+# ----------------------------------------------------------------------
+# Incremental builder (Algorithms 2 and 3)
+# ----------------------------------------------------------------------
+
+class IncrementalBuilder:
+    """Maintains the ECB forest while the start time descends, recording
+    delta-compressed PECB entries (paper §4.1) plus per-vertex entry-point
+    versions for Algorithm 1 line 3."""
+
+    def __init__(self, g, tab: CoreTimeTable):
+        self.g = g
+        self.tab = tab
+        # node store (parallel lists, grown by insert)
+        self.n_edge: list[int] = []
+        self.n_ct: list[int] = []
+        self.n_u: list[int] = []
+        self.n_v: list[int] = []
+        self.n_child: list[list[int]] = []   # [slot0, slot1] aligned to (u, v)
+        self.n_parent: list[int] = []
+        self.n_in: list[bool] = []
+        # per-vertex sorted incidence: list of (ct, edge_id, node_id)
+        self.inc: list[list[tuple]] = [[] for _ in range(g.n)]
+        # recorded entries: per node list of (ts, l, r, p) in build (desc-ts) order
+        self.entries: list[list[tuple]] = []
+        self.ventries: list[list[tuple]] = [[] for _ in range(g.n)]
+        # forest-membership lifetime per node: [live_from, live_to] inclusive.
+        # live_to = the start time whose processing inserted the node;
+        # live_from = (deletion start time + 1), or 1 if never deleted.
+        # The device query plane (batch_query.py) needs these to mask the
+        # stale links of dead nodes; the host DFS never reaches them.
+        self.n_live_to: list[int] = []
+        self.n_live_from: list[int] = []
+        self._cur_ts: int = 0
+        self._dirty_nodes: set[int] = set()
+        self._dirty_verts: set[int] = set()
+
+    # -- helpers --------------------------------------------------------
+    def rank(self, x: int) -> tuple:
+        return (self.n_ct[x], self.n_edge[x])
+
+    def _new_node(self, edge_id: int, ct: int) -> int:
+        x = len(self.n_edge)
+        self.n_edge.append(edge_id)
+        self.n_ct.append(ct)
+        self.n_u.append(int(self.g.src[edge_id]))
+        self.n_v.append(int(self.g.dst[edge_id]))
+        self.n_child.append([NONE, NONE])
+        self.n_parent.append(NONE)
+        self.n_in.append(False)
+        self.entries.append([])
+        self.n_live_to.append(self._cur_ts)
+        self.n_live_from.append(1)
+        return x
+
+    def _slot_of(self, node: int, child: int) -> int:
+        c = self.n_child[node]
+        if c[0] == child:
+            return 0
+        assert c[1] == child, (node, child, c)
+        return 1
+
+    def _slot_for_vertex(self, node: int, vert: int) -> int:
+        return 0 if self.n_u[node] == vert else 1
+
+    def _inc_add(self, vert: int, node: int):
+        bisect.insort(self.inc[vert], (self.n_ct[node], self.n_edge[node], node))
+        self._dirty_verts.add(vert)
+
+    def _inc_remove(self, vert: int, node: int):
+        key = (self.n_ct[node], self.n_edge[node], node)
+        i = bisect.bisect_left(self.inc[vert], key)
+        assert self.inc[vert][i] == key
+        self.inc[vert].pop(i)
+        self._dirty_verts.add(vert)
+
+    def _find_side(self, vert: int, rk: tuple):
+        """findInsertion for one endpoint: returns (child, attach, via_slot).
+
+        child  = component maximum below ``rk`` on this side (Def 4.9 child),
+        attach = its old parent / lowest incident node above ``rk``,
+        via_slot = slot index in ``attach`` consumed by the merge.
+        """
+        lst = self.inc[vert]
+        i = bisect.bisect_left(lst, (rk[0], rk[1], -(10 ** 18)))
+        child = lst[i - 1][2] if i > 0 else NONE
+        attach = lst[i][2] if i < len(lst) else NONE
+        if child != NONE:
+            # climb to the component maximum below rk (Alg 2 lines 5-9)
+            while self.n_parent[child] != NONE and self.rank(self.n_parent[child]) < rk:
+                child = self.n_parent[child]
+            attach = self.n_parent[child]
+            via = self._slot_of(attach, child) if attach != NONE else NONE
+        else:
+            via = self._slot_for_vertex(attach, vert) if attach != NONE else NONE
+            if attach != NONE:
+                assert self.n_child[attach][via] == NONE
+        return child, attach, via
+
+    # -- core insert (Alg 2 + Alg 3 Merge/WE cascade as a zipper) --------
+    def insert(self, edge_id: int, ct: int) -> int | None:
+        """Insert the version (edge_id, ct); returns the expired node or None.
+        Returns None without side effects when the version joins no MSF."""
+        g = self.g
+        uu, vv = int(g.src[edge_id]), int(g.dst[edge_id])
+        rk = (ct, edge_id)
+        l, eu, via_u = self._find_side(uu, rk)
+        r, ev, via_v = self._find_side(vv, rk)
+        if l != NONE and l == r:
+            # u, v already connected below rk: the new edge is the
+            # highest-ranked edge of the induced cycle -> not in the MSF.
+            return None
+
+        x = self._new_node(edge_id, ct)
+        self.n_in[x] = True
+        self.n_child[x][0] = l
+        self.n_child[x][1] = r
+        if l != NONE:
+            self.n_parent[l] = x
+            self._dirty_nodes.add(l)
+        if r != NONE:
+            self.n_parent[r] = x
+            self._dirty_nodes.add(r)
+        self._inc_add(uu, x)
+        self._inc_add(vv, x)
+        self._dirty_nodes.add(x)
+
+        # zipper merge of the two ancestor chains (WE-operator cascade)
+        via = {}
+        if eu != NONE:
+            via[eu] = via_u
+        if ev != NONE:
+            via[ev] = via_v
+        cur, a, b = x, eu, ev
+        expired = None
+        while True:
+            if a == NONE and b == NONE:
+                self.n_parent[cur] = NONE
+                break
+            if a == NONE or b == NONE:
+                t = a if a != NONE else b
+                self.n_parent[cur] = t
+                self.n_child[t][via[t]] = cur
+                self._dirty_nodes.add(t)
+                break
+            if a == b:
+                # Lemma 5.7: the meeting node is the cycle's LCA -> expired
+                expired = a
+                p = self.n_parent[a]
+                self.n_parent[cur] = p
+                if p != NONE:
+                    self.n_child[p][self._slot_of(p, a)] = cur
+                    self._dirty_nodes.add(p)
+                self._delete_node(a)
+                break
+            lo, hi = (a, b) if self.rank(a) < self.rank(b) else (b, a)
+            nxt = self.n_parent[lo]
+            self.n_parent[cur] = lo
+            self.n_child[lo][via[lo]] = cur
+            self._dirty_nodes.add(lo)
+            if nxt != NONE:
+                via[nxt] = self._slot_of(nxt, lo)
+            cur, a, b = lo, nxt, hi
+        return expired
+
+    def _delete_node(self, x: int):
+        self.n_in[x] = False
+        self.n_live_from[x] = self._cur_ts + 1
+        self._inc_remove(self.n_u[x], x)
+        self._inc_remove(self.n_v[x], x)
+        self._dirty_nodes.discard(x)
+
+    # -- per-ts entry flush ----------------------------------------------
+    def flush(self, ts: int):
+        """Record delta entries for everything that changed at this start
+        time (paper: an item is stored only if the neighbourhood differs
+        from the previous start time)."""
+        for x in self._dirty_nodes:
+            if not self.n_in[x]:
+                continue
+            val = (self.n_child[x][0], self.n_child[x][1], self.n_parent[x])
+            ent = self.entries[x]
+            if not ent or (ent[-1][1], ent[-1][2], ent[-1][3]) != val:
+                ent.append((ts, *val))
+        for vert in self._dirty_verts:
+            lst = self.inc[vert]
+            node = lst[0][2] if lst else NONE
+            ent = self.ventries[vert]
+            if not ent or ent[-1][1] != node:
+                ent.append((ts, node))
+        self._dirty_nodes.clear()
+        self._dirty_verts.clear()
+
+    # -- full build -------------------------------------------------------
+    def run(self):
+        """Process all version records in descending start time (Alg 3)."""
+        tab = self.tab
+        order = np.lexsort((tab.edge_id, tab.ct, -tab.ts_to))
+        i, R = 0, order.shape[0]
+        for ts in range(tab.t_max, 0, -1):
+            self._cur_ts = ts
+            while i < R and int(tab.ts_to[order[i]]) == ts:
+                ridx = order[i]
+                self.insert(int(tab.edge_id[ridx]), int(tab.ct[ridx]))
+                i += 1
+            self.flush(ts)
+        assert i == R, (i, R)
+        return self

@@ -1,0 +1,144 @@
+"""PECB-Index (paper §4.1 Table 2, §4.2 Algorithm 1).
+
+The incremental builder's per-node entry lists are packed into flat CSR
+arrays so that (a) host queries are cache-friendly, (b) the same arrays ship
+unchanged to the device for the batched query engine (``batch_query.py``),
+and (c) index size accounting is exact (``nbytes``).
+
+Entry resolution for a node at start time ``ts`` is the paper's binary
+search: the entry with the smallest recorded start time >= ts (entries are
+recorded while ts descends, only on change). Nodes/vertices whose earliest
+recorded entry is below ``ts`` are not in the forest at ``ts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .core_time import CoreTimeTable, edge_core_times
+from .ecb_forest import NONE, IncrementalBuilder
+from .temporal_graph import TemporalGraph
+
+
+@dataclasses.dataclass
+class PECBIndex:
+    n: int
+    m: int
+    t_max: int
+    k: int
+    # node (= edge version) table
+    node_u: np.ndarray        # int32[N]
+    node_v: np.ndarray        # int32[N]
+    node_ct: np.ndarray       # int32[N]
+    node_edge: np.ndarray     # int32[N]
+    node_live_from: np.ndarray  # int32[N]  (first ts with node in forest)
+    node_live_to: np.ndarray    # int32[N]  (last ts with node in forest)
+    # node entries, CSR, per-node ascending ts
+    row_ptr: np.ndarray       # int32[N+1]
+    ent_ts: np.ndarray        # int32[E]
+    ent_left: np.ndarray      # int32[E]
+    ent_right: np.ndarray     # int32[E]
+    ent_parent: np.ndarray    # int32[E]
+    # per-vertex entry points, CSR, per-vertex ascending ts
+    vrow_ptr: np.ndarray      # int32[n+1]
+    vent_ts: np.ndarray       # int32[VE]
+    vent_node: np.ndarray     # int32[VE]
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_u.shape[0])
+
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes
+            for a in (
+                self.node_u, self.node_v, self.node_ct, self.node_edge,
+                self.node_live_from, self.node_live_to,
+                self.row_ptr, self.ent_ts, self.ent_left, self.ent_right,
+                self.ent_parent, self.vrow_ptr, self.vent_ts, self.vent_node,
+            )
+        )
+
+    # -- entry resolution (the paper's per-node binary search) ----------
+    def resolve(self, node: int, ts: int):
+        lo, hi = self.row_ptr[node], self.row_ptr[node + 1]
+        i = lo + np.searchsorted(self.ent_ts[lo:hi], ts, side="left")
+        if i == hi:
+            return None  # version not in the forest at this start time
+        return int(self.ent_left[i]), int(self.ent_right[i]), int(self.ent_parent[i])
+
+    def entry_node(self, vert: int, ts: int) -> int:
+        lo, hi = self.vrow_ptr[vert], self.vrow_ptr[vert + 1]
+        i = lo + np.searchsorted(self.vent_ts[lo:hi], ts, side="left")
+        if i == hi:
+            return NONE
+        return int(self.vent_node[i])
+
+    # -- Algorithm 1 -----------------------------------------------------
+    def query(self, u: int, ts: int, te: int) -> set[int]:
+        """All vertices of the temporal k-core component of u in [ts, te]."""
+        e0 = self.entry_node(u, ts)
+        if e0 == NONE or self.node_ct[e0] > te:
+            return set()
+        result: set[int] = set()
+        seen: set[int] = set()
+        stack = [e0]
+        while stack:
+            e = stack.pop()
+            if e in seen:
+                continue
+            seen.add(e)
+            result.add(int(self.node_u[e]))
+            result.add(int(self.node_v[e]))
+            links = self.resolve(e, ts)
+            assert links is not None, "reached a node outside the ts-forest"
+            for nb in links:
+                if nb != NONE and nb not in seen and self.node_ct[nb] <= te:
+                    stack.append(nb)
+        return result
+
+
+def pack_index(g: TemporalGraph, k: int, b: IncrementalBuilder) -> PECBIndex:
+    N = len(b.n_edge)
+    node_u = np.asarray(b.n_u, np.int32) if N else np.zeros(0, np.int32)
+    node_v = np.asarray(b.n_v, np.int32) if N else np.zeros(0, np.int32)
+    node_ct = np.asarray(b.n_ct, np.int32) if N else np.zeros(0, np.int32)
+    node_edge = np.asarray(b.n_edge, np.int32) if N else np.zeros(0, np.int32)
+    live_from = np.asarray(b.n_live_from, np.int32) if N else np.zeros(0, np.int32)
+    live_to = np.asarray(b.n_live_to, np.int32) if N else np.zeros(0, np.int32)
+
+    row_ptr = np.zeros(N + 1, np.int32)
+    ts_l, l_l, r_l, p_l = [], [], [], []
+    for x in range(N):
+        ent = b.entries[x][::-1]  # ascending ts
+        row_ptr[x + 1] = row_ptr[x] + len(ent)
+        for (ts, l, r, p) in ent:
+            ts_l.append(ts); l_l.append(l); r_l.append(r); p_l.append(p)
+    vrow_ptr = np.zeros(g.n + 1, np.int32)
+    vts_l, vn_l = [], []
+    for vert in range(g.n):
+        ent = b.ventries[vert][::-1]
+        vrow_ptr[vert + 1] = vrow_ptr[vert] + len(ent)
+        for (ts, node) in ent:
+            vts_l.append(ts); vn_l.append(node)
+
+    return PECBIndex(
+        g.n, g.m, g.t_max, k,
+        node_u, node_v, node_ct, node_edge, live_from, live_to,
+        row_ptr,
+        np.asarray(ts_l, np.int32), np.asarray(l_l, np.int32),
+        np.asarray(r_l, np.int32), np.asarray(p_l, np.int32),
+        vrow_ptr,
+        np.asarray(vts_l, np.int32), np.asarray(vn_l, np.int32),
+    )
+
+
+def build_pecb_index(g: TemporalGraph, k: int,
+                     tab: CoreTimeTable | None = None) -> PECBIndex:
+    """End-to-end PECB construction (Alg 3): core times -> incremental
+    forest maintenance -> packed index."""
+    tab = tab if tab is not None else edge_core_times(g, k)
+    b = IncrementalBuilder(g, tab).run()
+    return pack_index(g, k, b)

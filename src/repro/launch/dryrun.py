@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402 — must precede ANY jax-touching import
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+against the production meshes, and dump roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Per cell x mesh this prints/records:
+  * compiled.memory_analysis()  (per-device bytes: proves it fits)
+  * compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+  * collective bytes parsed from the optimized HLO (per collective kind)
+  * the three roofline terms + dominant bottleneck (launch/roofline.py)
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.launch.mesh import make_production_mesh, HW
+from repro.launch import roofline
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+OPTS = ("base", "actshard", "seqshard", "moegroup", "moeshard", "weightgather",
+        "expertpad", "moea2a", "nodeshard", "nodeshard_bf16", "opt")
+# §Perf variants (see EXPERIMENTS.md §Perf for the hypothesis log):
+#   actshard  — pin the LM residual stream to P(dp, None, None)
+#   moegroup  — hierarchical local MoE dispatch (groups=32, DP-aligned)
+#   nodeshard — GNN node-state row sharding over every mesh axis
+#   opt       — all of the applicable levers together
+
+
+def _apply_opt(spec, cfg, mesh, opt: str):
+    import dataclasses as _dc
+    from jax.sharding import NamedSharding
+    from repro.models import transformer as tfm
+    from repro.models import gnn as gnn_mod
+
+    tfm.set_activation_sharding(None)
+    tfm.set_moe_sharding(None)
+    tfm.set_weight_use_sharding(None)
+    tfm.set_moe_impl(None)
+    gnn_mod.set_node_sharding(None)
+    if opt == "base":
+        return cfg
+    if spec.family.startswith("lm"):
+        if opt in ("actshard", "opt"):
+            dp = shd.dp_axes(mesh)
+            tfm.set_activation_sharding(NamedSharding(mesh, P(dp, None, None)))
+        if opt == "seqshard":
+            # Megatron sequence parallelism: the residual stream between
+            # blocks shards its SEQUENCE dim over the TP axis — norms and
+            # elementwise ops compute 1/16th each; TP boundary collectives
+            # become reduce-scatter/all-gather pairs.
+            dp = shd.dp_axes(mesh)
+            tfm.set_activation_sharding(NamedSharding(mesh, P(dp, "model", None)))
+        if opt == "moegroup" and cfg.moe is not None:
+            cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, groups=32))
+        if opt in ("expertpad", "moea2a", "opt") and cfg.moe is not None:
+            ms = mesh.shape["model"]
+            if cfg.moe.e_total % ms != 0:
+                pad = ms - (cfg.moe.n_experts % ms)
+                cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, pad_experts=pad))
+        if opt == "moea2a" and cfg.moe is not None:
+            from repro.runtime.moe_a2a import make_a2a_moe
+            tfm.set_moe_impl(make_a2a_moe(mesh, shd.dp_axes(mesh)))
+        if opt == "moeshard" and cfg.moe is not None:
+            dp = shd.dp_axes(mesh)
+            tfm.set_moe_sharding((
+                NamedSharding(mesh, P(None, dp, None)),      # (E, C, d)
+                NamedSharding(mesh, P(None, dp, "model")),   # (E, C, f)
+            ))
+        if opt == "weightgather":
+            # gathered-at-use weight shardings: the per-layer slice specs
+            # (leading L dropped) with 'data' (the FSDP axis) replaced by
+            # None — XLA then all-gathers the weight, never the activation.
+            ms = mesh.shape["model"]
+            ep = cfg.moe is not None and cfg.moe.n_experts % ms == 0
+            table = {
+                "attn.wq": P(None, "model"), "attn.wk": P(None, "model"),
+                "attn.wv": P(None, "model"), "attn.wo": P("model", None),
+                "ffn.wi": P(None, "model"), "ffn.wg": P(None, "model"),
+                "ffn.wo": P("model", None),
+                "moe.wi": P("model", None, None) if ep else P(None, None, "model"),
+                "moe.wg": P("model", None, None) if ep else P(None, None, "model"),
+                # non-EP wo stays f-TP (matches hg/hi's f-sharding: local
+                # contraction + psum over 'model' of the *C-sharded* output —
+                # 1.34 GB/layer once moeshard pins C over dp; round-3/4 lessons:
+                # d-sharded wo forced a 29.5 GB f-re-gather of hg instead).
+                "moe.wo": P("model", None, None) if ep else P(None, "model", None),
+                "moe.shared_wi": P(None, None, "model"),
+                "moe.shared_wg": P(None, None, "model"),
+                "moe.shared_wo": P(None, "model", None),
+            }
+            tfm.set_weight_use_sharding(
+                {k: NamedSharding(mesh, v) for k, v in table.items()})
+    if spec.family == "gnn" and opt in ("nodeshard", "nodeshard_bf16", "opt"):
+        gnn_mod.set_node_sharding(NamedSharding(mesh, P(shd.all_axes(mesh))))
+        if opt in ("nodeshard_bf16", "opt") and hasattr(cfg, "bf16_state"):
+            cfg = _dc.replace(cfg, bf16_state=True)
+    return cfg
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, variant: str = "base",
+               opt: str = "base"):
+    """Returns (fn, example_args, in_shardings, out_shardings, meta)."""
+    spec = C.get(arch_id)
+    dims = spec.shapes[shape_name]
+    kind = dims["kind"]
+    cfg = C.cell_model_cfg(spec, shape_name)
+    cfg = _apply_opt(spec, cfg, mesh, opt)
+    if variant == "unroll":
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, unroll=True)
+    elif variant.startswith("probe"):   # probe2 / probe4: unrolled shallow probes
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, unroll=True, n_layer=int(variant[5:]))
+    batch = C.input_specs(spec, shape_name, model_cfg=cfg)
+    b_specs = C.batch_specs(spec, shape_name, batch, mesh)
+    params = C.abstract_params(spec, cfg)
+    p_specs = C.param_specs(spec, params, mesh)
+
+    take_fn = cand_take_fn = None
+    if spec.family == "recsys":
+        dp = shd.dp_axes(mesh)
+        if kind == "retrieval":
+            take_fn = shd.make_vp_take(mesh, leading=None)
+            cand_take_fn = shd.make_vp_take(mesh, leading=dp)
+        else:
+            take_fn = shd.make_vp_take(mesh, leading=dp)
+            cand_take_fn = take_fn
+
+    if kind == "train":
+        opt = jax.eval_shape(adamw.init_state, params)
+        o_specs = {"mu": p_specs, "nu": p_specs, "step": P()}
+        fn = C.make_train_step(spec, cfg, take_fn=take_fn)
+        in_sh = (_named(p_specs, mesh), _named(o_specs, mesh), _named(b_specs, mesh))
+        out_sh = (_named(p_specs, mesh), _named(o_specs, mesh),
+                  _named(jax.tree.map(lambda _: P(), {"loss": 0, "grad_norm": 0, "lr": 0}), mesh))
+        args = (params, opt, batch)
+    else:
+        fn = C.make_serve_step(spec, shape_name, cfg,
+                               take_fn=take_fn, cand_take_fn=cand_take_fn)
+        in_sh = (_named(p_specs, mesh), _named(b_specs, mesh))
+        out_sh = None  # let SPMD choose output layouts for serving
+        args = (params, batch)
+    meta = {
+        "arch": arch_id, "shape": shape_name, "kind": kind,
+        "model_flops": C.model_flops(spec, shape_name, model_cfg=cfg),
+        "family": spec.family,
+    }
+    return fn, args, in_sh, out_sh, meta
+
+
+def _compile_cell(arch_id, shape_name, mesh, variant="base", opt="base"):
+    fn, args, in_sh, out_sh, meta = build_cell(arch_id, shape_name, mesh,
+                                               variant=variant, opt=opt)
+    t0 = time.perf_counter()
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jfn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    return compiled, meta, t_lower, t_compile
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, probes: bool = True,
+             opt: str = "base") -> dict:
+    """Compile the full config (scan-over-layers: the deployable artifact —
+    its memory_analysis is the real footprint) and, for LM archs, two
+    shallow *unrolled* probe compiles (L=2, L=4).
+
+    XLA's HloCostAnalysis tallies a while-loop body once regardless of trip
+    count, so FLOPs/bytes/collective bytes of the scan build undercount by
+    ~L x. Layers are identical, so every cost is affine in L: the probes
+    give slope = (cost(4) - cost(2)) / 2 and base = cost(2) - 2*slope, and
+    the reported totals are base + n_layer*slope — including remat
+    recompute, which the unrolled probes expose honestly.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    spec = C.get(arch_id)
+    compiled, meta, t_lower, t_compile = _compile_cell(arch_id, shape_name, mesh,
+                                                       opt=opt)
+    rep = roofline.analyze_compiled(compiled,
+                                    model_flops_global=meta["model_flops"],
+                                    n_devices=n_dev)
+    rep.update(meta)
+    if probes and spec.family.startswith("lm"):
+        L = C.cell_model_cfg(spec, shape_name).n_layer
+        probe_reps = {}
+        for pv in ("probe2", "probe4"):
+            pc, _, _, pt = _compile_cell(arch_id, shape_name, mesh, variant=pv,
+                                         opt=opt)
+            probe_reps[pv] = roofline.analyze_compiled(
+                pc, model_flops_global=meta["model_flops"], n_devices=n_dev)
+            probe_reps[pv]["compile_s"] = round(pt, 2)
+            del pc
+        def affine(key):
+            c2 = probe_reps["probe2"][key]
+            c4 = probe_reps["probe4"][key]
+            slope = (c4 - c2) / 2.0
+            return max(c2 - 2.0 * slope + L * slope, 0.0)
+        rep["scan_raw"] = {
+            "flops_per_device": rep["flops_per_device"],
+            "bytes_per_device": rep["bytes_per_device"],
+            "collective_bytes": rep["collectives"]["total"],
+        }
+        rep["flops_per_device"] = affine("flops_per_device")
+        rep["bytes_per_device"] = affine("bytes_per_device")
+        c2t, c4t = (probe_reps["probe2"]["collectives"]["total"],
+                    probe_reps["probe4"]["collectives"]["total"])
+        slope = (c4t - c2t) / 2.0
+        rep["collectives"]["total"] = max(c2t - 2 * slope + L * slope, 0.0)
+        rep["collectives"]["extrapolated"] = True
+        rep["roofline"] = roofline.roofline_terms(
+            rep["flops_per_device"], rep["bytes_per_device"],
+            rep["collectives"]["total"],
+            model_flops_global=meta["model_flops"], n_devices=n_dev)
+        rep["probes"] = {k: {"flops_per_device": v["flops_per_device"],
+                             "bytes_per_device": v["bytes_per_device"],
+                             "collective_bytes": v["collectives"]["total"],
+                             "compile_s": v["compile_s"]}
+                         for k, v in probe_reps.items()}
+    rep["mesh"] = "x".join(map(str, mesh.devices.shape)) + ":" + ",".join(mesh.axis_names)
+    rep["n_devices"] = n_dev
+    rep["lower_s"] = round(t_lower, 2)
+    rep["compile_s"] = round(t_compile, 2)
+    if verbose:
+        mem = rep.get("memory", {})
+        r = rep["roofline"]
+        print(f"[{rep['mesh']}] {arch_id} x {shape_name}: "
+              f"compile {t_compile:.1f}s | "
+              f"flops/dev {rep['flops_per_device']:.3e} | "
+              f"bytes/dev {rep['bytes_per_device']:.3e} | "
+              f"coll/dev {rep['collectives']['total']:.3e}B {rep['collectives']['counts']} | "
+              f"terms c={r['compute_s']*1e3:.2f}ms m={r['memory_s']*1e3:.2f}ms "
+              f"x={r['collective_s']*1e3:.2f}ms -> {r['dominant']} | "
+              f"useful {r['useful_flop_ratio']:.2f} | mem {mem}")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON records")
+    ap.add_argument("--opt", default="base", choices=OPTS,
+                    help="§Perf variant (see EXPERIMENTS.md)")
+    args = ap.parse_args()
+
+    cells = (list(C.all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    failures = []
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_id}__{shape_name}__{'multi' if mp else 'single'}"
+            if args.opt != "base":
+                tag += f"__{args.opt}"
+            out_path = args.out and os.path.join(args.out, tag + ".json")
+            if out_path and os.path.exists(out_path):
+                print(f"[skip cached] {tag}")
+                continue
+            try:
+                rep = run_cell(arch_id, shape_name, multi_pod=mp, opt=args.opt)
+                if out_path:
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(out_path, "w") as f:
+                        json.dump(rep, f, indent=1, default=str)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nDRY-RUN: all requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

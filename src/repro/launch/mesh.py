@@ -1,0 +1,29 @@
+"""Production mesh construction (per the multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware model used for every roofline term (EXPERIMENTS.md).
+HW = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link (~per-chip injection)
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(dirpath: str):
+    recs = []
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB" if b >= 1e9 else f"{b/1e6:.1f}MB"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | compile s | flops/dev | bytes/dev | coll B/dev (ops) | arg B/dev | temp B/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory", {})
+        counts = r["collectives"].get("counts", {})
+        cshort = "+".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in sorted(counts.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh'].split(':')[0]} "
+            f"| {r['compile_s']} | {r['flops_per_device']:.2e} "
+            f"| {r['bytes_per_device']:.2e} | {r['collectives']['total']:.2e} ({cshort}) "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh_filter="16x16"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | model TFLOPs | HLO TFLOPs | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if not r["mesh"].startswith(mesh_filter):
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| {rf['dominant'].replace('_s','')} "
+            f"| {rf['model_flops']/1e12:.1f} | {rf['hlo_flops_global']/1e12:.1f} "
+            f"| {rf['useful_flop_ratio']:.2f} | {rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs):
+    """worst roofline fraction / most collective-bound / most paper-like."""
+    singles = [r for r in recs if r["mesh"].startswith("16x16")]
+    worst = min(singles, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(singles, key=lambda r: (r["roofline"]["collective_s"]
+                                       / max(r["roofline"]["step_time_lb_s"], 1e-12)))
+    return worst, coll
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print(f"### Dry-run ({len(recs)} cells)\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n### Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+    worst, coll = pick_hillclimb(recs)
+    print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.3f})")
+    print(f"most collective-bound:   {coll['arch']} x {coll['shape']} "
+          f"({coll['roofline']['collective_s']:.3f}s of "
+          f"{coll['roofline']['step_time_lb_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

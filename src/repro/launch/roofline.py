@@ -1,0 +1,117 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+All quantities are *per device* (the post-SPMD HLO module is the per-device
+program):
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory_s     = HLO_bytes_per_device / HBM_bw
+  collective_s = collective_result_bytes_per_device / ICI link bw
+
+``collective_result_bytes`` sums the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the optimized HLO (result bytes ~= bytes received per device; the
+convention is stated in EXPERIMENTS.md). cost_analysis does not report
+collective traffic, hence the HLO text parse.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from .mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped result:  bf16[4,128]{1,0}   (layout/annotations optional)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes from optimized HLO text."""
+    out = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result = <shape or tuple> <op>(...)
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base] += _shape_bytes(shape_str)
+            counts[base] += 1
+    return {"bytes": dict(out), "counts": dict(counts),
+            "total": int(sum(out.values()))}
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, *, model_flops_global: float,
+                   n_devices: int) -> dict:
+    compute_s = flops_per_dev / HW["peak_flops_bf16"]
+    memory_s = bytes_per_dev / HW["hbm_bw"]
+    collective_s = coll_bytes_per_dev / HW["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_flops_global = flops_per_dev * n_devices
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": (model_flops_global / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        # time lower bound if terms overlap perfectly; fraction of roofline
+        "step_time_lb_s": max(terms.values()),
+        "roofline_fraction": (compute_s / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+    }
+
+
+def analyze_compiled(compiled, *, model_flops_global: float, n_devices: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[k] = getattr(ma, k, None)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collectives": coll,
+        "memory": mem,
+        "roofline": roofline_terms(flops, byts, coll["total"],
+                                   model_flops_global=model_flops_global,
+                                   n_devices=n_devices),
+    }

@@ -1,0 +1,119 @@
+"""Cartesian-irrep E(3)-equivariant building blocks (l_max = 2).
+
+TPU adaptation note (DESIGN.md §3/§6): NequIP/MACE formulate tensor products
+in the spherical-harmonic basis with Clebsch–Gordan coefficient tables —
+sparse, irregular contractions that map poorly to the MXU. We instead carry
+features as *Cartesian* irreps:
+
+    scalars  s  : (n, C)
+    vectors  V  : (n, C, 3)
+    2-tensors T : (n, C, 3, 3)   (traceless symmetric <=> l = 2)
+
+and build all couplings from dot / outer / matrix products, which are dense
+einsums (MXU-friendly) and exactly equivariant under O(3) rotations (we omit
+parity-odd cross-product paths; see DESIGN.md). This is the Cartesian
+atomic-cluster-expansion route (CACE, arXiv:2312.15460) applied to the
+NequIP/MACE layer structure. Equivariance is property-tested under random
+rotations in tests/test_models.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I3 = jnp.eye(3)
+
+
+def traceless_sym(M):
+    """Project (., 3, 3) onto traceless-symmetric (the l=2 irrep)."""
+    Ms = 0.5 * (M + jnp.swapaxes(M, -1, -2))
+    tr = jnp.trace(Ms, axis1=-2, axis2=-1)[..., None, None]
+    return Ms - tr * I3 / 3.0
+
+
+def edge_basis(rvec, eps=1e-6):
+    """Unit vector and l=2 Cartesian basis of edge vectors (E, 3).
+
+    Grad-safe at r = 0 (zero-length edges get rhat ~ 0, not NaN), which
+    matters because forces are computed as -dE/dpos through this function.
+    """
+    d2 = jnp.sum(rvec * rvec, axis=-1, keepdims=True)
+    d = jnp.sqrt(d2 + eps * eps)
+    rhat = rvec / d
+    Y2 = rhat[..., :, None] * rhat[..., None, :] - I3 / 3.0     # (E, 3, 3)
+    return d[..., 0], rhat, Y2
+
+
+def bessel_rbf(d, n_rbf: int, cutoff: float):
+    """Radial Bessel basis with smooth polynomial cutoff (NequIP eq. 8)."""
+    d = jnp.maximum(d, 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * d[..., None] / cutoff) / d[..., None]
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    p = 6  # polynomial envelope order
+    env = 1.0 - ((p + 1) * (p + 2) / 2) * x**p + p * (p + 2) * x**(p + 1) - (p * (p + 1) / 2) * x**(p + 2)
+    return basis * env[..., None]
+
+
+# -- tensor-product paths (all O(3)-equivariant, parity-even) -------------
+# Each path maps (edge-gathered sender irreps, edge basis) -> messages.
+
+def tp_to_scalar(s, V, T, rhat, Y2):
+    """Paths landing in the scalar irrep: (E, C) each."""
+    p0 = s
+    p1 = jnp.einsum("eci,ei->ec", V, rhat)
+    p2 = jnp.einsum("ecij,eij->ec", T, Y2)
+    return jnp.stack([p0, p1, p2], axis=-1)        # (E, C, 3 paths)
+
+
+def tp_to_vector(s, V, T, rhat, Y2):
+    """Paths landing in the vector irrep: (E, C, 3) each."""
+    p0 = s[..., None] * rhat[:, None, :]
+    p1 = V
+    p2 = jnp.einsum("ecij,ej->eci", T, rhat)
+    return jnp.stack([p0, p1, p2], axis=-1)        # (E, C, 3, 3 paths)
+
+
+def tp_to_tensor(s, V, T, rhat, Y2):
+    """Paths landing in the l=2 irrep: (E, C, 3, 3) each."""
+    p0 = s[..., None, None] * Y2[:, None]
+    p1 = traceless_sym(V[..., :, None] * rhat[:, None, None, :])
+    p2 = T
+    return jnp.stack([p0, p1, p2], axis=-1)        # (E, C, 3, 3, 3 paths)
+
+
+N_PATHS = 3  # per output irrep
+
+
+def gated_nonlin(s, V, T, gates):
+    """Equivariant nonlinearity: silu on scalars, sigmoid-gated V and T.
+
+    gates: (n, 2C) extra scalar channels (one gate per V and T channel).
+    """
+    C = s.shape[-1]
+    gV = jax.nn.sigmoid(gates[..., :C])
+    gT = jax.nn.sigmoid(gates[..., C:])
+    return jax.nn.silu(s), V * gV[..., None], T * gT[..., None, None]
+
+
+# -- correlation products (MACE A->B basis, orders 2 and 3) ----------------
+
+def correlation_products(s, V, T):
+    """Pairwise (order-2) equivariant products of a feature set with itself.
+
+    Returns extra (scalars, vectors, tensors) channel blocks.
+    """
+    s2 = s * s
+    vv = jnp.einsum("nci,nci->nc", V, V)
+    tt = jnp.einsum("ncij,ncij->nc", T, T)
+    sV = s[..., None] * V
+    tV = jnp.einsum("ncij,ncj->nci", T, V)
+    sT = s[..., None, None] * T
+    vvT = traceless_sym(V[..., :, None] * V[..., None, :])
+    return (
+        jnp.concatenate([s2, vv, tt], axis=-1),        # (n, 3C) scalars
+        jnp.concatenate([sV, tV], axis=-2),            # (n, 2C, 3) vectors
+        jnp.concatenate([sT, vvT], axis=-3),           # (n, 2C, 3, 3) tensors
+    )

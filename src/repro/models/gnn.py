@@ -1,0 +1,374 @@
+"""GNN architecture family: MeshGraphNet, GraphSAGE, NequIP, MACE.
+
+Message passing is expressed over an explicit edge list with
+``jax.ops.segment_sum`` / ``segment_max`` scatter-reduces (JAX has no sparse
+SpMM beyond BCOO — the segment formulation IS the system here, per the
+assignment notes), so a single substrate serves all four archs and every
+input shape (full-graph, sampled-minibatch, batched molecules).
+
+Unified graph batch (dict of arrays):
+    node_feat : (n, d_feat) f32     input features (or species one-hot)
+    pos       : (n, 3)      f32     positions (geometric archs)
+    src, dst  : (E,)        int32   directed edges (doubled for undirected)
+    edge_feat : (E, d_e)    f32     (meshgraphnet)
+    seed_mask : (n,)        bool    loss restricted to seeds (minibatch)
+    labels    : (n,) int32 / targets f32
+
+All models expose ``init(cfg, key)`` and ``forward(params, cfg, batch)`` and
+a scalar ``loss(params, cfg, batch)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import equivariant as eq
+
+# Node-state sharding hook (§Perf lever, read at trace time). The baseline
+# GNN distribution replicates node state on every device (edges sharded,
+# psum-aggregated) — every node update is recomputed 512x and node-space
+# tensors dominate HLO bytes. When set, aggregated node tensors are pinned
+# to row sharding over the mesh, distributing node compute and storage; the
+# per-layer price is one all-gather of the node state for the next edge
+# gather (EXPERIMENTS.md §Perf).
+NODE_SHARDING = None
+
+
+def set_node_sharding(sharding):
+    global NODE_SHARDING
+    NODE_SHARDING = sharding
+
+
+def _constrain_nodes(x):
+    if NODE_SHARDING is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ns = NODE_SHARDING
+        spec = P(ns.spec[0], *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(ns.mesh, spec))
+    return x
+
+
+def segment_mean(vals, ids, num: int):
+    s = jax.ops.segment_sum(vals, ids, num_segments=num)
+    c = jax.ops.segment_sum(jnp.ones((vals.shape[0],), vals.dtype), ids, num_segments=num)
+    return s / jnp.maximum(c, 1.0)[(...,) + (None,) * (vals.ndim - 1)]
+
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": (jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))
+    ]
+
+
+def _mlp(params, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _layernorm(x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+# ======================================================================
+# MeshGraphNet  [arXiv:2010.03409]
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8
+    d_edge_in: int = 4
+    d_out: int = 3
+
+
+def mgn_init(cfg: MGNConfig, key):
+    h = cfg.d_hidden
+    hidden = [h] * cfg.mlp_layers
+    ks = jax.random.split(key, 3 + 2 * cfg.n_layers)
+    p = {
+        "enc_node": _mlp_init(ks[0], [cfg.d_node_in] + hidden + [h]),
+        "enc_edge": _mlp_init(ks[1], [cfg.d_edge_in] + hidden + [h]),
+        "dec": _mlp_init(ks[2], [h] + hidden + [cfg.d_out]),
+        "layers": [
+            {
+                "edge_mlp": _mlp_init(ks[3 + 2 * i], [3 * h] + hidden + [h]),
+                "node_mlp": _mlp_init(ks[4 + 2 * i], [2 * h] + hidden + [h]),
+            }
+            for i in range(cfg.n_layers)
+        ],
+    }
+    return p
+
+
+def mgn_forward(params, cfg: MGNConfig, batch):
+    n = batch["node_feat"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    mask = batch.get("edge_mask")
+    mask = mask[:, None] if mask is not None else 1.0
+    x = _layernorm(_mlp(params["enc_node"], batch["node_feat"]))
+    e = _layernorm(_mlp(params["enc_edge"], batch["edge_feat"])) * mask
+    for lyr in params["layers"]:
+        msg_in = jnp.concatenate([e, x[src], x[dst]], axis=-1)
+        e = (e + _layernorm(_mlp(lyr["edge_mlp"], msg_in))) * mask
+        agg = _constrain_nodes(jax.ops.segment_sum(e, dst, num_segments=n))
+        x = x + _layernorm(_mlp(lyr["node_mlp"], jnp.concatenate([x, agg], axis=-1)))
+    return _mlp(params["dec"], x)
+
+
+def mgn_loss(params, cfg: MGNConfig, batch):
+    out = mgn_forward(params, cfg, batch)
+    return jnp.mean((out - batch["target"]) ** 2)
+
+
+# ======================================================================
+# GraphSAGE (mean aggregator)  [arXiv:1706.02216]
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+
+
+def sage_init(cfg: SAGEConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "w_self": (jax.random.normal(k1, (dims[i], cfg.d_hidden)) / np.sqrt(dims[i])),
+            "w_neigh": (jax.random.normal(k2, (dims[i], cfg.d_hidden)) / np.sqrt(dims[i])),
+            "b": jnp.zeros((cfg.d_hidden,)),
+        })
+    head = (jax.random.normal(ks[-1], (cfg.d_hidden, cfg.n_classes)) / np.sqrt(cfg.d_hidden))
+    return {"layers": layers, "head": head}
+
+
+def sage_forward(params, cfg: SAGEConfig, batch):
+    n = batch["node_feat"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    mask = batch.get("edge_mask")
+    x = batch["node_feat"]
+    for i, lyr in enumerate(params["layers"]):
+        if mask is not None:
+            msum = jax.ops.segment_sum(x[src] * mask[:, None], dst, num_segments=n)
+            cnt = jax.ops.segment_sum(mask, dst, num_segments=n)
+            agg = msum / jnp.maximum(cnt, 1.0)[:, None]
+        else:
+            agg = segment_mean(x[src], dst, n)
+        agg = _constrain_nodes(agg)
+        x = x @ lyr["w_self"] + agg @ lyr["w_neigh"] + lyr["b"]
+        x = jax.nn.relu(x)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+    return x @ params["head"]
+
+
+def sage_loss(params, cfg: SAGEConfig, batch):
+    logits = sage_forward(params, cfg, batch)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).squeeze(-1)
+    w = batch["seed_mask"].astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(w.sum(), 1.0)
+
+
+# ======================================================================
+# NequIP (Cartesian-irrep adaptation, l_max=2)  [arXiv:2101.03164]
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32          # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_species: int = 16
+    radial_hidden: int = 64
+    bf16_state: bool = False    # §Perf: bf16 node irreps (halves gather bytes)
+
+
+def _interaction_init(key, C, n_rbf, radial_hidden, n_weight_blocks):
+    """Radial MLP emitting per-path channel weights + irrep channel mixers."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    n_out = n_weight_blocks * C * eq.N_PATHS
+    return {
+        "radial": _mlp_init(k1, [n_rbf, radial_hidden, n_out]),
+        "mix_s": (jax.random.normal(k2, (C, C)) / np.sqrt(C)),
+        "mix_v": (jax.random.normal(k3, (C, C)) / np.sqrt(C)),
+        "mix_t": (jax.random.normal(k4, (C, C)) / np.sqrt(C)),
+        "gates": _mlp_init(k5, [C, 2 * C]),
+    }
+
+
+def nequip_init(cfg: NequIPConfig, key):
+    C = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": _mlp_init(ks[0], [cfg.d_species, C]),
+        "layers": [
+            _interaction_init(ks[1 + i], C, cfg.n_rbf, cfg.radial_hidden, 3)
+            for i in range(cfg.n_layers)
+        ],
+        "readout": _mlp_init(ks[-1], [C, C, 1]),
+    }
+
+
+def _interaction(lyr, C, s, V, T, src, dst, rbf, rhat, Y2, n, mask=None):
+    """One equivariant message-passing layer (shared by NequIP and MACE)."""
+    rw = _mlp(lyr["radial"], rbf)                     # (E, 3*C*N_PATHS)
+    rw = rw.reshape(rbf.shape[0], 3, C, eq.N_PATHS)
+    if mask is not None:
+        rw = rw * mask[:, None, None, None]           # padded edges: no message
+    s_e, V_e, T_e = s[src], V[src], T[src]
+    m_s = jnp.einsum("ecp,ecp->ec", eq.tp_to_scalar(s_e, V_e, T_e, rhat, Y2), rw[:, 0])
+    m_v = jnp.einsum("ecip,ecp->eci", eq.tp_to_vector(s_e, V_e, T_e, rhat, Y2), rw[:, 1])
+    m_t = jnp.einsum("ecijp,ecp->ecij", eq.tp_to_tensor(s_e, V_e, T_e, rhat, Y2), rw[:, 2])
+    a_s = _constrain_nodes(jax.ops.segment_sum(m_s, dst, num_segments=n))
+    a_v = _constrain_nodes(jax.ops.segment_sum(m_v, dst, num_segments=n))
+    a_t = _constrain_nodes(jax.ops.segment_sum(m_t, dst, num_segments=n))
+    s2 = s + a_s @ lyr["mix_s"]
+    V2 = V + jnp.einsum("nci,cd->ndi", a_v, lyr["mix_v"])
+    T2 = T + jnp.einsum("ncij,cd->ndij", a_t, lyr["mix_t"])
+    gates = _mlp(lyr["gates"], s2)
+    return eq.gated_nonlin(s2, V2, T2, gates)
+
+
+def nequip_forward(params, cfg: NequIPConfig, batch, n_graphs: int | None = None):
+    n = batch["node_feat"].shape[0]
+    ng = n_graphs if n_graphs is not None else batch["energy_target"].shape[0]
+    C = cfg.d_hidden
+    src, dst = batch["src"], batch["dst"]
+    rvec = batch["pos"][src] - batch["pos"][dst]
+    d, rhat, Y2 = eq.edge_basis(rvec)
+    rbf = eq.bessel_rbf(d, cfg.n_rbf, cfg.cutoff)
+    s = _mlp(params["embed"], batch["node_feat"])
+    V = jnp.zeros((n, C, 3))
+    T = jnp.zeros((n, C, 3, 3))
+    for lyr in params["layers"]:
+        s, V, T = _interaction(lyr, C, s, V, T, src, dst, rbf, rhat, Y2, n,
+                               mask=batch.get("edge_mask"))
+        if cfg.bf16_state:
+            s, V, T = (x.astype(jnp.bfloat16) for x in (s, V, T))
+    atom_e = _mlp(params["readout"], s.astype(jnp.float32))[:, 0]  # (n,)
+    energy = jax.ops.segment_sum(atom_e, batch["graph_id"], num_segments=ng)
+    return energy, (s, V, T)
+
+
+def nequip_loss(params, cfg: NequIPConfig, batch):
+    def energy_fn(pos):
+        energy, _ = nequip_forward(params, cfg, {**batch, "pos": pos})
+        return jnp.sum(energy), energy
+
+    (tot, energy), neg_forces = jax.value_and_grad(energy_fn, has_aux=True)(batch["pos"])
+    e_loss = jnp.mean((energy - batch["energy_target"]) ** 2)
+    f_loss = jnp.mean((-neg_forces - batch["force_target"]) ** 2)
+    return e_loss + 10.0 * f_loss
+
+
+# ======================================================================
+# MACE (Cartesian adaptation, correlation order 3)  [arXiv:2206.07697]
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_species: int = 16
+    radial_hidden: int = 64
+    bf16_state: bool = False    # §Perf: bf16 node irreps (halves gather bytes)
+
+
+def mace_init(cfg: MACEConfig, key):
+    C = cfg.d_hidden
+    ks = jax.random.split(key, 2 * cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        base = _interaction_init(ks[1 + 2 * i], C, cfg.n_rbf, cfg.radial_hidden, 3)
+        k = ks[2 + 2 * i]
+        kb = jax.random.split(k, 6)
+        # B-basis projections back to C channels (orders 2 and 3)
+        base["prod"] = {
+            "s2": (jax.random.normal(kb[0], (3 * C, C)) / np.sqrt(3 * C)),
+            "v2": (jax.random.normal(kb[1], (2 * C, C)) / np.sqrt(2 * C)),
+            "t2": (jax.random.normal(kb[2], (2 * C, C)) / np.sqrt(2 * C)),
+            "s3": (jax.random.normal(kb[3], (3 * C, C)) / np.sqrt(3 * C)),
+            "v3": (jax.random.normal(kb[4], (2 * C, C)) / np.sqrt(2 * C)),
+            "t3": (jax.random.normal(kb[5], (2 * C, C)) / np.sqrt(2 * C)),
+        }
+        layers.append(base)
+    return {
+        "embed": _mlp_init(ks[0], [cfg.d_species, C]),
+        "layers": layers,
+        "readout": _mlp_init(ks[-1], [C, C, 1]),
+    }
+
+
+def mace_forward(params, cfg: MACEConfig, batch, n_graphs: int | None = None):
+    n = batch["node_feat"].shape[0]
+    ng = n_graphs if n_graphs is not None else batch["energy_target"].shape[0]
+    C = cfg.d_hidden
+    src, dst = batch["src"], batch["dst"]
+    rvec = batch["pos"][src] - batch["pos"][dst]
+    d, rhat, Y2 = eq.edge_basis(rvec)
+    rbf = eq.bessel_rbf(d, cfg.n_rbf, cfg.cutoff)
+    s = _mlp(params["embed"], batch["node_feat"])
+    V = jnp.zeros((n, C, 3))
+    T = jnp.zeros((n, C, 3, 3))
+    for lyr in params["layers"]:
+        s, V, T = _interaction(lyr, C, s, V, T, src, dst, rbf, rhat, Y2, n,
+                               mask=batch.get("edge_mask"))
+        # higher-order (correlation 2 and 3) products of the aggregate — the
+        # MACE A->B basis, Cartesian form
+        s2b, v2b, t2b = eq.correlation_products(s, V, T)
+        s3b, v3b, t3b = eq.correlation_products(s2b @ lyr["prod"]["s2"],
+                                                jnp.einsum("nki,kc->nci", v2b, lyr["prod"]["v2"]),
+                                                jnp.einsum("nkij,kc->ncij", t2b, lyr["prod"]["t2"]))
+        s = s + s2b @ lyr["prod"]["s2"] + s3b @ lyr["prod"]["s3"]
+        V = V + jnp.einsum("nki,kc->nci", v2b, lyr["prod"]["v2"]) \
+              + jnp.einsum("nki,kc->nci", v3b, lyr["prod"]["v3"])
+        T = T + jnp.einsum("nkij,kc->ncij", t2b, lyr["prod"]["t2"]) \
+              + jnp.einsum("nkij,kc->ncij", t3b, lyr["prod"]["t3"])
+        if cfg.bf16_state:
+            s, V, T = (x.astype(jnp.bfloat16) for x in (s, V, T))
+    atom_e = _mlp(params["readout"], s.astype(jnp.float32))[:, 0]
+    energy = jax.ops.segment_sum(atom_e, batch["graph_id"], num_segments=ng)
+    return energy, (s, V, T)
+
+
+def mace_loss(params, cfg: MACEConfig, batch):
+    def energy_fn(pos):
+        energy, _ = mace_forward(params, cfg, {**batch, "pos": pos})
+        return jnp.sum(energy), energy
+
+    (tot, energy), neg_forces = jax.value_and_grad(energy_fn, has_aux=True)(batch["pos"])
+    e_loss = jnp.mean((energy - batch["energy_target"]) ** 2)
+    f_loss = jnp.mean((-neg_forces - batch["force_target"]) ** 2)
+    return e_loss + 10.0 * f_loss

@@ -1,0 +1,498 @@
+"""Decoder-only LM family: dense and MoE, GQA + RoPE, scan-over-layers.
+
+Covers the five assigned LM architectures (dbrx-132b, qwen2-moe-a2.7b,
+glm4-9b, codeqwen1.5-7b, qwen1.5-110b). Pure JAX pytrees — no framework
+dependency. Layers are stacked on axis 0 and executed with ``lax.scan`` so
+the lowered HLO stays one-layer-sized regardless of depth (critical for the
+512-device dry-run compiles) and so a future ``pipe`` mesh axis can shard
+the scanned dimension.
+
+MoE uses sort-based token dispatch with a static capacity bound
+(MaxText-style): top-k routing -> argsort by expert -> positioned scatter
+into an (E, C, d) buffer -> batched expert GEMMs -> weighted combine. The
+dispatch is gather/scatter (≈0 FLOPs in HLO), so compiled FLOPs track
+*active* parameters — keeping the MODEL_FLOPS/HLO_FLOPs roofline ratio
+honest (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0          # shared (always-on) experts, qwen2-moe style
+    capacity_factor: float = 1.25
+    # groups > 1 = hierarchical *local* dispatch (beyond-paper §Perf lever):
+    # tokens are split into G groups aligned with the DP sharding and each
+    # group routes/sorts/scatters into its own (E, C/G, d) buffer. The
+    # scatter then partitions along the group dim under SPMD instead of
+    # replicating a (E*C, d) buffer on every device (which cost ~22 GB/layer
+    # of all-gather for qwen2-moe in the baseline dry-run). Routing results
+    # are identical; only the capacity bound becomes group-local
+    # (DeepSpeed-MoE-style local groups).
+    groups: int = 1
+    # pad_experts adds never-routed dummy experts so the expert count
+    # divides the TP axis (qwen2-moe: 60 -> 64 on a 16-way mesh), unlocking
+    # true expert parallelism instead of the expert-TP fallback. Dummy
+    # router logits are masked to -inf; their capacity slots stay empty
+    # (6.7% slot overhead for 60 -> 64).
+    pad_experts: int = 0
+
+    @property
+    def e_total(self) -> int:
+        return self.n_experts + self.pad_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # unroll=True replaces lax.scan with a python loop over stacked layers.
+    # Same math; bigger HLO. Used by the dry-run so cost_analysis counts
+    # every layer (XLA tallies a while-loop body once, regardless of trip
+    # count) and so remat recompute shows up in HLO_FLOPs.
+    unroll: bool = False
+
+    @property
+    def param_count(self) -> int:
+        """Total parameters (embedding + blocks + head), exact."""
+        d, dh = self.d_model, self.d_head
+        attn = d * dh * (self.n_head + 2 * self.n_kv) + self.n_head * dh * d
+        if self.qkv_bias:
+            attn += dh * (self.n_head + 2 * self.n_kv)
+        if self.moe is None:
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = (
+                self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+                + self.moe.n_shared * 3 * d * self.moe.d_ff_expert
+                + d * self.moe.n_experts    # router
+            )
+        block = attn + ffn + 2 * d          # two RMSNorm gains
+        return self.vocab * d * 2 + self.n_layer * block + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count
+        d = self.d_model
+        inactive = (self.moe.n_experts - self.moe.top_k) * 3 * d * self.moe.d_ff_expert
+        return self.param_count - self.n_layer * inactive
+
+
+# ----------------------------------------------------------------------
+# initialization
+# ----------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_layer_params(cfg: LMConfig, key) -> dict:
+    d, dh, hq, hk = cfg.d_model, cfg.d_head, cfg.n_head, cfg.n_kv
+    ks = jax.random.split(key, 12)
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "wq": _dense_init(ks[0], (d, hq * dh), cfg.dtype),
+        "wk": _dense_init(ks[1], (d, hk * dh), cfg.dtype),
+        "wv": _dense_init(ks[2], (d, hk * dh), cfg.dtype),
+        "wo": _dense_init(ks[3], (hq * dh, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((hk * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((hk * dh,), cfg.dtype)
+    if cfg.moe is None:
+        p["ffn"] = {
+            "wi": _dense_init(ks[4], (d, cfg.d_ff), cfg.dtype),
+            "wg": _dense_init(ks[5], (d, cfg.d_ff), cfg.dtype),
+            "wo": _dense_init(ks[6], (cfg.d_ff, d), cfg.dtype),
+        }
+    else:
+        e, f = cfg.moe.e_total, cfg.moe.d_ff_expert
+        p["moe"] = {
+            "router": _dense_init(ks[7], (d, e), jnp.float32),
+            "wi": _dense_init(ks[8], (e, d, f), cfg.dtype),
+            "wg": _dense_init(ks[9], (e, d, f), cfg.dtype),
+            "wo": _dense_init(ks[10], (e, f, d), cfg.dtype),
+        }
+        if cfg.moe.n_shared:
+            s = cfg.moe.n_shared
+            p["moe"]["shared_wi"] = _dense_init(ks[11], (s, d, f), cfg.dtype)
+            p["moe"]["shared_wg"] = _dense_init(ks[11], (s, d, f), cfg.dtype)
+            p["moe"]["shared_wo"] = _dense_init(ks[11], (s, f, d), cfg.dtype)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layer)
+    layers = [init_layer_params(cfg, k) for k in layer_keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+    return {
+        "embed": _dense_init(k_emb, (cfg.vocab, cfg.d_model), cfg.dtype, scale=0.02),
+        "head": _dense_init(k_head, (cfg.d_model, cfg.vocab), cfg.dtype),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": stacked,
+    }
+
+
+def abstract_params(cfg: LMConfig) -> dict:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ----------------------------------------------------------------------
+# building blocks
+# ----------------------------------------------------------------------
+
+# Activation-sharding hook (§Perf lever, read at trace time): when set to a
+# NamedSharding for the (B, S, d) residual stream, every block boundary is
+# pinned with with_sharding_constraint. Without it GSPMD propagates the
+# FSDP 'data' sharding of wo's output dim INTO the activations — which
+# collides with batch-over-'data' and forced ~19 GB/layer/device of f32
+# activation all-gathers in the qwen1.5-110b dry-run (EXPERIMENTS.md §Perf).
+ACT_SHARDING = None
+
+
+def set_activation_sharding(sharding):
+    global ACT_SHARDING
+    ACT_SHARDING = sharding
+
+
+def _constrain(x):
+    if ACT_SHARDING is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, ACT_SHARDING)
+    return x
+
+
+# MoE dispatch-buffer sharding hook (§Perf lever): a pair of NamedShardings
+# for the (E, C, d) dispatch buffer and the (E, C, f) expert intermediate.
+# Pinning capacity over the DP axes and f over TP makes XLA *gather the
+# (small) expert weights* instead of psum-ing the (huge) activation
+# partials — the baseline expert-TP plan all-reduced an (E, C, d) tensor
+# per expert GEMM (~38 GB/layer/device for qwen2-moe).
+MOE_SHARDING = None
+
+
+def set_moe_sharding(sharding_pair):
+    global MOE_SHARDING
+    MOE_SHARDING = sharding_pair
+
+
+def _constrain_moe(x, which: int):
+    if MOE_SHARDING is not None:
+        return jax.lax.with_sharding_constraint(x, MOE_SHARDING[which])
+    return x
+
+
+# Weight-gather hook (§Perf lever): ZeRO-3 semantics made explicit. FSDP
+# shards weights over 'data'; at *use* the weight must be all-gathered and
+# the contraction kept local — otherwise GSPMD may instead psum the (much
+# larger) activation partials over 'data' (qwen2-moe baseline: ~38 GB/layer
+# of (E, C, ·) f32 all-reduces vs ~65 MB/layer of gathered expert weights).
+# The hook maps a call-site tag to the gathered-at-use NamedSharding.
+WEIGHT_USE_SHARDING = None
+
+
+def set_weight_use_sharding(table):
+    global WEIGHT_USE_SHARDING
+    WEIGHT_USE_SHARDING = table
+
+
+def _use_w(p, key, tag):
+    w = p[key]
+    if WEIGHT_USE_SHARDING is not None and tag in WEIGHT_USE_SHARDING:
+        return jax.lax.with_sharding_constraint(w, WEIGHT_USE_SHARDING[tag])
+    return w
+
+
+def rms_norm(x, gain, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale * gain).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S) or (S,).
+
+    Angles are computed in f32 (position precision), but the rotation
+    arithmetic runs in x.dtype — keeping the (B,S,H,dh)-sized intermediates
+    bf16 halves the attention-side collective/HBM traffic the dry-run
+    attributed to f32 rope tensors (EXPERIMENTS.md §Perf cell 1).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def gqa_attention(q, k, v, *, causal: bool, kv_len_mask=None):
+    """q: (B,S,Hq,dh); k,v: (B,T,Hkv,dh). Grouped-query full attention.
+
+    KV heads are expanded to q-head count with a constant-index ``take``
+    (repeat_kv). This keeps every attention tensor sharded over the q-head
+    dim under TP: a (Hkv, G) reshape factorization defeats GSPMD when
+    Hkv < mesh model size (glm4 has Hkv=2 on a 16-way axis) and silently
+    replicated the (B,H,S,T) score tensor — 17 GB/device in the dry-run.
+    """
+    B, S, Hq, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        head_map = jnp.arange(Hq, dtype=jnp.int32) // (Hq // Hkv)
+        k = jnp.take(k, head_map, axis=2)
+        v = jnp.take(v, head_map, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    if kv_len_mask is not None:                      # decode: positions < len
+        scores = jnp.where(kv_len_mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out.reshape(B, S, Hq * dh)
+
+
+def attention_block(p, cfg: LMConfig, x, positions, *, cache=None, cache_len=None):
+    """Returns (out, new_cache). cache: dict(k=(B,T,Hkv,dh), v=...)."""
+    B, S, d = x.shape
+    q = x @ _use_w(p, "wq", "attn.wq")
+    k = x @ _use_w(p, "wk", "attn.wk")
+    v = x @ _use_w(p, "wv", "attn.wv")
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_head, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = gqa_attention(q, k, v, causal=True)
+        new_cache = None
+    else:
+        T = cache["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        valid = jnp.arange(T)[None, :] <= cache_len    # (1, T) — includes new token
+        valid = jnp.broadcast_to(valid, (B, T))
+        out = gqa_attention(q, ck, cv, causal=False, kv_len_mask=valid)
+        new_cache = {"k": ck, "v": cv}
+    # keep the residual-stream dtype stable (a f32 cache must not promote
+    # the bf16 carry: lax.scan requires a fixed carry type)
+    return (out @ _use_w(p, "wo", "attn.wo")).astype(x.dtype), new_cache
+
+
+def dense_ffn(p, x):
+    h = jax.nn.silu(x @ _use_w(p, "wg", "ffn.wg")) * (x @ _use_w(p, "wi", "ffn.wi"))
+    return h @ _use_w(p, "wo", "ffn.wo")
+
+
+def _moe_group(p, mcfg: MoEConfig, xt, capacity: int):
+    """Sort-based dispatch + expert GEMMs for one token group (Tg, d)."""
+    Tg, d = xt.shape
+    E, K, C = mcfg.e_total, mcfg.top_k, capacity
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # (Tg, E)
+    if mcfg.pad_experts:
+        pad_mask = jnp.arange(E) >= mcfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                      # (Tg, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # flatten assignments, stable-sort by expert id
+    flat_e = eidx.reshape(-1)                                 # (Tg*K,)
+    flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_t[order]
+    # position within expert = index - start of that expert's run
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+    pos = jnp.arange(Tg * K, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < C
+    dest = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)   # overflow row
+
+    # dispatch: (E*C+1, d) buffer; dropped tokens land in the dummy row
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dest].set(xt[st])
+    h = _constrain_moe(buf[: E * C].reshape(E, C, d), 0)
+
+    # expert GEMMs (batched over E -> MXU)
+    hg = _constrain_moe(jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, _use_w(p, "wg", "moe.wg"))), 1)
+    hi = _constrain_moe(jnp.einsum("ecd,edf->ecf", h, _use_w(p, "wi", "moe.wi")), 1)
+    ho = _constrain_moe(jnp.einsum("ecf,efd->ecd", hg * hi, _use_w(p, "wo", "moe.wo")), 0)
+    ho = ho.reshape(E * C, d)
+
+    # combine: route expert outputs back to tokens with gate weights
+    gflat = gate.reshape(-1)[order]                           # aligned with se/st
+    contrib = jnp.where(keep[:, None], ho[jnp.clip(dest, 0, E * C - 1)], 0.0)
+    out = jnp.zeros((Tg, d), xt.dtype).at[st].add(contrib * gflat[:, None].astype(xt.dtype))
+
+    # auxiliary load-balance loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+# Full-dispatch override hook (§Perf): when set, routes the whole routed-
+# expert path through an alternative implementation (e.g. the explicit
+# shard_map all-to-all dispatch in runtime/moe_a2a.py).
+MOE_IMPL = None
+
+
+def set_moe_impl(fn):
+    global MOE_IMPL
+    MOE_IMPL = fn
+
+
+def moe_ffn(p, cfg: LMConfig, x):
+    """Capacity-bounded MoE; grouped local dispatch when moe.groups > 1."""
+    if MOE_IMPL is not None:
+        return MOE_IMPL(p, cfg, x)
+    mcfg = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    G = mcfg.groups if T % max(mcfg.groups, 1) == 0 else 1
+    Tg = T // G
+    C = max(1, min(int(np.ceil(Tg * mcfg.top_k / mcfg.n_experts
+                               * mcfg.capacity_factor)), Tg))
+    C = int(np.ceil(C / 32)) * 32   # DP-divisible capacity: lets the (E,C,·)
+                                    # dispatch tensors shard C over the mesh
+    xt = x.reshape(T, d)
+    if G == 1:
+        out, aux = _moe_group(p, mcfg, xt, C)
+    else:
+        xg = xt.reshape(G, Tg, d)
+        out, auxes = jax.vmap(_moe_group, in_axes=(None, None, 0, None))(
+            p, mcfg, xg, C)
+        out = out.reshape(T, d)
+        aux = jnp.mean(auxes)
+
+    if mcfg.n_shared:
+        hs = jax.nn.silu(jnp.einsum("td,sdf->tsf", xt, _use_w(p, "shared_wg", "moe.shared_wg")))
+        hi_s = jnp.einsum("td,sdf->tsf", xt, _use_w(p, "shared_wi", "moe.shared_wi"))
+        out = out + jnp.einsum("tsf,sfd->td", hs * hi_s, _use_w(p, "shared_wo", "moe.shared_wo"))
+
+    return out.reshape(B, S, d), aux
+
+
+# ----------------------------------------------------------------------
+# full model
+# ----------------------------------------------------------------------
+
+def _layer_fn(cfg: LMConfig, x, lp, positions, cache=None, cache_len=None):
+    a, new_cache = attention_block(lp, cfg, rms_norm(x, lp["ln1"]), positions,
+                                   cache=cache, cache_len=cache_len)
+    x = _constrain(x + a)
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe is None:
+        f, aux = dense_ffn(lp["ffn"], h), jnp.float32(0.0)
+    else:
+        f, aux = moe_ffn(lp["moe"], cfg, h)
+    return _constrain(x + f), aux, new_cache
+
+
+def forward(params, cfg: LMConfig, tokens):
+    """tokens (B, S) -> logits (B, S, vocab) in f32, plus aux losses."""
+    B, S = tokens.shape
+    x = _constrain(params["embed"][tokens])
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        y, aux, _ = _layer_fn(cfg, x, lp, positions)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll:
+        auxes = []
+        for i in range(cfg.n_layer):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = body_fn(x, lp)
+            auxes.append(aux)
+        auxes = jnp.stack(auxes)
+    else:
+        x, auxes = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(params, cfg: LMConfig, tokens, labels, aux_weight=0.01):
+    logits, aux = forward(params, cfg, tokens)
+    # Vocab-parallel-safe cross entropy: logsumexp is a reduction over the
+    # (model-sharded) vocab dim and the label logit is a one-hot contraction
+    # — both partition under SPMD without all-gathering the (B,S,V) logits
+    # (take_along_axis would; it cost 100GB/device of temps in the dry-run).
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (labels[..., None] == jnp.arange(cfg.vocab, dtype=labels.dtype)).astype(logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - label_logit
+    return jnp.mean(nll) + aux_weight * aux
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layer, batch, max_len, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layer, batch, max_len, cfg.n_kv, cfg.d_head)
+    sds = jax.ShapeDtypeStruct(shape, cfg.dtype)
+    return {"k": sds, "v": sds}
+
+
+def decode_step(params, cfg: LMConfig, tokens, cache, cache_len):
+    """One decode step. tokens (B, 1); cache (L, B, T, Hkv, dh) x2;
+    cache_len scalar int32. Returns (logits (B, vocab), new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+
+    def body(x, layer):
+        lp, ck, cv = layer
+        y, _aux, nc = _layer_fn(cfg, x, lp, positions,
+                                cache={"k": ck, "v": cv}, cache_len=cache_len)
+        return y, (nc["k"], nc["v"])
+
+    if cfg.unroll:
+        nks, nvs = [], []
+        for i in range(cfg.n_layer):
+            layer = jax.tree.map(lambda a: a[i], (params["layers"], cache["k"], cache["v"]))
+            x, (nk_i, nv_i) = body(x, layer)
+            nks.append(nk_i); nvs.append(nv_i)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    else:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["head"]).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,51 @@
+"""Elastic scaling: re-mesh a job onto a changed device count.
+
+Checkpoints store arrays in host layout plus *logical* partition specs
+(axis names, not device ids), so a restart with a different device pool
+only needs a new mesh of the same axis names:
+
+    mesh_old (2,16,16) --checkpoint--> mesh_new (1,16,16) or (4,16,16)
+
+``remesh`` rebuilds NamedShardings for the new mesh and device_puts the
+restored host arrays. Divisibility is not required (XLA pads uneven
+shards), so odd survivor counts after failures still mount.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def spec_tree_to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def remesh(host_tree, spec_tree, new_mesh: Mesh):
+    """Place restored host arrays onto a new mesh under the same logical specs.
+
+    Axis names present in a spec but absent from the new mesh degrade to
+    replication (e.g. restoring a multi-pod checkpoint on one pod).
+    """
+    names = set(new_mesh.axis_names)
+
+    def degrade(spec: P) -> P:
+        def keep(part):
+            if part is None:
+                return None
+            if isinstance(part, tuple):
+                kept = tuple(a for a in part if a in names)
+                return kept if kept else None
+            return part if part in names else None
+        return P(*(keep(part) for part in spec))
+
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(new_mesh, degrade(s)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host_tree, shardings)

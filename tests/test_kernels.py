@@ -1,0 +1,131 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import kcore_peel as kp
+from repro.kernels import label_prop as lp
+from repro.kernels import segment_matmul as sm
+from repro.kernels import flash_attention as fa
+
+
+class TestDegreePeel:
+    @pytest.mark.parametrize("n,m", [(17, 40), (300, 900), (1025, 3000)])
+    @pytest.mark.parametrize("eb,vb", [(256, 128), (1024, 512)])
+    def test_degree_sweep(self, n, m, eb, vb):
+        rng = np.random.default_rng(n * m)
+        src = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        alive = jnp.asarray(rng.random(m) < 0.7)
+        got = kp.degree_count(src, dst, alive, n, edge_block=eb, vert_block=vb)
+        want = ref.degree_count(src, dst, alive, n)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("k", [2, 3, 5])
+    def test_peel_round(self, k):
+        rng = np.random.default_rng(k)
+        n, m = 120, 500
+        src = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        alive = jnp.asarray(rng.random(m) < 0.9)
+        got = kp.peel_round(src, dst, alive, n, k)
+        want, _ = ref.kcore_peel_round(src, dst, alive, n, k)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fixpoint_matches_host_peeling(self):
+        from repro.core.kcore import kcore_edge_mask
+        rng = np.random.default_rng(9)
+        n, m = 80, 400
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        alive = ref.kcore_fixpoint(jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32), n, 3)
+        want = kcore_edge_mask(src, dst, n, 3)
+        assert np.array_equal(np.asarray(alive), want)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("shape", [(64, 64, 64), (200, 300, 150),
+                                       (128, 256, 384), (33, 65, 17)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, dtype):
+        M, K, N = shape
+        rng = np.random.default_rng(M + K + N)
+        a = jnp.asarray(rng.normal(size=(M, K)), dtype)
+        b = jnp.asarray(rng.normal(size=(K, N)), dtype)
+        got = np.asarray(sm.matmul(a, b))
+        want = np.asarray(ref.matmul(a, b))
+        tol = 1e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+class TestSegmentSum:
+    @pytest.mark.parametrize("m,d,s", [(10, 4, 3), (700, 32, 90),
+                                       (1024, 128, 256), (513, 7, 1)])
+    def test_sweep(self, m, d, s):
+        rng = np.random.default_rng(m + d + s)
+        vals = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+        got = np.asarray(sm.segment_sum(vals, ids, s))
+        want = np.asarray(ref.segment_sum_sorted(vals, ids, s))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_embedding_bag(self):
+        rng = np.random.default_rng(3)
+        table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, 50, (6, 5)), jnp.int32)
+        w = jnp.asarray(rng.random((6, 5)), jnp.float32)
+        got = np.asarray(sm.embedding_bag(table, ids, w))
+        want = np.asarray(ref.embedding_bag(table, ids, w))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestLabelProp:
+    @pytest.mark.parametrize("B,N,bn", [(2, 30, 16), (4, 50, 2048), (8, 300, 64)])
+    def test_sweep(self, B, N, bn):
+        rng = np.random.default_rng(B * N)
+        labels = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (B, N))
+        act = jnp.asarray(rng.random((B, N)) < 0.7)
+        labels = jnp.where(act, labels, N)
+        links = [jnp.asarray(rng.integers(-1, N, (B, N)), jnp.int32) for _ in range(3)]
+        got = np.asarray(lp.label_prop_round(labels, *links, act, bn=bn))
+        want = np.asarray(ref.label_prop_round(labels, *links, act))
+        assert np.array_equal(got, want)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,T", [(64, 64), (70, 70), (128, 256), (1, 96)])
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, S, T, causal, dtype):
+        if causal and S != T:
+            pytest.skip("causal requires square here")
+        rng = np.random.default_rng(S * T + causal)
+        B, H, dh = 2, 3, 32
+        q = jnp.asarray(rng.normal(size=(B, S, H, dh)), dtype)
+        k = jnp.asarray(rng.normal(size=(B, T, H, dh)), dtype)
+        v = jnp.asarray(rng.normal(size=(B, T, H, dh)), dtype)
+        got = np.asarray(fa.flash_attention(q, k, v, causal=causal, bq=32, bk=32),
+                         np.float32)
+        want = np.asarray(ref.flash_attention(q, k, v, causal=causal), np.float32)
+        tol = 2e-3 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_matches_model_attention(self):
+        """The kernel agrees with the transformer's einsum attention path."""
+        from repro.models.transformer import gqa_attention
+        rng = np.random.default_rng(0)
+        B, S, Hq, Hkv, dh = 2, 48, 4, 2, 16
+        q = jnp.asarray(rng.normal(size=(B, S, Hq, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.float32)
+        wanted = np.asarray(gqa_attention(q, k, v, causal=True))
+        head_map = jnp.arange(Hq) // (Hq // Hkv)
+        ke, ve = jnp.take(k, head_map, axis=2), jnp.take(v, head_map, axis=2)
+        got = np.asarray(fa.flash_attention(q, ke, ve, causal=True, bq=16, bk=16))
+        np.testing.assert_allclose(got.reshape(B, S, Hq * dh), wanted,
+                                   rtol=2e-3, atol=2e-3)

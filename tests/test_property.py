@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.kcore import tccs_oracle, distinct_kcore_edge_mask
+from repro.core.core_time import edge_core_times
+from repro.core.ecb_forest import active_versions, build_forest_at
+from repro.core.pecb_index import build_pecb_index
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def temporal_graphs(draw, max_n=14, max_m=60, max_t=8):
+    n = draw(st.integers(3, max_n))
+    m = draw(st.integers(1, max_m))
+    t_max = draw(st.integers(1, max_t))
+    edges = []
+    for _ in range(m):
+        u = draw(st.integers(0, n - 1))
+        v = draw(st.integers(0, n - 1))
+        t = draw(st.integers(1, t_max))
+        if u != v:
+            edges.append((u, v, t))
+    if not edges:
+        edges = [(0, 1, 1)]
+    return TemporalGraph.from_edges(n, edges)
+
+
+@given(g=temporal_graphs(), k=st.integers(2, 3), data=st.data())
+@settings(**SETTINGS)
+def test_pecb_equals_oracle(g, k, data):
+    idx = build_pecb_index(g, k)
+    t_max = max(g.t_max, 1)
+    for _ in range(10):
+        u = data.draw(st.integers(0, g.n - 1))
+        ts = data.draw(st.integers(1, t_max))
+        te = data.draw(st.integers(ts, t_max))
+        assert idx.query(u, ts, te) == tccs_oracle(g, k, u, ts, te)
+
+
+@given(g=temporal_graphs(), k=st.integers(2, 3))
+@settings(**SETTINGS)
+def test_core_time_characterizes_membership(g, k):
+    """CT(e)_ts <= te  <=>  e in the temporal k-core of [ts, te]."""
+    tab = edge_core_times(g, k)
+    t_max = max(g.t_max, 1)
+    for ts in range(1, t_max + 1):
+        for te in range(ts, t_max + 1):
+            s, d, ids = g.project(ts, te)
+            alive = distinct_kcore_edge_mask(s, d, g.n, k)
+            member = {int(e) for e, a in zip(ids, alive) if a}
+            by_ct = {e for e in range(g.m) if tab.ct_at(e, ts) <= te}
+            assert member == by_ct, (ts, te)
+
+
+@given(g=temporal_graphs(), k=st.integers(2, 3))
+@settings(**SETTINGS)
+def test_ecb_forest_ec_equivalence(g, k):
+    """Def 4.2: for every (ts, te), connected components of the forest
+    restricted to CT <= te equal the k-core components (Lemma 4.11)."""
+    import networkx as nx
+
+    tab = edge_core_times(g, k)
+    t_max = max(g.t_max, 1)
+    for ts in range(1, t_max + 1):
+        f = build_forest_at(g, tab, ts)
+        for te in range(ts, t_max + 1):
+            # components from the forest
+            fg = nx.Graph()
+            for i in range(f.ct.shape[0]):
+                if f.in_forest[i] and f.ct[i] <= te:
+                    fg.add_edge(int(f.u[i]), int(f.v[i]))
+            forest_comps = {frozenset(c) for c in nx.connected_components(fg)}
+            # components from the raw graph
+            s, d, ids = g.project(ts, te)
+            alive = distinct_kcore_edge_mask(s, d, g.n, k)
+            gg = nx.Graph()
+            gg.add_edges_from(zip(s[alive].tolist(), d[alive].tolist()))
+            graph_comps = {frozenset(c) for c in nx.connected_components(gg)}
+            assert forest_comps == graph_comps, (ts, te)
+
+
+@given(g=temporal_graphs())
+@settings(**SETTINGS)
+def test_version_ranges_disjoint_and_sorted(g):
+    """Each edge's version records tile [1, t_max] disjointly with
+    monotone core times (Table 1 invariant)."""
+    tab = edge_core_times(g, 2)
+    by_edge = {}
+    for i in range(tab.num_versions):
+        by_edge.setdefault(int(tab.edge_id[i]), []).append(
+            (int(tab.ts_from[i]), int(tab.ts_to[i]), int(tab.ct[i])))
+    for e, vers in by_edge.items():
+        vers.sort()
+        for (a1, b1, c1), (a2, b2, c2) in zip(vers, vers[1:]):
+            assert b1 < a2                     # disjoint, ordered
+            assert c1 <= c2                    # CT non-decreasing in ts
+        for a, b, c in vers:
+            assert a <= b
+            assert c <= g.t_max                # finite versions only
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_kernel_segment_sum_property(data):
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    m = data.draw(st.integers(1, 200))
+    d = data.draw(st.sampled_from([1, 3, 16]))
+    s = data.draw(st.integers(1, 40))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    vals = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, s, m), jnp.int32)
+    got = np.asarray(ops.segment_sum(vals, ids, s))
+    want = np.asarray(ref.segment_sum_sorted(vals, ids, s))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
