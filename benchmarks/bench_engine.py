@@ -19,6 +19,7 @@ from .common import default_k, random_queries, timed, workload, write_csv
 from repro.core.core_time import edge_core_times
 from repro.core.pecb_index import build_pecb_index
 from repro.core.batch_query import to_device, batch_query
+from repro.serving import EngineConfig, IndexRegistry, ServingEngine
 
 
 def bench_batch_query(name: str = "fb_like", batches=(32, 128, 512)):
@@ -53,6 +54,65 @@ def bench_batch_query(name: str = "fb_like", batches=(32, 128, 512)):
     write_csv("batch_query.csv",
               ["workload", "batch", "batched_us_per_q", "alg1_us_per_q",
                "speedup"], rows)
+    return rows
+
+
+def bench_engine_load_sweep(name: str = "fb_like",
+                            loads=(1000, 4000, 16000, 0),
+                            n_q: int = 2048, seed: int = 9):
+    """Offered-load sweep through the full serving engine.
+
+    Replays ``n_q`` random queries at each offered load (queries/s; 0 =
+    open loop, submit as fast as the engine accepts) through a fresh
+    ServingEngine sharing one warm index registry, and records achieved
+    throughput plus end-to-end latency percentiles per load — the
+    throughput/latency curve a capacity planner reads. The result cache is
+    disabled so every query pays its true execution path.
+
+    CSV: engine_load_sweep.csv
+    """
+    g = workload(name)
+    k = default_k(name)
+    registry = IndexRegistry(capacity=4)
+    registry.register_graph(name, g)
+    queries = random_queries(g, n_q, seed=seed)
+    rows = []
+    for load in loads:
+        cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
+        with ServingEngine(cfg, registry=registry) as eng:
+            eng.warmup(name, k)
+            t0 = time.perf_counter()
+            futures = []
+            if load:
+                period = 1.0 / load
+                for i, q in enumerate(queries):
+                    target = t0 + i * period
+                    delay = target - time.perf_counter()
+                    if delay > 0:
+                        time.sleep(delay)
+                    futures.append(eng.submit(name, k, *q))
+            else:
+                for i in range(0, len(queries), cfg.max_batch):
+                    futures += eng.submit_many(name, k, queries[i:i + cfg.max_batch])
+            eng.flush()
+            for f in futures:
+                f.result(timeout=300)
+            dt = time.perf_counter() - t0
+            snap = eng.stats()
+            e2e = snap["engine"]["latency"]["e2e"]
+            counters = snap["engine"]["counters"]
+            rows.append([
+                name, k, load if load else "open", n_q,
+                round(n_q / dt, 1),
+                round(e2e["p50_ms"], 3), round(e2e["p95_ms"], 3),
+                round(e2e["p99_ms"], 3),
+                counters.get("device_batches", 0),
+                counters.get("host_batches", 0),
+            ])
+    write_csv("engine_load_sweep.csv",
+              ["workload", "k", "offered_qps", "queries", "achieved_qps",
+               "p50_ms", "p95_ms", "p99_ms", "device_batches", "host_batches"],
+              rows)
     return rows
 
 

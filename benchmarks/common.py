@@ -8,7 +8,8 @@ import time
 
 import numpy as np
 
-from repro.core.temporal_graph import BENCH_WORKLOADS, bench_graph
+from repro.core.temporal_graph import (BENCH_WORKLOADS, bench_graph,
+                                       random_queries)
 from repro.core.core_time import edge_core_times
 from repro.core.pecb_index import build_pecb_index
 from repro.core.ctmsf_index import CTMSFIndex
@@ -49,14 +50,6 @@ def build_all(name: str, k: int):
     times = {"core_times_s": t_tab, "pecb_s": t_tab + t_pecb,
              "ctmsf_s": t_tab + t_ctm, "ef_s": t_tab + t_ef}
     return g, tab, pecb, ctm, ef, times
-
-
-def random_queries(g, n_q: int, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    u = rng.integers(0, g.n, n_q)
-    ts = rng.integers(1, g.t_max + 1, n_q)
-    te = np.minimum(ts + rng.integers(0, g.t_max, n_q), g.t_max)
-    return list(zip(u.tolist(), ts.tolist(), te.tolist()))
 
 
 def write_csv(name: str, header: list, rows: list):

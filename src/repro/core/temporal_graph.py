@@ -134,6 +134,16 @@ def bench_graph(name: str) -> TemporalGraph:
     return gen_temporal_graph(**BENCH_WORKLOADS[name])
 
 
+def random_queries(g: TemporalGraph, n_q: int, seed: int = 0) -> list[tuple[int, int, int]]:
+    """Random (u, ts, te) TCCS queries over the graph's time range — the
+    query distribution shared by benchmarks and serving drivers."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, g.n, n_q)
+    ts = rng.integers(1, g.t_max + 1, n_q)
+    te = np.minimum(ts + rng.integers(0, g.t_max, n_q), g.t_max)
+    return list(zip(u.tolist(), ts.tolist(), te.tolist()))
+
+
 def gen_contact_network(n: int, days: int, *, seed: int = 0, meetings_per_day: int | None = None) -> TemporalGraph:
     """Contact-tracing style workload: small-world daily meetings."""
     rng = np.random.default_rng(seed)

@@ -1,12 +1,15 @@
-"""TCCS query-serving driver — the paper's end-to-end deployment shape.
+"""TCCS query-serving driver — thin client of the serving engine
+(repro/serving, DESIGN.md §7).
 
     PYTHONPATH=src python -m repro.launch.serve --workload cm_like --k 3 \\
-        --queries 4096 --batch 256
+        --queries 4096 --batch 256 --flush-ms 2
 
-Pipeline: build the PECB index on the host (offline plane), ship the packed
-arrays to the device, then serve batched TCCS queries with the label-
-propagation engine (core/batch_query.py), reporting throughput against the
-sequential Algorithm 1 and verifying exactness on a sample.
+The driver owns nothing but the traffic: it warms the engine (index build +
+bucket compiles), replays a random query stream through ``submit_many``
+batched like independent arrivals, then prints the engine's own per-stage
+metrics, compares against the sequential Algorithm 1 baseline, and verifies
+exactness on a sample. All batching/routing/caching/sharding policy lives
+in the engine.
 """
 
 from __future__ import annotations
@@ -14,77 +17,68 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-import jax.numpy as jnp
-
-from repro.core.temporal_graph import bench_graph, gen_temporal_graph
-from repro.core.core_time import edge_core_times
-from repro.core.pecb_index import build_pecb_index
-from repro.core.batch_query import to_device, batch_query
 from repro.core.kcore import k_max
+from repro.core.temporal_graph import BENCH_WORKLOADS, bench_graph, random_queries
+from repro.serving import EngineConfig, ServingEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="cm_like")
+    ap.add_argument("--workload", default="cm_like",
+                    choices=sorted(BENCH_WORKLOADS))
     ap.add_argument("--k", type=int, default=None)
     ap.add_argument("--queries", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--flush-ms", type=float, default=2.0)
+    ap.add_argument("--cache", type=int, default=4096)
     ap.add_argument("--verify", type=int, default=32)
     args = ap.parse_args(argv)
 
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
     g = bench_graph(args.workload)
     k = args.k or max(2, int(0.7 * k_max(g)))
-    print(f"[build] workload={args.workload} n={g.n} m={g.m} t_max={g.t_max} k={k}")
-    t0 = time.perf_counter()
-    tab = edge_core_times(g, k)
-    idx = build_pecb_index(g, k, tab)
-    t_build = time.perf_counter() - t0
-    print(f"[build] PECB in {t_build:.2f}s | nodes={idx.num_nodes} "
-          f"size={idx.nbytes()/1e6:.2f} MB")
+    cfg = EngineConfig(max_batch=args.batch, flush_ms=args.flush_ms,
+                       cache_capacity=args.cache,
+                       min_bucket=min(8, args.batch))
+    print(f"[engine] workload={args.workload} n={g.n} m={g.m} "
+          f"t_max={g.t_max} k={k} config={cfg}")
 
-    dix = to_device(idx)
-    rng = np.random.default_rng(0)
-    B = args.batch
-    n_batches = (args.queries + B - 1) // B
-    qs = []
-    for _ in range(n_batches):
-        u = rng.integers(0, g.n, B).astype(np.int32)
-        ts = rng.integers(1, g.t_max + 1, B).astype(np.int32)
-        te = np.minimum(ts + rng.integers(0, g.t_max, B), g.t_max).astype(np.int32)
-        qs.append((jnp.asarray(u), jnp.asarray(ts), jnp.asarray(te)))
+    with ServingEngine(cfg) as eng:
+        t0 = time.perf_counter()
+        handle = eng.warmup(args.workload, k)
+        print(f"[warmup] index built in {handle.build_seconds:.2f}s "
+              f"(nodes={handle.pecb.num_nodes} size={handle.nbytes/1e6:.2f} MB); "
+              f"buckets compiled in {time.perf_counter() - t0 - handle.build_seconds:.2f}s")
 
-    # warmup/compile
-    batch_query(dix, *qs[0]).block_until_ready()
-    t0 = time.perf_counter()
-    outs = []
-    for u, ts, te in qs:
-        outs.append(batch_query(dix, u, ts, te))
-    outs[-1].block_until_ready()
-    dt = time.perf_counter() - t0
-    total = n_batches * B
-    print(f"[serve] {total} queries in {dt:.3f}s -> {total/dt:,.0f} q/s "
-          f"({dt/total*1e6:.1f} us/query) at batch={B}")
+        queries = random_queries(g, args.queries, seed=0)
+        t0 = time.perf_counter()
+        futures = []
+        for i in range(0, len(queries), args.batch):
+            futures += eng.submit_many(args.workload, k, queries[i:i + args.batch])
+        eng.flush()
+        results = [f.result(timeout=120) for f in futures]
+        dt = time.perf_counter() - t0
+        total = len(queries)
+        print(f"[serve] {total} queries in {dt:.3f}s -> {total/dt:,.0f} q/s "
+              f"({dt/total*1e6:.1f} us/query)")
+        print(eng.format_stats())
 
-    # sequential Algorithm 1 comparison
-    t0 = time.perf_counter()
-    for i in range(min(args.verify * 8, total)):
-        u, ts, te = qs[0][0][i % B], qs[0][1][i % B], qs[0][2][i % B]
-        idx.query(int(u), int(ts), int(te))
-    t_seq = (time.perf_counter() - t0) / min(args.verify * 8, total)
-    print(f"[serve] sequential Alg 1: {t_seq*1e6:.1f} us/query "
-          f"(batched speedup {t_seq/(dt/total):.1f}x)")
+        # sequential Algorithm 1 comparison
+        n_seq = min(args.verify * 8, total)
+        t0 = time.perf_counter()
+        for (u, ts, te) in queries[:n_seq]:
+            handle.pecb.query(u, ts, te)
+        t_seq = (time.perf_counter() - t0) / n_seq
+        print(f"[serve] sequential Alg 1: {t_seq*1e6:.1f} us/query "
+              f"(engine speedup {t_seq/(dt/total):.1f}x)")
 
-    # exactness spot check
-    bad = 0
-    mask0 = np.asarray(outs[0])
-    for i in range(min(args.verify, B)):
-        want = idx.query(int(qs[0][0][i]), int(qs[0][1][i]), int(qs[0][2][i]))
-        got = set(np.nonzero(mask0[i])[0].tolist())
-        bad += got != want
-    print(f"[verify] {args.verify} queries checked, {bad} mismatches")
-    assert bad == 0
-    return total / dt
+        # exactness spot check
+        bad = sum(results[i] != frozenset(handle.pecb.query(*queries[i]))
+                  for i in range(min(args.verify, total)))
+        print(f"[verify] {min(args.verify, total)} queries checked, {bad} mismatches")
+        assert bad == 0
+        return total / dt
 
 
 if __name__ == "__main__":

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.sharding import shard_map
+
 
 def quantize(g, axis_size: int = 1):
     """Per-tensor symmetric int8. Returns (q, scale)."""
@@ -76,9 +78,8 @@ def make_compressed_grad_allreduce(mesh, axis: str = "data"):
     # grads enter replicated per-DP-shard; shard_map runs the body per device
     def wrapped(grads, errors):
         specs = jax.tree.map(lambda _: P(), grads)
-        fn = jax.shard_map(all_tensors, mesh=mesh,
-                           in_specs=(specs, specs), out_specs=(specs, specs),
-                           check_vma=False)
+        fn = shard_map(all_tensors, mesh=mesh,
+                       in_specs=(specs, specs), out_specs=(specs, specs))
         return fn(grads, errors)
 
     return wrapped

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.runtime.sharding import shard_map
+
 from ..models import transformer as tfm
 
 
@@ -108,12 +110,11 @@ def make_a2a_moe(mesh: Mesh, dp, tp_axis: str = "model"):
         def body(router, wi, wg, wo, xt):
             return local_fn(router, wi, wg, wo, xt, mcfg=mcfg)
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(tp_axis, None, None), P(tp_axis, None, None),
                       P(tp_axis, None, None), P(dp, None)),
             out_specs=(P(dp, None), P()),
-            check_vma=False,
         )(p["router"], p["wi"], p["wg"], p["wo"], xt)
 
         if mcfg.n_shared:

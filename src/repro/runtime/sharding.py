@@ -24,6 +24,21 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """Version-compatible shard_map with replication checking off.
+
+    ``jax.shard_map`` (with ``check_vma``) only exists on newer JAX; this
+    container's 0.4.x has ``jax.experimental.shard_map`` (with
+    ``check_rep``). Same semantics either way.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def dp_axes(mesh: Mesh):
     """Axes carrying the batch (data-parallel) dimension."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
@@ -191,11 +206,10 @@ def make_vp_take(mesh: Mesh, table_axis: str = "model", leading=None):
     def take_fn(table, ids):
         ids_spec = P(leading, *([None] * (ids.ndim - 1)))
         out_spec = P(leading, *([None] * ids.ndim))
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(table_axis, None), ids_spec),
             out_specs=out_spec,
-            check_vma=False,
         )(table, ids)
 
     return take_fn

@@ -1,0 +1,28 @@
+"""TCCS serving engine (DESIGN.md §7): shape-bucketed micro-batching,
+host/device query planning, per-query LRU result caching, a memoizing
+(workload, k) index registry, and batch-dim-sharded device execution.
+
+Quick start::
+
+    from repro.serving import EngineConfig, ServingEngine
+
+    with ServingEngine(EngineConfig(max_batch=256, flush_ms=2.0)) as eng:
+        fut = eng.submit("cm_like", k=3, u=17, ts=4, te=90)
+        print(sorted(fut.result()))      # == PECBIndex.query(17, 4, 90)
+"""
+
+from .batcher import MicroBatcher, Request
+from .cache import ResultCache
+from .engine import EngineConfig, ServingEngine
+from .executor import PAD_QUERY, ShardedExecutor, bucket_size, pad_queries
+from .metrics import EngineMetrics, LatencyHistogram
+from .planner import QueryPlanner
+from .registry import IndexHandle, IndexRegistry
+
+__all__ = [
+    "EngineConfig", "ServingEngine",
+    "MicroBatcher", "Request",
+    "QueryPlanner", "ShardedExecutor", "bucket_size", "pad_queries",
+    "PAD_QUERY", "ResultCache", "IndexHandle", "IndexRegistry",
+    "EngineMetrics", "LatencyHistogram",
+]

@@ -1,0 +1,67 @@
+"""Per-query LRU result cache (DESIGN.md §7.3).
+
+TCCS answers are immutable for a frozen index, so a result cache in front of
+the planner is exact, never stale: key = (index key, u, ts, te), value = the
+frozen vertex set. Real query streams are heavily skewed (contact tracing
+re-queries the same hot cases; the bench workloads draw vertices from a
+Zipf), which is what makes an LRU worthwhile before any device work.
+
+Thread-safe; the engine consults it on the submit path (caller thread) and
+fills it from batcher worker threads.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class ResultCache:
+    """LRU map ``key -> frozenset`` with hit/miss accounting.
+
+    ``capacity <= 0`` disables caching (every ``get`` misses, ``put`` drops).
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, value: frozenset) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self._data[key] = value
+                return
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "size": len(self._data),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }

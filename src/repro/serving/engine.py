@@ -1,0 +1,210 @@
+"""TCCS serving engine: the user-facing facade (DESIGN.md §7).
+
+Wires the subsystem together::
+
+    submit(workload, k, u, ts, te)
+        -> registry.get(workload, k)          (build/memoize the index pair)
+        -> result cache probe                 (hit: resolve immediately)
+        -> per-handle micro-batcher           (shape-bucketed batching)
+        -> planner                            (host Alg 1 | sharded device)
+        -> future resolves with frozenset of component vertices
+
+Results are always identical to ``PECBIndex.query`` (Algorithm 1) — the
+engine only changes *where and when* the answer is computed, never *what*;
+tests assert exact equality across every route.
+
+Thread-safety: ``submit`` may be called from any number of caller threads;
+each index handle owns one batcher worker thread; the registry serializes
+builds per key. ``close()`` (or the context manager) drains and stops all
+workers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from threading import Lock
+from typing import Iterable, Sequence
+
+from .batcher import MicroBatcher, Request
+from .cache import ResultCache
+from .executor import ShardedExecutor
+from .metrics import EngineMetrics
+from .planner import QueryPlanner
+from .registry import IndexHandle, IndexRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 256         # micro-batch flush size == largest bucket
+    flush_ms: float = 2.0        # max time a request waits for batchmates
+    min_bucket: int = 8          # smallest padded batch shape
+    host_threshold: int = 8      # batches below this run host Algorithm 1
+    cache_capacity: int = 4096   # LRU result-cache entries (<=0 disables)
+    registry_capacity: int = 8   # resident (workload, k) index pairs
+
+
+class ServingEngine:
+    def __init__(self, config: EngineConfig | None = None, *,
+                 registry: IndexRegistry | None = None, devices=None):
+        self.config = config or EngineConfig()
+        cfg = self.config
+        if not 1 <= cfg.min_bucket <= cfg.max_batch:
+            raise ValueError(
+                f"need 1 <= min_bucket <= max_batch, got min_bucket="
+                f"{cfg.min_bucket} max_batch={cfg.max_batch}")
+        self.metrics = EngineMetrics()
+        self.cache = ResultCache(cfg.cache_capacity)
+        self.registry = registry if registry is not None else IndexRegistry(
+            cfg.registry_capacity, metrics=self.metrics)
+        self.executor = ShardedExecutor(devices)
+        self.planner = QueryPlanner(
+            self.executor, self.cache, self.metrics,
+            host_threshold=cfg.host_threshold, min_bucket=cfg.min_bucket,
+            max_batch=cfg.max_batch)
+        # key -> (handle the batcher's execute_fn is bound to, batcher)
+        self._batchers: dict[tuple[str, int], tuple[IndexHandle, MicroBatcher]] = {}
+        self._lock = Lock()
+        self._closed = False
+        self.registry.add_evict_listener(self._on_index_evicted)
+
+    # -- graph/index management -----------------------------------------
+    def register_graph(self, name: str, g) -> None:
+        self.registry.register_graph(name, g)
+
+    def warmup(self, workload: str, k: int) -> IndexHandle:
+        """Build the (workload, k) index and pre-compile every bucket shape,
+        so no live request pays a build or an XLA compile."""
+        handle = self.registry.get(workload, k)
+        if handle.pecb.num_nodes == 0:
+            return handle  # host-only route, nothing to compile
+        cfg = self.config
+        b = cfg.min_bucket
+        while True:
+            bucket = self.executor.final_bucket(
+                min(b, cfg.max_batch), cfg.min_bucket, cfg.max_batch)
+            self.executor.run(handle.device, [0], [1], [0], bucket)
+            if b >= cfg.max_batch:
+                break
+            b *= 2
+        return handle
+
+    # -- query paths -----------------------------------------------------
+    def submit(self, workload: str, k: int, u: int, ts: int, te: int) -> Future:
+        return self.submit_many(workload, k, [(u, ts, te)])[0]
+
+    def submit_many(self, workload: str, k: int,
+                    queries: Iterable[Sequence[int]]) -> list[Future]:
+        """One future per (u, ts, te), in input order. Cache hits resolve
+        before this returns; misses resolve when their batch flushes."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        handle = self.registry.get(workload, k)
+        t0 = time.perf_counter()
+        futures: list[Future] = []
+        misses: list[Request] = []
+        for (u, ts, te) in queries:
+            u, ts, te = int(u), int(ts), int(te)
+            fut: Future = Future()
+            futures.append(fut)
+            self.metrics.count("queries")
+            hit = self.cache.get((handle.key, u, ts, te))
+            if hit is not None:
+                self.metrics.count("cache_hits")
+                fut.set_result(hit)
+                self.metrics.observe("e2e", time.perf_counter() - t0)
+            else:
+                self.metrics.count("cache_misses")
+                misses.append(Request(u, ts, te, fut, t_submit=t0))
+        if misses:
+            self._batcher_for(handle).submit_many(misses)
+        return futures
+
+    def query(self, workload: str, k: int, u: int, ts: int, te: int,
+              timeout: float | None = 60.0) -> frozenset:
+        """Synchronous convenience wrapper (one-request batch)."""
+        return self.submit(workload, k, u, ts, te).result(timeout=timeout)
+
+    # -- lifecycle -------------------------------------------------------
+    def _batcher_for(self, handle: IndexHandle) -> MicroBatcher:
+        """Batcher bound to exactly this handle. If the registry evicted and
+        rebuilt the key, the old batcher (bound to the dead handle) is
+        closed and replaced, so closures never pin evicted indexes."""
+        stale = None
+        with self._lock:
+            if self._closed:          # close() may have raced past submit's check
+                raise RuntimeError("engine is closed")
+            entry = self._batchers.get(handle.key)
+            if entry is not None and entry[0] is handle:
+                return entry[1]
+            if entry is not None:
+                stale = entry[1]
+            cfg = self.config
+            b = MicroBatcher(
+                self.planner.bind(handle),
+                max_batch=cfg.max_batch, flush_ms=cfg.flush_ms,
+                name=f"batcher-{handle.key[0]}-k{handle.key[1]}",
+                metrics=self.metrics)
+            self._batchers[handle.key] = (handle, b)
+        if stale is not None:
+            stale.close()
+        return b
+
+    def _on_index_evicted(self, key: tuple[str, int],
+                          handle: IndexHandle) -> None:
+        """Registry eviction hook: retire the batcher (and its worker
+        thread) bound to the evicted handle."""
+        with self._lock:
+            entry = self._batchers.get(key)
+            if entry is None or entry[0] is not handle:
+                return
+            del self._batchers[key]
+        entry[1].close()
+
+    def flush(self) -> None:
+        with self._lock:
+            batchers = [b for (_, b) in self._batchers.values()]
+        for b in batchers:
+            b.flush()
+
+    def drain(self, timeout: float | None = 60.0) -> None:
+        with self._lock:
+            batchers = [b for (_, b) in self._batchers.values()]
+        for b in batchers:
+            b.drain(timeout=timeout)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            batchers = [b for (_, b) in self._batchers.values()]
+        self.registry.remove_evict_listener(self._on_index_evicted)
+        for b in batchers:
+            b.close()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- observability ---------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "engine": self.metrics.snapshot(),
+            "cache": self.cache.stats(),
+            "registry": self.registry.stats(),
+            "devices": self.executor.num_devices,
+            "compiled_programs": self.executor.compile_count(),
+        }
+
+    def format_stats(self) -> str:
+        s = self.stats()
+        lines = [self.metrics.format()]
+        lines.append(f"  cache                    {s['cache']}")
+        lines.append(f"  registry                 resident={s['registry']['resident']} "
+                     f"builds={s['registry']['builds']} evictions={s['registry']['evictions']}")
+        lines.append(f"  devices={s['devices']} compiled_programs={s['compiled_programs']}")
+        return "\n".join(lines)

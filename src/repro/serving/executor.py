@@ -1,0 +1,115 @@
+"""Shape-bucketed, device-sharded execution of the batched query plane
+(DESIGN.md §7.2, §7.6).
+
+``batch_query`` is ``jax.jit``-compiled, and XLA specializes on the batch
+shape: a stream of ragged micro-batches (B = 13, 57, 200, ...) would compile
+once *per distinct size*. The fix is shape bucketing: pad every batch up to
+the next power of two (floored at ``min_bucket``, capped at ``max_batch``),
+so a serving process compiles at most ``log2(max_batch / min_bucket) + 1``
+programs per index and then never again. Padding lanes use the inert query
+``(u=0, ts=1, te=0)``: ``te < ts`` can match nothing (core times are >= 1),
+so pad lanes return empty masks and are sliced off before unpacking.
+
+Multi-device: when the process sees more than one JAX device, the (B, n)
+propagation shards over the batch dimension with ``jax.sharding`` — a 1-D
+``('batch',)`` mesh, queries placed with ``PartitionSpec('batch')``, index
+arrays replicated by the partitioner (they are read-only gather operands).
+Buckets are sized to multiples of the device count so the placement is
+exact. Fallback: with one device (this container: CPU x1) or a bucket not
+divisible by the mesh, arrays stay uncommitted and jit runs single-device —
+semantics identical, tested by the sharded subprocess suite
+(tests/test_distributed.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.batch_query import DeviceIndex, batch_query
+
+#: Inert padding query: te < ts matches no core-time entry (cts are >= 1).
+PAD_QUERY = (0, 1, 0)
+
+
+def bucket_size(b: int, min_bucket: int = 8, max_batch: int = 256) -> int:
+    """Smallest power-of-two bucket >= b, floored/capped to the configured
+    range. ``b`` beyond ``max_batch`` is the batcher's bug, not ours."""
+    assert 1 <= b <= max_batch, (b, max_batch)
+    bucket = max(min_bucket, 1 << (b - 1).bit_length())
+    return min(bucket, max_batch)
+
+
+def pad_queries(u, ts, te, bucket: int):
+    """int32[(bucket,)] x3, padded with the inert query."""
+    u = np.asarray(u, np.int32)
+    ts = np.asarray(ts, np.int32)
+    te = np.asarray(te, np.int32)
+    b = u.shape[0]
+    assert b <= bucket
+    if b == bucket:
+        return u, ts, te
+    pad = bucket - b
+    return (
+        np.concatenate([u, np.full(pad, PAD_QUERY[0], np.int32)]),
+        np.concatenate([ts, np.full(pad, PAD_QUERY[1], np.int32)]),
+        np.concatenate([te, np.full(pad, PAD_QUERY[2], np.int32)]),
+    )
+
+
+class ShardedExecutor:
+    """Runs padded query batches on all visible devices.
+
+    One executor per engine; stateless across calls apart from the device
+    mesh, so it is safe to share between batcher worker threads (jit
+    dispatch is thread-safe).
+    """
+
+    def __init__(self, devices=None):
+        self.devices = list(devices) if devices is not None else jax.devices()
+        self.num_devices = len(self.devices)
+        if self.num_devices > 1:
+            self.mesh = Mesh(np.asarray(self.devices), ("batch",))
+            self.batch_sharding = NamedSharding(self.mesh, P("batch"))
+        else:
+            self.mesh = None
+            self.batch_sharding = None
+
+    def align(self, bucket: int) -> int:
+        """Round a bucket up to a multiple of the device count (no-op for
+        power-of-two device counts <= bucket, the common case)."""
+        d = self.num_devices
+        if d <= 1 or bucket % d == 0:
+            return bucket
+        return ((bucket + d - 1) // d) * d
+
+    def final_bucket(self, b: int, min_bucket: int, max_batch: int) -> int:
+        """The executed batch shape for ``b`` requests: power-of-two bucket,
+        aligned to the device count. Single owner of the formula — callers
+        use this for padding metrics and pass the result to ``run``."""
+        return self.align(bucket_size(b, min_bucket, max_batch))
+
+    def run(self, dix: DeviceIndex, u, ts, te, bucket: int) -> np.ndarray:
+        """bool[B, n] membership masks for the *unpadded* prefix. ``bucket``
+        must come from ``final_bucket`` (already device-aligned)."""
+        b = len(u)
+        assert self.align(bucket) == bucket, bucket
+        up, tsp, tep = pad_queries(u, ts, te, bucket)
+        if self.batch_sharding is not None and bucket % self.num_devices == 0:
+            qu = jax.device_put(jnp.asarray(up), self.batch_sharding)
+            qts = jax.device_put(jnp.asarray(tsp), self.batch_sharding)
+            qte = jax.device_put(jnp.asarray(tep), self.batch_sharding)
+        else:
+            qu, qts, qte = jnp.asarray(up), jnp.asarray(tsp), jnp.asarray(tep)
+        mask = batch_query(dix, qu, qts, qte)
+        return np.asarray(jax.device_get(mask))[:b]
+
+    @staticmethod
+    def compile_count() -> int:
+        """Number of distinct programs compiled for the batched query plane
+        (jit cache entries). Bucketing tests assert this stays flat across
+        batch sizes within one bucket."""
+        return batch_query._cache_size()

@@ -1,0 +1,80 @@
+"""Query planner: route batches to the host or device plane, fill the cache
+(DESIGN.md §7.2).
+
+The two query planes have opposite cost shapes. Algorithm 1 on the host is
+O(answer size) per query with zero launch overhead — unbeatable for a
+straggler batch of three. The device plane pays a fixed launch (and, cold,
+a compile) but amortizes to microseconds per query at depth. The planner
+picks per flushed batch:
+
+* ``B < host_threshold``  -> host loop over ``PECBIndex.query``;
+* otherwise               -> pad to the power-of-two bucket and launch the
+  sharded device engine.
+
+An empty forest (k above the graph's k-max) always routes host: every
+answer is the empty set and a device launch would compile a program to
+compute nothing.
+
+After execution the planner writes every (u, ts, te) -> result into the LRU
+cache, so repeats are resolved on the submit path without ever reaching a
+batcher.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .batcher import Request
+from .executor import ShardedExecutor
+
+
+class QueryPlanner:
+    def __init__(self, executor: ShardedExecutor, cache, metrics,
+                 *, host_threshold: int = 8, min_bucket: int = 8,
+                 max_batch: int = 256):
+        self.executor = executor
+        self.cache = cache
+        self.metrics = metrics
+        self.host_threshold = host_threshold
+        self.min_bucket = min_bucket
+        self.max_batch = max_batch
+
+    def route(self, handle, batch_size: int) -> str:
+        if handle.pecb.num_nodes == 0:
+            return "host"
+        if batch_size < self.host_threshold:
+            return "host"
+        return "device"
+
+    def bind(self, handle):
+        """The ``execute_fn`` a batcher calls for this index handle."""
+        return lambda batch: self.execute(handle, batch)
+
+    def execute(self, handle, batch: list[Request]) -> list[frozenset]:
+        b = len(batch)
+        route = self.route(handle, b)
+        t0 = time.perf_counter()
+        if route == "host":
+            results = [frozenset(handle.pecb.query(r.u, r.ts, r.te))
+                       for r in batch]
+            self.metrics.observe("host_exec", time.perf_counter() - t0)
+            self.metrics.count("host_batches")
+            self.metrics.count("host_queries", b)
+        else:
+            bucket = self.executor.final_bucket(b, self.min_bucket,
+                                                self.max_batch)
+            u = [r.u for r in batch]
+            ts = [r.ts for r in batch]
+            te = [r.te for r in batch]
+            mask = self.executor.run(handle.device, u, ts, te, bucket)
+            results = [frozenset(np.nonzero(mask[i])[0].tolist())
+                       for i in range(b)]
+            self.metrics.observe("device_exec", time.perf_counter() - t0)
+            self.metrics.count("device_batches")
+            self.metrics.count("device_queries", b)
+            self.metrics.count("device_padded_slots", bucket - b)
+        for r, res in zip(batch, results):
+            self.cache.put((handle.key, r.u, r.ts, r.te), res)
+        return results

@@ -1,0 +1,161 @@
+"""Index registry: build, memoize, evict (PECB, Device) index pairs
+(DESIGN.md §7.4).
+
+One engine serves many (workload, k) combinations concurrently — a contact
+tracer asks k=2 and k=3 over the same graph, a dashboard watches five
+graphs. Index construction is the offline plane (seconds); queries are the
+online plane (microseconds). The registry keeps that split honest: the
+first request for a (workload, k) pays the build once, everyone after gets
+the memoized handle; capacity-bounded LRU eviction drops cold indexes.
+
+Graphs resolve by name: either registered explicitly (``register_graph``)
+or one of the named bench workloads (``BENCH_WORKLOADS``). Builds are
+serialized per key (a per-key lock) so a thundering herd on a cold key
+builds exactly once, while builds of *different* keys proceed in parallel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
+from repro.core.core_time import edge_core_times
+from repro.core.pecb_index import PECBIndex, build_pecb_index
+from repro.core.batch_query import DeviceIndex, to_device
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexHandle:
+    """A built (workload, k) index pair: host arrays + device mirror."""
+
+    key: tuple[str, int]          # (workload name, k)
+    graph: TemporalGraph
+    pecb: PECBIndex
+    device: DeviceIndex
+    build_seconds: float
+
+    @property
+    def nbytes(self) -> int:
+        return self.pecb.nbytes()
+
+
+class IndexRegistry:
+    def __init__(self, capacity: int = 8, metrics=None, on_evict=None):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._metrics = metrics
+        # evict listeners: called as cb(key, handle) after an entry leaves
+        # the registry (outside the registry lock). A list, not a slot:
+        # several engines may share one registry (the bench does), and each
+        # needs to retire its own batcher on eviction.
+        self._evict_listeners: list = []
+        if on_evict is not None:
+            self._evict_listeners.append(on_evict)
+        self._graphs: dict[str, TemporalGraph] = {}
+        self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._build_locks: dict[tuple[str, int], threading.Lock] = {}
+        self.builds = 0
+        self.evictions = 0
+
+    def add_evict_listener(self, cb) -> None:
+        with self._lock:
+            self._evict_listeners.append(cb)
+
+    def remove_evict_listener(self, cb) -> None:
+        with self._lock:
+            if cb in self._evict_listeners:
+                self._evict_listeners.remove(cb)
+
+    # -- graph sources --------------------------------------------------
+    def register_graph(self, name: str, g: TemporalGraph) -> None:
+        """Bind ``name`` to a graph, immutably: indexes, cached results and
+        batchers are all keyed by name, so silently rebinding a name would
+        keep serving answers for the old graph. Re-registering the *same*
+        object is a no-op; a different one raises — publish new snapshots
+        under new names (e.g. ``"contacts@2026-07-31"``)."""
+        with self._lock:
+            prev = self._graphs.get(name)
+            if prev is not None and prev is not g:
+                raise ValueError(
+                    f"graph name {name!r} is already bound; names are "
+                    "immutable — register the new snapshot under a new name")
+            self._graphs[name] = g
+
+    def resolve_graph(self, name: str) -> TemporalGraph:
+        with self._lock:
+            if name in self._graphs:
+                return self._graphs[name]
+        if name in BENCH_WORKLOADS:
+            g = bench_graph(name)
+            # concurrent cold builds of different k race to generate the
+            # same bench graph: first registration wins, losers adopt it
+            # (bench_graph is deterministic, so either copy is identical)
+            with self._lock:
+                return self._graphs.setdefault(name, g)
+        raise KeyError(
+            f"unknown workload {name!r}: register_graph() it or use one of "
+            f"{sorted(BENCH_WORKLOADS)}"
+        )
+
+    # -- handle lookup ---------------------------------------------------
+    def get(self, workload: str, k: int) -> IndexHandle:
+        key = (workload, int(k))
+        with self._lock:
+            h = self._entries.get(key)
+            if h is not None:
+                self._entries.move_to_end(key)
+                return h
+            bl = self._build_locks.setdefault(key, threading.Lock())
+        with bl:
+            # double-check: another thread may have built while we waited
+            with self._lock:
+                h = self._entries.get(key)
+                if h is not None:
+                    self._entries.move_to_end(key)
+                    return h
+            h = self._build(key)
+            evicted = []
+            with self._lock:
+                self._entries[key] = h
+                self._entries.move_to_end(key)
+                while len(self._entries) > self.capacity:
+                    evicted.append(self._entries.popitem(last=False))
+                    self.evictions += 1
+                    if self._metrics is not None:
+                        self._metrics.count("index_evictions")
+            with self._lock:
+                listeners = list(self._evict_listeners)
+            for (k2, h2) in evicted:
+                for cb in listeners:
+                    cb(k2, h2)
+            return h
+
+    def _build(self, key: tuple[str, int]) -> IndexHandle:
+        workload, k = key
+        g = self.resolve_graph(workload)
+        t0 = time.perf_counter()
+        idx = build_pecb_index(g, k, edge_core_times(g, k))
+        handle = IndexHandle(key, g, idx, to_device(idx), time.perf_counter() - t0)
+        self.builds += 1
+        if self._metrics is not None:
+            self._metrics.count("index_builds")
+            self._metrics.observe("index_build", handle.build_seconds)
+        return handle
+
+    def __contains__(self, key: tuple[str, int]) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "resident": list(self._entries),
+                "capacity": self.capacity,
+                "builds": self.builds,
+                "evictions": self.evictions,
+                "resident_bytes": sum(h.nbytes for h in self._entries.values()),
+            }

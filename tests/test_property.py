@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core.temporal_graph import TemporalGraph

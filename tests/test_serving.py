@@ -1,0 +1,437 @@
+"""Serving-engine tests: exactness vs Algorithm 1 on every route, cache
+semantics, shape-bucketed compile stability, planner routing, registry
+lifecycle, batcher flush behaviour, metrics."""
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.temporal_graph import gen_temporal_graph
+from repro.serving import (
+    EngineConfig, IndexRegistry, LatencyHistogram, MicroBatcher, Request,
+    ServingEngine, ShardedExecutor, bucket_size, pad_queries,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def random_stream(g, n_q, rng, oob_frac=0.2):
+    """Random (u, ts, te) stream including out-of-range windows: te < ts
+    and ts beyond t_max."""
+    qs = []
+    for _ in range(n_q):
+        u = int(rng.integers(0, g.n))
+        if rng.random() < oob_frac:
+            ts = int(rng.integers(1, 2 * g.t_max))
+            te = int(rng.integers(0, 2 * g.t_max))   # may be < ts
+        else:
+            ts = int(rng.integers(1, g.t_max + 1))
+            te = int(rng.integers(ts, g.t_max + 1))
+        qs.append((u, ts, te))
+    return qs
+
+
+def run_engine(eng, workload, k, queries, chunk=64):
+    futs = []
+    for i in range(0, len(queries), chunk):
+        futs += eng.submit_many(workload, k, queries[i:i + chunk])
+    eng.flush()
+    return [f.result(timeout=60) for f in futs]
+
+
+class TestEngineExactness:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_device_route_matches_alg1(self, seed):
+        rng = np.random.default_rng(seed)
+        g = gen_temporal_graph(n=35, m=260, t_max=16, seed=seed + 70)
+        cfg = EngineConfig(max_batch=64, flush_ms=500.0, host_threshold=0,
+                           min_bucket=8, cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 2)
+            qs = random_stream(g, 120, rng)
+            got = run_engine(eng, "g", 2, qs)
+            assert eng.metrics.counter("device_batches") > 0
+            assert eng.metrics.counter("host_batches") == 0
+        for (u, ts, te), res in zip(qs, got):
+            assert res == frozenset(h.pecb.query(u, ts, te)), (u, ts, te)
+
+    def test_host_route_matches_alg1(self):
+        rng = np.random.default_rng(3)
+        g = gen_temporal_graph(n=30, m=220, t_max=14, seed=41)
+        cfg = EngineConfig(max_batch=64, flush_ms=500.0,
+                           host_threshold=10**9, cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 3)
+            qs = random_stream(g, 80, rng)
+            got = run_engine(eng, "g", 3, qs)
+            assert eng.metrics.counter("host_batches") > 0
+            assert eng.metrics.counter("device_batches") == 0
+        for (u, ts, te), res in zip(qs, got):
+            assert res == frozenset(h.pecb.query(u, ts, te))
+
+    def test_empty_forest_returns_empty(self):
+        g = gen_temporal_graph(n=20, m=60, t_max=8, seed=9)
+        with ServingEngine(EngineConfig(flush_ms=500.0)) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 50)        # k >> k_max: empty forest
+            assert h.pecb.num_nodes == 0
+            qs = [(u, 1, g.t_max) for u in range(g.n)]
+            got = run_engine(eng, "g", 50, qs)
+            assert all(r == frozenset() for r in got)
+            # empty forest always routes host (nothing to launch)
+            assert eng.metrics.counter("device_batches") == 0
+
+    def test_mixed_k_one_engine(self):
+        """One engine serves several k values; answers stay per-k exact."""
+        g = gen_temporal_graph(n=30, m=240, t_max=12, seed=5)
+        rng = np.random.default_rng(5)
+        qs = random_stream(g, 40, rng, oob_frac=0.0)
+        with ServingEngine(EngineConfig(max_batch=64, flush_ms=500.0,
+                                        host_threshold=0)) as eng:
+            eng.register_graph("g", g)
+            for k in (2, 3):
+                got = run_engine(eng, "g", k, qs)
+                h = eng.registry.get("g", k)
+                for (u, ts, te), res in zip(qs, got):
+                    assert res == frozenset(h.pecb.query(u, ts, te)), (k, u, ts, te)
+
+
+class TestCache:
+    def test_cache_hit_is_exact_and_instant(self):
+        g = gen_temporal_graph(n=25, m=180, t_max=10, seed=21)
+        with ServingEngine(EngineConfig(flush_ms=500.0, host_threshold=0,
+                                        cache_capacity=64)) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 2)
+            qs = [(u, 2, 9) for u in range(10)]
+            first = run_engine(eng, "g", 2, qs)
+            assert eng.metrics.counter("cache_hits") == 0
+            futs = eng.submit_many("g", 2, qs)   # all hits
+            assert all(f.done() for f in futs)   # resolved on submit path
+            second = [f.result() for f in futs]
+            assert first == second
+            assert eng.metrics.counter("cache_hits") == len(qs)
+            for (u, ts, te), res in zip(qs, second):
+                assert res == frozenset(h.pecb.query(u, ts, te))
+
+    def test_cache_lru_eviction(self):
+        from repro.serving import ResultCache
+        c = ResultCache(capacity=2)
+        c.put("a", frozenset({1})); c.put("b", frozenset({2}))
+        assert c.get("a") == frozenset({1})      # refreshes "a"
+        c.put("c", frozenset({3}))               # evicts "b"
+        assert c.get("b") is None
+        assert c.get("a") is not None and c.get("c") is not None
+        assert c.stats()["evictions"] == 1
+
+    def test_cache_disabled(self):
+        g = gen_temporal_graph(n=20, m=120, t_max=8, seed=2)
+        with ServingEngine(EngineConfig(flush_ms=500.0,
+                                        cache_capacity=0)) as eng:
+            eng.register_graph("g", g)
+            run_engine(eng, "g", 2, [(1, 1, 5)] * 3)
+            assert eng.metrics.counter("cache_hits") == 0
+
+
+class TestBucketing:
+    def test_bucket_size(self):
+        assert bucket_size(1) == 8
+        assert bucket_size(8) == 8
+        assert bucket_size(9) == 16
+        assert bucket_size(100) == 128
+        assert bucket_size(200, max_batch=256) == 256
+        assert bucket_size(255, min_bucket=8, max_batch=256) == 256
+        assert bucket_size(3, min_bucket=4, max_batch=16) == 4
+
+    def test_pad_queries_inert(self):
+        u, ts, te = pad_queries([5, 6], [2, 3], [7, 8], 8)
+        assert u.shape == ts.shape == te.shape == (8,)
+        assert list(u[:2]) == [5, 6]
+        assert (te[2:] < ts[2:]).all()           # pad windows are empty
+
+    def test_no_recompile_within_bucket(self):
+        """Batch sizes 3/5/6/8 all pad to one bucket: exactly one compile;
+        size 13 moves to the next bucket: exactly one more."""
+        g = gen_temporal_graph(n=30, m=200, t_max=12, seed=33)
+        rng = np.random.default_rng(0)
+        cfg = EngineConfig(max_batch=64, flush_ms=1000.0, host_threshold=0,
+                           min_bucket=8, cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            eng.registry.get("g", 2)             # build outside measurement
+
+            def wave(n_q):
+                qs = random_stream(g, n_q, rng, oob_frac=0.0)
+                futs = eng.submit_many("g", 2, qs)
+                eng.flush()
+                [f.result(timeout=60) for f in futs]
+                eng.drain()
+
+            c0 = ShardedExecutor.compile_count()
+            wave(3)
+            c1 = ShardedExecutor.compile_count()
+            assert c1 == c0 + 1                  # first touch of bucket 8
+            for n_q in (5, 6, 8):
+                wave(n_q)
+            assert ShardedExecutor.compile_count() == c1   # no recompiles
+            wave(13)                             # bucket 16
+            assert ShardedExecutor.compile_count() == c1 + 1
+
+    def test_warmup_non_power_of_two_max_batch(self):
+        g = gen_temporal_graph(n=25, m=150, t_max=10, seed=35)
+        cfg = EngineConfig(max_batch=100, flush_ms=500.0, host_threshold=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            eng.warmup("g", 2)                   # must not assert on 128 > 100
+            got = run_engine(eng, "g", 2, [(0, 1, 9), (1, 2, 8)])
+            h = eng.registry.get("g", 2)
+            assert got[0] == frozenset(h.pecb.query(0, 1, 9))
+
+    def test_warmup_precompiles_all_buckets(self):
+        g = gen_temporal_graph(n=30, m=200, t_max=12, seed=34)
+        cfg = EngineConfig(max_batch=32, flush_ms=1000.0, host_threshold=0,
+                           min_bucket=8, cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            eng.warmup("g", 2)                   # buckets 8, 16, 32
+            c0 = ShardedExecutor.compile_count()
+            rng = np.random.default_rng(1)
+            for n_q in (2, 7, 12, 20, 32):
+                futs = eng.submit_many("g", 2, random_stream(g, n_q, rng, 0.0))
+                eng.flush()
+                [f.result(timeout=60) for f in futs]
+                eng.drain()
+            assert ShardedExecutor.compile_count() == c0
+
+
+class TestPlannerRouting:
+    def test_straggler_goes_host_big_goes_device(self):
+        g = gen_temporal_graph(n=30, m=200, t_max=12, seed=11)
+        rng = np.random.default_rng(4)
+        cfg = EngineConfig(max_batch=64, flush_ms=1000.0, host_threshold=8,
+                           cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 2)
+            small = random_stream(g, 3, rng, 0.0)
+            futs = eng.submit_many("g", 2, small)
+            eng.flush(); res_small = [f.result(timeout=60) for f in futs]
+            eng.drain()
+            assert eng.metrics.counter("host_batches") == 1
+            assert eng.metrics.counter("device_batches") == 0
+            big = random_stream(g, 40, rng, 0.0)
+            futs = eng.submit_many("g", 2, big)
+            eng.flush(); res_big = [f.result(timeout=60) for f in futs]
+            eng.drain()
+            assert eng.metrics.counter("device_batches") == 1
+            # both routes exact
+            for (u, ts, te), r in zip(small + big, res_small + res_big):
+                assert r == frozenset(h.pecb.query(u, ts, te))
+
+
+class TestRegistry:
+    def test_memoize_and_evict(self):
+        reg = IndexRegistry(capacity=2)
+        g1 = gen_temporal_graph(n=20, m=100, t_max=8, seed=1)
+        g2 = gen_temporal_graph(n=20, m=100, t_max=8, seed=2)
+        reg.register_graph("g1", g1); reg.register_graph("g2", g2)
+        h = reg.get("g1", 2)
+        assert reg.get("g1", 2) is h             # memoized
+        assert reg.builds == 1
+        reg.get("g1", 3)                         # second resident
+        reg.get("g2", 2)                         # evicts ("g1", 2): LRU
+        assert reg.evictions == 1
+        assert ("g1", 2) not in reg
+        h2 = reg.get("g1", 2)                    # rebuild
+        assert h2 is not h and reg.builds == 4
+
+    def test_rebinding_graph_name_raises(self):
+        reg = IndexRegistry()
+        g1 = gen_temporal_graph(n=15, m=60, t_max=6, seed=1)
+        g2 = gen_temporal_graph(n=15, m=60, t_max=6, seed=2)
+        reg.register_graph("g", g1)
+        reg.register_graph("g", g1)              # same object: no-op
+        with pytest.raises(ValueError, match="immutable"):
+            reg.register_graph("g", g2)
+
+    def test_eviction_hook_fires_outside_lock(self):
+        evicted = []
+        reg = IndexRegistry(capacity=1,
+                            on_evict=lambda k, h: evicted.append((k, reg.stats())))
+        g = gen_temporal_graph(n=15, m=80, t_max=6, seed=3)
+        reg.register_graph("g", g)
+        reg.get("g", 2)
+        reg.get("g", 3)                          # evicts ("g", 2)
+        assert [k for (k, _) in evicted] == [("g", 2)]
+        # the hook could re-enter the registry (stats() takes the lock)
+
+    def test_engine_retires_batcher_on_eviction(self):
+        g1 = gen_temporal_graph(n=20, m=100, t_max=8, seed=1)
+        g2 = gen_temporal_graph(n=20, m=100, t_max=8, seed=2)
+        cfg = EngineConfig(flush_ms=200.0, registry_capacity=1,
+                           cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g1", g1)
+            eng.register_graph("g2", g2)
+            eng.query("g1", 2, 0, 1, 6)
+            assert ("g1", 2) in eng._batchers
+            eng.query("g2", 2, 0, 1, 6)          # evicts ("g1", 2)
+            assert ("g1", 2) not in eng._batchers
+            assert ("g2", 2) in eng._batchers
+            # re-query after eviction: rebuild + fresh batcher, exact answer
+            h1 = eng.registry.get("g1", 2)
+            assert eng.query("g1", 2, 3, 1, 6) == frozenset(h1.pecb.query(3, 1, 6))
+
+    def test_shared_registry_retires_batchers_in_every_engine(self):
+        g1 = gen_temporal_graph(n=20, m=100, t_max=8, seed=1)
+        g2 = gen_temporal_graph(n=20, m=100, t_max=8, seed=2)
+        reg = IndexRegistry(capacity=1)
+        reg.register_graph("g1", g1); reg.register_graph("g2", g2)
+        cfg = EngineConfig(flush_ms=100.0, cache_capacity=0)
+        with ServingEngine(cfg, registry=reg) as a, \
+             ServingEngine(cfg, registry=reg) as b:
+            a.query("g1", 2, 0, 1, 6)
+            b.query("g1", 2, 1, 1, 6)
+            assert ("g1", 2) in a._batchers and ("g1", 2) in b._batchers
+            a.query("g2", 2, 0, 1, 6)        # evicts ("g1", 2)
+            assert ("g1", 2) not in a._batchers
+            assert ("g1", 2) not in b._batchers   # B's listener fired too
+
+    def test_unknown_workload_raises(self):
+        with pytest.raises(KeyError):
+            IndexRegistry().get("no_such_graph", 2)
+
+    def test_bench_workload_resolves_by_name(self):
+        reg = IndexRegistry()
+        g = reg.resolve_graph("fb_like")
+        assert g.n == 300
+
+
+class TestBatcher:
+    def test_deadline_flush(self):
+        b = MicroBatcher(lambda reqs: [len(reqs)] * len(reqs),
+                         max_batch=64, flush_ms=30.0)
+        try:
+            fut = b.submit(Request(0, 1, 1, Future(), time.perf_counter()))
+            assert fut.result(timeout=5) == 1    # deadline fired, batch of 1
+        finally:
+            b.close()
+
+    def test_full_batch_flushes_immediately(self):
+        b = MicroBatcher(lambda reqs: [len(reqs)] * len(reqs),
+                         max_batch=4, flush_ms=10_000.0)
+        try:
+            t0 = time.perf_counter()
+            futs = b.submit_many([Request(i, 1, 1, Future(), t0) for i in range(4)])
+            assert [f.result(timeout=5) for f in futs] == [4] * 4
+            assert time.perf_counter() - t0 < 5.0   # did not wait 10s
+        finally:
+            b.close()
+
+    def test_idle_flush_does_not_leak_into_next_deadline(self):
+        b = MicroBatcher(lambda reqs: [len(reqs)] * len(reqs),
+                         max_batch=64, flush_ms=500.0)
+        try:
+            b.flush()                            # idle: must be a no-op
+            fut = b.submit(Request(0, 1, 1, Future(), time.perf_counter()))
+            time.sleep(0.1)
+            assert not fut.done()                # still inside the window
+            b.flush()
+            assert fut.result(timeout=5) == 1
+        finally:
+            b.close()
+
+    def test_execute_error_fails_futures(self):
+        def boom(reqs):
+            raise ValueError("kaput")
+        b = MicroBatcher(boom, max_batch=4, flush_ms=5.0)
+        try:
+            fut = b.submit(Request(0, 1, 1, Future(), time.perf_counter()))
+            with pytest.raises(ValueError, match="kaput"):
+                fut.result(timeout=5)
+        finally:
+            b.close()
+
+    def test_close_flushes_pending(self):
+        b = MicroBatcher(lambda reqs: [r.u for r in reqs],
+                         max_batch=64, flush_ms=10_000.0)
+        futs = b.submit_many([Request(i, 1, 1, Future(), time.perf_counter())
+                              for i in range(3)])
+        b.close()
+        assert [f.result(timeout=1) for f in futs] == [0, 1, 2]
+
+
+class TestMetrics:
+    def test_histogram_percentiles(self):
+        h = LatencyHistogram()
+        for i in range(1, 101):
+            h.add(i / 1e3)                       # 1..100 ms
+        s = h.summary()
+        assert s["count"] == 100
+        assert abs(s["p50_ms"] - 50) <= 2
+        assert abs(s["p95_ms"] - 95) <= 2
+        assert abs(s["p99_ms"] - 99) <= 2
+        assert abs(s["mean_ms"] - 50.5) < 0.1
+
+    def test_engine_records_stages(self):
+        g = gen_temporal_graph(n=20, m=120, t_max=8, seed=6)
+        with ServingEngine(EngineConfig(flush_ms=200.0, host_threshold=0,
+                                        cache_capacity=8)) as eng:
+            eng.register_graph("g", g)
+            run_engine(eng, "g", 2, [(1, 1, 5), (2, 1, 5)])
+            eng.submit("g", 2, 1, 1, 5).result(timeout=10)  # cache hit
+            snap = eng.stats()
+            lat = snap["engine"]["latency"]
+            assert lat["e2e"]["count"] == 3
+            assert lat["queue_wait"]["count"] == 2
+            assert "device_exec" in lat
+            assert snap["engine"]["counters"]["cache_hits"] == 1
+            assert snap["cache"]["size"] == 2
+            assert snap["devices"] >= 1
+
+
+@pytest.mark.slow
+def test_engine_multi_device_sharded():
+    """The whole engine under a forced 8-CPU-device topology: the executor
+    takes the sharded path and answers stay exact."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        import jax
+        assert jax.device_count() == 8
+        from repro.core.temporal_graph import gen_temporal_graph
+        from repro.serving import EngineConfig, ServingEngine
+        g = gen_temporal_graph(n=40, m=250, t_max=15, seed=1)
+        cfg = EngineConfig(max_batch=64, flush_ms=500.0, host_threshold=0,
+                           cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            assert eng.executor.num_devices == 8
+            assert eng.executor.batch_sharding is not None
+            eng.register_graph("g", g)
+            h = eng.registry.get("g", 2)
+            rng = np.random.default_rng(0)
+            qs = [(int(rng.integers(0, g.n)), int(rng.integers(1, g.t_max)),
+                   int(rng.integers(1, g.t_max + 1))) for _ in range(48)]
+            futs = eng.submit_many("g", 2, qs)
+            eng.flush()
+            got = [f.result(timeout=120) for f in futs]
+            for (u, ts, te), res in zip(qs, got):
+                assert res == frozenset(h.pecb.query(u, ts, te))
+        print("sharded engine ok")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "sharded engine ok" in res.stdout
