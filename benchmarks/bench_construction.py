@@ -1,0 +1,81 @@
+"""Construction-plane benchmark: PR-1 baseline vs the batched engines.
+
+The paper's headline claim is construction cost (ECB builds up to 100x
+faster than EF); this bench tracks *our own* construction trajectory across
+PRs. Both planes are measured cold in the same run so the speedup column is
+self-contained:
+
+* ``pr1`` — the seed path: per-start-time projection + lexsort fixpoint
+  (``edge_core_times(engine="legacy")``) and the per-version Python insert
+  loop (``IncrementalBuilder(prefilter=False)``).
+* ``batched`` — the PR-2 plane: precomputed pair-CSR/t_uv sweep engine
+  (host or jitted JAX, ``engine="auto"``), MSF-prefiltered builder, and the
+  lexsort ``pack_index``.
+
+The two planes are asserted to produce identical ``CoreTimeTable``s (all
+five arrays) and identical packed indexes before any number is reported —
+a benchmark of a wrong answer is worthless.
+
+CSV: ``construction_plane.csv``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.core_time import edge_core_times
+from repro.core.ecb_forest import IncrementalBuilder
+from repro.core.pecb_index import pack_index
+
+from .common import default_k, timed, workload, write_csv
+
+WORKLOADS = ["fb_like", "cm_like", "em_like", "mo_like", "wk_like"]
+
+_TABLE_FIELDS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+
+
+def _assert_identical(name, tab_old, tab_new, idx_old, idx_new):
+    for f in _TABLE_FIELDS:
+        if not np.array_equal(getattr(tab_old, f), getattr(tab_new, f)):
+            raise AssertionError(f"{name}: CoreTimeTable.{f} differs between "
+                                 "the legacy and batched construction planes")
+    import dataclasses
+    for f in dataclasses.fields(idx_old):
+        va, vb = getattr(idx_old, f.name), getattr(idx_new, f.name)
+        same = np.array_equal(va, vb) if isinstance(va, np.ndarray) else va == vb
+        if not same:
+            raise AssertionError(f"{name}: PECBIndex.{f.name} differs between "
+                                 "the two construction planes")
+
+
+def bench_construction_plane(workloads=WORKLOADS):
+    rows = []
+    for name in workloads:
+        k = default_k(name)
+        g = workload(name)
+        # -- PR-1 baseline (cold, measured first) -----------------------
+        tab_old, t_core_old = timed(edge_core_times, g, k, engine="legacy")
+        b_old, t_forest_old = timed(
+            lambda: IncrementalBuilder(g, tab_old, prefilter=False).run())
+        idx_old, t_pack_old = timed(pack_index, g, k, b_old)
+        old_s = t_core_old + t_forest_old + t_pack_old
+        # -- batched plane (cold: includes any jit compile) -------------
+        tab_new, t_core_new = timed(edge_core_times, g, k)
+        b_new, t_forest_new = timed(
+            lambda: IncrementalBuilder(g, tab_new).run())
+        idx_new, t_pack_new = timed(pack_index, g, k, b_new)
+        new_s = t_core_new + t_forest_new + t_pack_new
+        _assert_identical(name, tab_old, tab_new, idx_old, idx_new)
+        rows.append([
+            name, k,
+            round(t_core_old, 4), round(t_forest_old + t_pack_old, 4),
+            round(old_s, 4),
+            round(t_core_new, 4), round(t_forest_new + t_pack_new, 4),
+            round(new_s, 4),
+            round(old_s / new_s, 2),
+        ])
+    write_csv("construction_plane.csv",
+              ["workload", "k", "pr1_core_s", "pr1_forest_s", "pr1_total_s",
+               "batched_core_s", "batched_forest_s", "batched_total_s",
+               "speedup"], rows)
+    return rows

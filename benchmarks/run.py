@@ -22,12 +22,17 @@ def main(argv=None):
                     help="small workloads only (CI)")
     args = ap.parse_args(argv)
 
+    from . import bench_construction as bc
     from . import bench_paper as bp
     from . import bench_engine as be
 
     workloads = ["fb_like", "cm_like"] if args.fast else bp.WORKLOADS
 
     t0 = time.time()
+    _emit("Construction plane: PR-1 vs batched (cold, same run)",
+          ["workload", "k", "pr1_core_s", "pr1_forest_s", "pr1_total_s",
+           "batched_core_s", "batched_forest_s", "batched_total_s", "speedup"],
+          bc.bench_construction_plane(workloads))
     _emit("Index space (Fig 4)",
           ["workload", "k", "pecb_bytes", "ctmsf_bytes", "ef_bytes", "ef/pecb"],
           bp.bench_index_size(workloads))

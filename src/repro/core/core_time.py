@@ -12,17 +12,40 @@ DESIGN.md §3):
           (t_uv = earliest timestamp >= ts among parallel (u,v) edges),
     c_v = INF when v has < k distinct neighbours in [ts, t_max].
 
-Iterating this monotone operator from the lower bound ``c0_v`` = k-th
-smallest ``t_uv`` converges to the least fixpoint, which equals the true
-vertex core times: for any fixpoint c* and any te, S = {v : c*_v <= te}
-induces a subgraph of G_[ts,te] with min degree >= k, so S is inside the true
-k-core (hence true <= c*); Kleene iteration from below yields the least
-fixpoint (hence <= true). Edge core times follow as
+Iterating this monotone operator from a lower bound converges to the least
+fixpoint, which equals the true vertex core times: for any fixpoint c* and
+any te, S = {v : c*_v <= te} induces a subgraph of G_[ts,te] with min degree
+>= k, so S is inside the true k-core (hence true <= c*); Kleene iteration
+from below yields the least fixpoint (hence <= true). We iterate the
+*clamped* operator ``c <- max(c, kth(w))``: iterates are then monotone, stay
+below the least fixpoint, and a converged point is simultaneously a pre- and
+post-fixpoint, hence the least fixpoint itself. Edge core times follow as
 ``CT(e)_ts = max(t_e, c_u, c_v)`` (§5: "the larger one among the core times
 of its terminal vertices", plus window membership t_e >= ts).
 
-Start times are processed ascending with warm starts: c_{ts} is a valid lower
-bound for c_{ts+1} because shrinking the window only raises core times.
+Construction plane (PR 2): the per-start-time projection + lexsort loop of
+the seed became the *batched sweep* engines below. All engines share one
+precomputed structure (`_PairCSR` + blockwise `_tuv_rows` of per-pair
+earliest timestamps >= ts) and one inner op (segmented k-th-smallest
+selection, `kernels/segmented_select.py`), and run the sweep ts = 1..t_max
+with warm-started lower bounds (c_{ts-1} <= c_ts because shrinking the
+window only raises core times):
+
+* ``engine="host"`` — vectorized numpy sweep: per iteration one in-place
+  packed sort (segment-id packed into the key's high bits) gives both the
+  fixpoint *verification* (a searchsorted rank probe: c is converged iff
+  count(w <= c_v) >= k) and, when not converged, the k-th smallest climb.
+* ``engine="jax"`` — one jitted launch sweeps a whole block of start times
+  (`lax.scan` over ts, warm carry across blocks); the inner op is the
+  counting-bisection segmented select, with a `lax.cond`-gated climb so
+  converged start times pay a single verification pass. This is the
+  device-plane path (Pallas counter selectable via ``use_pallas``).
+* ``engine="legacy"`` — the seed's per-ts numpy lexsort loop, kept as the
+  differential-testing oracle and the PR-1 benchmark baseline.
+
+All engines produce bit-identical ``CoreTimeTable``s (the least fixpoint is
+unique; tests assert array equality), delta-compressed by the shared
+vectorized run-length `_compress`.
 """
 
 from __future__ import annotations
@@ -33,6 +56,79 @@ import numpy as np
 
 from .temporal_graph import TemporalGraph
 
+
+# ----------------------------------------------------------------------
+# Shared precomputed structure: directed distinct-pair CSR + t_uv table
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _PairCSR:
+    """Doubled (directed) distinct-pair CSR over *all* edges, pairs sorted
+    by (src, dst), per-pair timestamps ascending. Built once per (g,)."""
+
+    src: np.ndarray      # int32[E] pair source, non-decreasing
+    dst: np.ndarray      # int32[E]
+    ptr: np.ndarray      # int64[E+1] pair -> slots in tsorted
+    tsorted: np.ndarray  # int32[2m] per-pair ascending timestamps
+    vptr: np.ndarray     # int64[n+1] vertex -> pair rows (CSR over src)
+    pidx: np.ndarray     # int64[2m] slot -> pair (inverse of ptr)
+
+
+def _pair_csr(g: TemporalGraph) -> _PairCSR:
+    n = g.n
+    s = np.concatenate([g.src, g.dst]).astype(np.int64)
+    d = np.concatenate([g.dst, g.src]).astype(np.int64)
+    t = np.concatenate([g.t, g.t]).astype(np.int64)
+    key = s * n + d
+    order = np.lexsort((t, key))
+    key, t = key[order], t[order]
+    first = np.ones(key.shape[0], bool)
+    first[1:] = key[1:] != key[:-1]
+    starts = np.flatnonzero(first)
+    ptr = np.concatenate([starts, [key.shape[0]]]).astype(np.int64)
+    pkey = key[first]
+    src = (pkey // n).astype(np.int32)
+    vptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=vptr[1:])
+    pidx = np.repeat(np.arange(ptr.shape[0] - 1), np.diff(ptr))
+    return _PairCSR(src, (pkey % n).astype(np.int32), ptr,
+                    t.astype(np.int32), vptr, pidx)
+
+
+#: ts rows materialized per t_uv block: bounds sweep scratch at O(BLOCK * E)
+TUV_BLOCK = 256
+
+
+def _tuv_rows(csr: _PairCSR, ts0: int, ts1: int, t_max: int) -> np.ndarray:
+    """int32[ts1-ts0, E]: row i = earliest pair timestamp >= ts0+i (INF when
+    none). Blocked so the sweep never holds the full (t_max, E) table: a
+    global searchsorted seeds row ts1, block-local events + one reverse
+    running-min fill the rest."""
+    E = csr.ptr.shape[0] - 1
+    inf = t_max + 1
+    # stored descending (row i = ts1 - i) so the running min walks forward
+    # over contiguous memory; the caller gets an ascending reversed view
+    rev = np.full((ts1 - ts0 + 1, E), inf, np.int32)
+    if E == 0:
+        return rev[1:]
+    # seed (row 0): earliest timestamp >= ts1 per pair. tsorted is sorted
+    # by (pair, t), so pair*stride + t is globally sorted and one
+    # searchsorted answers every pair at once.
+    stride = np.int64(t_max + 2)
+    packed = csr.pidx * stride + csr.tsorted
+    pos = np.searchsorted(packed, np.arange(E, dtype=np.int64) * stride + ts1)
+    valid = pos < csr.ptr[1:]
+    rev[0, valid] = csr.tsorted[pos[valid]]
+    # events inside [ts0, ts1), then running min toward ts0
+    ev = (csr.tsorted >= ts0) & (csr.tsorted < ts1)
+    rev[ts1 - csr.tsorted[ev], csr.pidx[ev]] = csr.tsorted[ev]
+    np.minimum.accumulate(rev, axis=0, out=rev)
+    return rev[1:][::-1]
+
+
+# ----------------------------------------------------------------------
+# Legacy per-ts fixpoint (seed implementation; oracle + PR-1 baseline)
+# ----------------------------------------------------------------------
 
 def _simple_projection(g: TemporalGraph, ts: int):
     """Doubled (directed) simple-graph arrays for window [ts, t_max]:
@@ -54,7 +150,10 @@ def _simple_projection(g: TemporalGraph, ts: int):
 
 def vertex_core_times(g: TemporalGraph, k: int, ts: int,
                       warm: np.ndarray | None = None) -> np.ndarray:
-    """int64[n] vertex core times for start time ts (INF = t_max + 1)."""
+    """int64[n] vertex core times for start time ts (INF = t_max + 1).
+
+    The seed's per-ts numpy lexsort fixpoint, kept verbatim: the batched
+    engines are asserted bit-identical against it."""
     INF = g.t_max + 1
     src_d, dst_d, t_d = _simple_projection(g, ts)
     n = g.n
@@ -83,6 +182,10 @@ def vertex_core_times(g: TemporalGraph, k: int, ts: int,
         c = c_new
 
 
+# ----------------------------------------------------------------------
+# Compressed table
+# ----------------------------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class CoreTimeTable:
     """Compressed core times for all start times (paper Table 1 layout).
@@ -90,16 +193,19 @@ class CoreTimeTable:
     Version records, sorted by (edge_id, ts_from): edge ``edge_id`` has core
     time ``ct`` for every start time in ``[ts_from, ts_to]`` (inclusive);
     ``ts_to`` is the paper's ``lst``. Only finite-CT versions are stored.
+    All values are bounded by ``max(t_max + 1, m)``, so records are stored
+    int32; ``nbytes`` is the paper's index-size metric and sums the actual
+    bytes of the stored version arrays (mirroring ``PECBIndex.nbytes``).
     """
 
     n: int
     m: int
     t_max: int
-    edge_id: np.ndarray   # int64[R]
-    ts_from: np.ndarray   # int64[R]
-    ts_to: np.ndarray     # int64[R]  (lst)
-    ct: np.ndarray        # int64[R]
-    vertex_ct: np.ndarray  # int64[t_max + 1, n]; row ts = vertex core times
+    edge_id: np.ndarray   # int32[R]
+    ts_from: np.ndarray   # int32[R]
+    ts_to: np.ndarray     # int32[R]  (lst)
+    ct: np.ndarray        # int32[R]
+    vertex_ct: np.ndarray  # int32[t_max + 1, n]; row ts = vertex core times
 
     @property
     def INF(self) -> int:
@@ -110,9 +216,10 @@ class CoreTimeTable:
         return int(self.edge_id.shape[0])
 
     def nbytes(self) -> int:
-        """Index-size accounting for the compressed core-time table alone
-        (4 int32 words per version record)."""
-        return self.num_versions * 16
+        """True byte size of the stored version arrays (the compressed
+        core-time table alone, excluding the dense vertex_ct matrix)."""
+        return int(self.edge_id.nbytes + self.ts_from.nbytes
+                   + self.ts_to.nbytes + self.ct.nbytes)
 
     def ct_at(self, edge: int, ts: int) -> int:
         """CT(edge)_ts by scanning this edge's versions (test helper)."""
@@ -121,12 +228,196 @@ class CoreTimeTable:
         return int(self.ct[idx[0]]) if idx.size else self.INF
 
 
-def edge_core_times(g: TemporalGraph, k: int) -> CoreTimeTable:
-    """Compute CT(e)_ts for every edge and start time, delta-compressed."""
+def _as_table(g: TemporalGraph, edge_id, ts_from, ts_to, ct,
+              vct) -> CoreTimeTable:
+    i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    return CoreTimeTable(g.n, g.m, g.t_max, i32(edge_id), i32(ts_from),
+                         i32(ts_to), i32(ct), i32(vct))
+
+
+# ----------------------------------------------------------------------
+# Vectorized delta-compression (shared by every engine)
+# ----------------------------------------------------------------------
+
+def _compress(g: TemporalGraph, vct: np.ndarray,
+              edge_chunk: int = 8192) -> CoreTimeTable:
+    """Version records from the dense (t_max+1, n) vertex-core-time matrix.
+
+    Per edge, CT rows over ts form maximal constant runs; finite runs are
+    the stored versions. Edge-major run detection keeps the output exactly
+    in the legacy path's (edge_id, ts_from) lexsort order. Chunked over
+    edges to bound the (T, chunk) scratch."""
+    t_max, m = g.t_max, g.m
+    inf = t_max + 1
+    if t_max == 0 or m == 0:
+        z = np.zeros(0, np.int32)
+        return _as_table(g, z, z, z, z, vct)
+    ts_row = np.arange(1, t_max + 1, dtype=np.int32)[None, :]
+    vct_t = np.ascontiguousarray(vct[1:].T)               # (n, T) row-major
+    recs = []
+    for lo in range(0, m, edge_chunk):
+        hi = min(lo + edge_chunk, m)
+        su = g.src[lo:hi].astype(np.int64)
+        sv = g.dst[lo:hi].astype(np.int64)
+        st = g.t[lo:hi].astype(np.int32)
+        ctm = np.maximum(vct_t[su], vct_t[sv])            # (B, T) edge-major
+        np.maximum(ctm, st[:, None], out=ctm)
+        np.minimum(ctm, inf, out=ctm)
+        ctm[ts_row > st[:, None]] = inf                   # edge outside window
+        flat = ctm.reshape(-1)
+        start = np.empty(flat.shape[0], bool)
+        start[0] = True
+        np.not_equal(flat[1:], flat[:-1], out=start[1:])
+        start[::t_max] = True                             # runs never span edges
+        sidx = np.flatnonzero(start)
+        vals = flat[sidx]
+        nxt = np.empty_like(sidx)
+        nxt[:-1] = sidx[1:]
+        nxt[-1] = flat.shape[0]
+        keep = vals < inf
+        sidx, nxt, vals = sidx[keep], nxt[keep], vals[keep]
+        recs.append((sidx // t_max + lo, sidx % t_max + 1,
+                     (nxt - 1) % t_max + 1, vals))
+    edge_id = np.concatenate([r[0] for r in recs])
+    ts_from = np.concatenate([r[1] for r in recs])
+    ts_to = np.concatenate([r[2] for r in recs])
+    ct = np.concatenate([r[3] for r in recs])
+    return _as_table(g, edge_id, ts_from, ts_to, ct, vct)
+
+
+# ----------------------------------------------------------------------
+# Host engine: vectorized numpy sweep (default on CPU-only backends)
+# ----------------------------------------------------------------------
+
+def _sweep_host(g: TemporalGraph, k: int) -> np.ndarray:
+    """(t_max+1, n) int32 vertex core times for every start time.
+
+    Per iteration one in-place sort of segment-packed keys serves both the
+    convergence probe (searchsorted rank test) and the k-th-smallest climb;
+    warm starts make most start times converge in a single iteration."""
+    n, t_max = g.n, g.t_max
+    inf = t_max + 1
+    vct = np.full((t_max + 1, n), inf, np.int32)
+    if g.m == 0 or t_max == 0:
+        return vct
+    csr = _pair_csr(g)
+    deg = np.diff(csr.vptr)
+    has_k = deg >= k
+    sel = csr.vptr[:-1][has_k] + (k - 1)
+    # segment id packed into high bits: one flat sort orders every segment
+    S = 1
+    while S < inf + 2:
+        S *= 2
+    kdtype = np.int32 if n * S < 2 ** 31 else np.int64
+    base = (csr.src.astype(np.int64) * S).astype(kdtype)
+    vbase = (np.arange(n, dtype=np.int64) * S).astype(kdtype)
+    pd = csr.dst.astype(np.int64)
+    vstart = csr.vptr[:-1]
+
+    c = np.zeros(n, np.int32)
+    for ts0 in range(1, t_max + 1, TUV_BLOCK):
+        ts1 = min(ts0 + TUV_BLOCK, t_max + 1)
+        tuv_rows = _tuv_rows(csr, ts0, ts1, t_max)
+        for ts in range(ts0, ts1):
+            tuv = tuv_rows[ts - ts0]
+            while True:
+                w = np.maximum(tuv, c[pd]).astype(kdtype, copy=False)
+                key = base + w
+                key.sort()
+                # count(w <= c_v) per segment: rank probe in the sorted keys
+                cnt = np.searchsorted(key, vbase + c + 1) - vstart
+                if bool(((cnt >= k) | (c >= inf)).all()):
+                    break
+                c_new = np.full(n, inf, np.int32)
+                c_new[has_k] = (key[sel] & (S - 1)) if kdtype == np.int32 \
+                    else key[sel] % S
+                np.minimum(c_new, inf, out=c_new)
+                np.maximum(c, c_new, out=c)
+            vct[ts] = c
+    return vct
+
+
+# ----------------------------------------------------------------------
+# JAX engine: jitted multi-start-time sweep (device plane)
+# ----------------------------------------------------------------------
+
+def _sweep_jax(g: TemporalGraph, k: int, *, block: int = 512,
+               use_pallas: bool = False) -> np.ndarray:
+    """Same least fixpoint as `_sweep_host`, as a jitted `lax.scan` over a
+    block of start times per launch (warm carry across launches). Each ts
+    runs verification + a `lax.cond`-gated counting-bisection climb, so
+    already-converged start times cost one segmented count."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.segmented_select import (count_le_csr,
+                                                kth_smallest_csr,
+                                                segmented_count_le)
+
+    n, t_max = g.n, g.t_max
+    inf = t_max + 1
+    vct = np.full((t_max + 1, n), inf, np.int32)
+    if g.m == 0 or t_max == 0:
+        return vct
+    csr = _pair_csr(g)
+    ksteps = int(np.ceil(np.log2(inf + 1))) + 1
+
+    if use_pallas:
+        # interpret only where no real Pallas backend exists (CPU testing)
+        interpret = jax.default_backend() == "cpu"
+
+        def count_fn(w, thr, seg, vptr):
+            return segmented_count_le(w, seg, thr, n, interpret=interpret)
+    else:
+        count_fn = count_le_csr
+
+    @functools.partial(jax.jit, static_argnums=(0, 1, 2))
+    def sweep(k, inf, ksteps, tuv_rows, seg, dst, vptr, c0):
+        def per_ts(c, tuv):
+            def body(state):
+                c, _ = state
+                w = jnp.maximum(tuv, c[dst])
+                cnt = count_fn(w, c, seg, vptr)
+                need = ~jnp.all((cnt >= k) | (c >= inf))
+                c = jax.lax.cond(
+                    need,
+                    lambda c: kth_smallest_csr(w, c, k, inf, ksteps, seg,
+                                               vptr, count_fn=count_fn),
+                    lambda c: c, c)
+                return c, need
+
+            c, _ = jax.lax.while_loop(lambda s: s[1], body,
+                                      (c, jnp.array(True)))
+            return c, c
+
+        return jax.lax.scan(per_ts, c0, tuv_rows)
+
+    seg = jnp.asarray(csr.src.astype(np.int32))
+    dst = jnp.asarray(csr.dst.astype(np.int32))
+    vptr = jnp.asarray(csr.vptr.astype(np.int32))
+    c = jnp.zeros(n, jnp.int32)
+    for ts0 in range(1, t_max + 1, block):
+        hi = min(ts0 + block, t_max + 1)
+        rows = jnp.asarray(_tuv_rows(csr, ts0, hi, t_max))
+        c, out = sweep(k, inf, ksteps, rows, seg, dst, vptr, c)
+        vct[ts0:hi] = np.asarray(out)
+    return vct
+
+
+# ----------------------------------------------------------------------
+# Engine dispatch
+# ----------------------------------------------------------------------
+
+def _edge_core_times_legacy(g: TemporalGraph, k: int) -> CoreTimeTable:
+    """The seed's construction loop (PR-1 baseline): per-ts projection +
+    lexsort fixpoint, incremental version bookkeeping."""
     t_max = g.t_max
     INF = t_max + 1
     m = g.m
-    su, sv, st = g.src.astype(np.int64), g.dst.astype(np.int64), g.t.astype(np.int64)
+    su, sv, st = (g.src.astype(np.int64), g.dst.astype(np.int64),
+                  g.t.astype(np.int64))
 
     cur = np.full(m, -1, np.int64)          # current CT per edge (-1 = unseen)
     open_from = np.zeros(m, np.int64)       # ts at which `cur` became valid
@@ -168,10 +459,43 @@ def edge_core_times(g: TemporalGraph, k: int) -> CoreTimeTable:
         ts_to = np.concatenate(recs_b)
         ct = np.concatenate(recs_c)
         order = np.lexsort((ts_from, edge_id))
-        edge_id, ts_from, ts_to, ct = edge_id[order], ts_from[order], ts_to[order], ct[order]
+        edge_id, ts_from, ts_to, ct = (edge_id[order], ts_from[order],
+                                       ts_to[order], ct[order])
     else:
         edge_id = ts_from = ts_to = ct = np.zeros(0, np.int64)
-    return CoreTimeTable(g.n, m, t_max, edge_id, ts_from, ts_to, ct, vct[: t_max + 1])
+    return _as_table(g, edge_id, ts_from, ts_to, ct, vct[: t_max + 1])
+
+
+ENGINES = ("auto", "host", "jax", "jax_pallas", "legacy")
+
+
+def edge_core_times(g: TemporalGraph, k: int, *,
+                    engine: str = "auto") -> CoreTimeTable:
+    """Compute CT(e)_ts for every edge and start time, delta-compressed.
+
+    ``engine="auto"`` picks the jitted sweep when a non-CPU JAX backend is
+    present and the vectorized host sweep otherwise (XLA CPU lowers the
+    sweep's sorts/scans poorly; the host engine is the same formulation in
+    numpy). ``"jax_pallas"`` is the jitted sweep with the Pallas tile
+    counter as the selection inner op (compiled on device backends,
+    interpreted on CPU). All engines return bit-identical tables.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}, expected one of {ENGINES}")
+    if engine == "auto":
+        try:
+            import jax
+            backend = jax.default_backend()
+        except Exception:  # pragma: no cover - jax is a hard dep in practice
+            backend = "cpu"
+        engine = "jax" if backend != "cpu" else "host"
+    if engine == "legacy":
+        return _edge_core_times_legacy(g, k)
+    if engine == "host":
+        vct = _sweep_host(g, k)
+    else:
+        vct = _sweep_jax(g, k, use_pallas=(engine == "jax_pallas"))
+    return _compress(g, vct)
 
 
 # ----------------------------------------------------------------------

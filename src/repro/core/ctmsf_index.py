@@ -33,7 +33,7 @@ class _VertexCentricBuilder(IncrementalBuilder):
 
     def flush(self, ts: int):
         for vert in self._dirty_verts:
-            cur = tuple(node for (_, _, node) in self.inc[vert])
+            cur = tuple(self._inc_node[vert])
             ent = self.vlists[vert]
             if not ent or ent[-1][1] != cur:
                 ent.append((ts, cur))
@@ -46,9 +46,10 @@ class CTMSFIndex:
         self.k = k
         tab = tab if tab is not None else edge_core_times(g, k)
         b = _VertexCentricBuilder(g, tab).run()
-        self.node_u = np.asarray(b.n_u, np.int32)
-        self.node_v = np.asarray(b.n_v, np.int32)
-        self.node_ct = np.asarray(b.n_ct, np.int32)
+        N = b.num_nodes
+        self.node_u = np.asarray(b.n_u[:N], np.int32)
+        self.node_v = np.asarray(b.n_v[:N], np.int32)
+        self.node_ct = np.asarray(b.n_ct[:N], np.int32)
         # ascending-ts order for binary search
         self.vlists = [ent[::-1] for ent in b.vlists]
 

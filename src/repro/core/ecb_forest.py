@@ -4,7 +4,9 @@ Forest nodes are *versions*: (graph edge, core time) pairs — the paper treats
 an edge whose core time changes as a new parallel edge (Table 2: e10/e11).
 Rank is the paper's total order: ``(CT, edge_id)`` ascending (edge ids are
 assigned in ``(t, u, v)`` order by :class:`TemporalGraph`, matching the
-paper's tie-break and its Table 2 numbering).
+paper's tie-break and its Table 2 numbering). Internally ranks are packed as
+``ct * (m + 1) + edge_id`` in int64 so one scalar compare replaces the tuple
+compare.
 
 Two constructions are provided:
 
@@ -25,6 +27,31 @@ Two constructions are provided:
   (ts = 4, 3, 2): reproduces every entry including the e11 expiry, the e10
   skip, and the e12 LCA deletion; also tested against
   :func:`build_forest_at` on random graphs for every start time.
+
+PR 2 rebuilt the builder's hot structures as numpy-backed stores:
+
+* the node table is a set of preallocated flat arrays (one slot per version
+  record — an upper bound on inserts), not per-node Python lists;
+* per-vertex incidence is a pair of parallel sorted lists of *packed int
+  ranks* + node ids (C bisect/insort; no tuple allocation, and for the tiny
+  lists a live forest produces, cheaper than numpy's per-scalar
+  searchsorted overhead);
+* delta entries go to flat append buffers deduplicated against a packed
+  ``last recorded (l, r, p)`` array; ``pack_index`` turns them into the CSR
+  arrays with one lexsort instead of a per-node Python loop;
+* a bulk *MSF prefilter* (Def 4.9: the forest at any start time is the
+  unique rank-MSF of the active versions, the invariant
+  ``tests/test_system.py::test_incremental_equals_from_scratch`` asserts)
+  rejects the ~95+% of candidate versions that join no MSF before they ever
+  reach the Python insert path. ``insert`` keeps its own cycle check, so the
+  prefilter is a pure accelerator: a false *accept* costs one wasted insert
+  attempt; false rejects cannot occur (the MSF is exact). Small inputs run
+  a direct Kruskal (the fixed sparse-matrix cost dominates there); large
+  ones use scipy's C MSF, or Kruskal again when scipy is unavailable.
+
+Invariant violations raise :class:`ForestInvariantError` instead of bare
+``assert`` (which vanishes under ``python -O`` and would corrupt the index
+silently).
 """
 
 from __future__ import annotations
@@ -37,6 +64,18 @@ import numpy as np
 from .core_time import CoreTimeTable
 
 NONE = -1
+
+try:  # the prefilter's MSF runs in C; optional (see module docstring)
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import minimum_spanning_tree
+    _HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - scipy is bundled in CI/dev images
+    _HAVE_SCIPY = False
+
+
+class ForestInvariantError(RuntimeError):
+    """A structural invariant of the ECB forest was violated (corrupt
+    builder state); raised eagerly so a broken index is never served."""
 
 
 # ----------------------------------------------------------------------
@@ -118,96 +157,219 @@ def build_forest_at(g, tab: CoreTimeTable, ts: int) -> ForestSnapshot:
 class IncrementalBuilder:
     """Maintains the ECB forest while the start time descends, recording
     delta-compressed PECB entries (paper §4.1) plus per-vertex entry-point
-    versions for Algorithm 1 line 3."""
+    versions for Algorithm 1 line 3. See the module docstring for the
+    numpy-backed store layout and the MSF candidate prefilter."""
 
-    def __init__(self, g, tab: CoreTimeTable):
+    def __init__(self, g, tab: CoreTimeTable, *, prefilter: bool = True):
         self.g = g
         self.tab = tab
-        # node store (parallel lists, grown by insert)
-        self.n_edge: list[int] = []
-        self.n_ct: list[int] = []
-        self.n_u: list[int] = []
-        self.n_v: list[int] = []
-        self.n_child: list[list[int]] = []   # [slot0, slot1] aligned to (u, v)
-        self.n_parent: list[int] = []
-        self.n_in: list[bool] = []
-        # per-vertex sorted incidence: list of (ct, edge_id, node_id)
-        self.inc: list[list[tuple]] = [[] for _ in range(g.n)]
-        # recorded entries: per node list of (ts, l, r, p) in build (desc-ts) order
-        self.entries: list[list[tuple]] = []
-        self.ventries: list[list[tuple]] = [[] for _ in range(g.n)]
+        self.prefilter = prefilter
+        R = tab.num_versions
+        self._cap = R
+        self._stride = np.int64(g.m + 1)       # rank = ct * stride + edge
+        # scipy MSF carries weights as float64: only exact while every
+        # packed rank fits the 53-bit mantissa (else Kruskal, always exact)
+        self._scipy_exact = (tab.t_max + 1) * (g.m + 1) < 2 ** 53
+        # node store: preallocated flat arrays (<= one insert per record)
+        self.n_edge = np.zeros(R, np.int32)
+        self.n_ct = np.zeros(R, np.int32)
+        self.n_u = np.zeros(R, np.int32)
+        self.n_v = np.zeros(R, np.int32)
+        self.n_child = np.full((R, 2), NONE, np.int32)  # aligned to (u, v)
+        self.n_parent = np.full(R, NONE, np.int32)
+        self.n_in = np.zeros(R, bool)
+        self.n_rank = np.zeros(R, np.int64)
+        self.num_nodes = 0
         # forest-membership lifetime per node: [live_from, live_to] inclusive.
         # live_to = the start time whose processing inserted the node;
         # live_from = (deletion start time + 1), or 1 if never deleted.
         # The device query plane (batch_query.py) needs these to mask the
         # stale links of dead nodes; the host DFS never reaches them.
-        self.n_live_to: list[int] = []
-        self.n_live_from: list[int] = []
+        self.n_live_from = np.ones(R, np.int32)
+        self.n_live_to = np.zeros(R, np.int32)
+        # per-vertex sorted incidence: parallel lists of packed int ranks +
+        # node ids. Plain ints (no tuples: the seed's allocation hotspot)
+        # with C bisect/insort — for the tiny per-vertex lists a live forest
+        # produces, this beats numpy's per-scalar searchsorted overhead.
+        self._inc_key: list[list[int]] = [[] for _ in range(g.n)]
+        self._inc_node: list[list[int]] = [[] for _ in range(g.n)]
+        # live-node registry (swap-remove) feeding the MSF prefilter
+        self._live = np.zeros(R, np.int32)
+        self._live_pos = np.full(R, -1, np.int64)
+        self._nlive = 0
+        # delta-entry buffers; pack_index CSR-ifies them with one lexsort
+        self.ent_node: list[int] = []
+        self.ent_ts: list[int] = []
+        self.ent_l: list[int] = []
+        self.ent_r: list[int] = []
+        self.ent_p: list[int] = []
+        self.vent_vert: list[int] = []
+        self.vent_ts: list[int] = []
+        self.vent_node: list[int] = []
+        # last-recorded (l, r, p) per node / entry node per vertex; -2 is
+        # "never recorded" (NONE = -1 is a legal value)
+        self._last = np.full((R, 3), -2, np.int32)
+        self._last_vent = np.full(g.n, -2, np.int64)
         self._cur_ts: int = 0
         self._dirty_nodes: set[int] = set()
         self._dirty_verts: set[int] = set()
 
     # -- helpers --------------------------------------------------------
     def rank(self, x: int) -> tuple:
-        return (self.n_ct[x], self.n_edge[x])
+        return (int(self.n_ct[x]), int(self.n_edge[x]))
 
     def _new_node(self, edge_id: int, ct: int) -> int:
-        x = len(self.n_edge)
-        self.n_edge.append(edge_id)
-        self.n_ct.append(ct)
-        self.n_u.append(int(self.g.src[edge_id]))
-        self.n_v.append(int(self.g.dst[edge_id]))
-        self.n_child.append([NONE, NONE])
-        self.n_parent.append(NONE)
-        self.n_in.append(False)
-        self.entries.append([])
-        self.n_live_to.append(self._cur_ts)
-        self.n_live_from.append(1)
+        x = self.num_nodes
+        if x >= self._cap:
+            raise ForestInvariantError(
+                f"more inserts than version records ({self._cap})")
+        self.num_nodes = x + 1
+        self.n_edge[x] = edge_id
+        self.n_ct[x] = ct
+        self.n_u[x] = self.g.src[edge_id]
+        self.n_v[x] = self.g.dst[edge_id]
+        self.n_rank[x] = np.int64(ct) * self._stride + edge_id
+        self.n_live_to[x] = self._cur_ts
         return x
+
+    def _live_add(self, x: int):
+        self._live[self._nlive] = x
+        self._live_pos[x] = self._nlive
+        self._nlive += 1
+
+    def _live_remove(self, x: int):
+        pos = int(self._live_pos[x])
+        if pos < 0:
+            raise ForestInvariantError(f"node {x} not live")
+        last = self._nlive - 1
+        mv = self._live[last]
+        self._live[pos] = mv
+        self._live_pos[mv] = pos
+        self._live_pos[x] = -1
+        self._nlive = last
 
     def _slot_of(self, node: int, child: int) -> int:
         c = self.n_child[node]
         if c[0] == child:
             return 0
-        assert c[1] == child, (node, child, c)
+        if c[1] != child:
+            raise ForestInvariantError(
+                f"node {child} is not a child of {node} ({c.tolist()})")
         return 1
 
     def _slot_for_vertex(self, node: int, vert: int) -> int:
         return 0 if self.n_u[node] == vert else 1
 
-    def _inc_add(self, vert: int, node: int):
-        bisect.insort(self.inc[vert], (self.n_ct[node], self.n_edge[node], node))
+    def _inc_add(self, vert: int, node: int, key: int):
+        keys = self._inc_key[vert]
+        i = bisect.bisect_left(keys, key)
+        keys.insert(i, key)
+        self._inc_node[vert].insert(i, node)
         self._dirty_verts.add(vert)
 
     def _inc_remove(self, vert: int, node: int):
-        key = (self.n_ct[node], self.n_edge[node], node)
-        i = bisect.bisect_left(self.inc[vert], key)
-        assert self.inc[vert][i] == key
-        self.inc[vert].pop(i)
+        keys = self._inc_key[vert]
+        nodes = self._inc_node[vert]
+        i = bisect.bisect_left(keys, int(self.n_rank[node]))
+        if i >= len(keys) or nodes[i] != node:
+            raise ForestInvariantError(
+                f"node {node} missing from vertex {vert} incidence")
+        keys.pop(i)
+        nodes.pop(i)
         self._dirty_verts.add(vert)
 
-    def _find_side(self, vert: int, rk: tuple):
+    def _find_side(self, vert: int, rk: int):
         """findInsertion for one endpoint: returns (child, attach, via_slot).
 
         child  = component maximum below ``rk`` on this side (Def 4.9 child),
         attach = its old parent / lowest incident node above ``rk``,
         via_slot = slot index in ``attach`` consumed by the merge.
         """
-        lst = self.inc[vert]
-        i = bisect.bisect_left(lst, (rk[0], rk[1], -(10 ** 18)))
-        child = lst[i - 1][2] if i > 0 else NONE
-        attach = lst[i][2] if i < len(lst) else NONE
+        keys, nodes = self._inc_key[vert], self._inc_node[vert]
+        cnt = len(keys)
+        i = bisect.bisect_left(keys, rk)
+        child = nodes[i - 1] if i > 0 else NONE
+        attach = nodes[i] if i < cnt else NONE
         if child != NONE:
             # climb to the component maximum below rk (Alg 2 lines 5-9)
-            while self.n_parent[child] != NONE and self.rank(self.n_parent[child]) < rk:
-                child = self.n_parent[child]
-            attach = self.n_parent[child]
+            parent, rank = self.n_parent, self.n_rank
+            p = int(parent[child])
+            while p != NONE and rank[p] < rk:
+                child = p
+                p = int(parent[child])
+            attach = p
             via = self._slot_of(attach, child) if attach != NONE else NONE
         else:
             via = self._slot_for_vertex(attach, vert) if attach != NONE else NONE
-            if attach != NONE:
-                assert self.n_child[attach][via] == NONE
+            if attach != NONE and self.n_child[attach, via] != NONE:
+                raise ForestInvariantError(
+                    f"entry slot {via} of node {attach} unexpectedly taken")
         return child, attach, via
+
+    # -- bulk candidate prefilter (Def 4.9 MSF membership) ---------------
+    #: below this many (live + candidate) edges a direct Kruskal beats the
+    #: fixed per-call cost of building a sparse matrix + scipy MST
+    _KRUSKAL_CUTOVER = 128
+
+    def _accept_mask(self, cand_edge: np.ndarray,
+                     cand_ct: np.ndarray) -> np.ndarray:
+        """bool mask: which candidate versions can join the forest at the
+        current start time. Exact: a candidate joins iff it is in the unique
+        rank-MSF over (live nodes + candidates)."""
+        nc = cand_edge.shape[0]
+        if not self.prefilter or nc == 0:
+            return np.ones(nc, bool)
+        n = self.g.n
+        live = self._live[:self._nlive]
+        crank = cand_ct.astype(np.int64) * self._stride + cand_edge
+        u = np.concatenate([self.n_u[live], self.g.src[cand_edge]]).astype(np.int64)
+        v = np.concatenate([self.n_v[live], self.g.dst[cand_edge]]).astype(np.int64)
+        wt = np.concatenate([self.n_rank[live], crank])
+        if (wt.shape[0] <= self._KRUSKAL_CUTOVER or not _HAVE_SCIPY
+                or not self._scipy_exact):
+            # Kruskal in rank order; parallel pairs need no dedup (the
+            # union-find rejects the higher-ranked duplicate naturally)
+            order = np.argsort(wt, kind="stable")
+            nl = live.shape[0]
+            parent = {}
+
+            def find(x):
+                root = x
+                while parent.get(root, root) != root:
+                    root = parent[root]
+                while parent.get(x, x) != x:
+                    parent[x], x = root, parent[x]
+                return root
+
+            accept = np.zeros(nc, bool)
+            for i in order.tolist():
+                ra, rb = find(int(u[i])), find(int(v[i]))
+                if ra != rb:
+                    parent[ra] = rb
+                    if i >= nl:
+                        accept[i - nl] = True
+            return accept
+        key = np.minimum(u, v) * n + np.maximum(u, v)
+        order = np.lexsort((wt, key))
+        key_s, wt_s = key[order], wt[order]
+        first = np.ones(key_s.shape[0], bool)
+        first[1:] = key_s[1:] != key_s[:-1]   # min-rank edge per vertex pair
+        ek, ew = key_s[first], wt_s[first]
+        # compact vertex ids + direct CSR build: the per-call cost is fixed
+        # overhead (matrix conversion, O(n) Prim init), not the MSF itself,
+        # and this runs once per start time
+        r, c = ek // n, ek % n
+        verts, inv = np.unique(np.concatenate([r, c]), return_inverse=True)
+        nv = verts.shape[0]
+        ri, ci = inv[:r.shape[0]], inv[r.shape[0]:]
+        csr_order = np.argsort(ri, kind="stable")
+        indptr = np.zeros(nv + 1, np.int32)
+        np.cumsum(np.bincount(ri, minlength=nv), out=indptr[1:])
+        mat = csr_matrix(((ew[csr_order] + 1).astype(np.float64),
+                          ci[csr_order].astype(np.int32), indptr),
+                         shape=(nv, nv))
+        kept = (np.asarray(minimum_spanning_tree(mat).data) - 1).astype(np.int64)
+        return np.isin(crank, kept)
 
     # -- core insert (Alg 2 + Alg 3 Merge/WE cascade as a zipper) --------
     def insert(self, edge_id: int, ct: int) -> int | None:
@@ -215,7 +377,12 @@ class IncrementalBuilder:
         Returns None without side effects when the version joins no MSF."""
         g = self.g
         uu, vv = int(g.src[edge_id]), int(g.dst[edge_id])
-        rk = (ct, edge_id)
+        if uu == vv:
+            # self-loops are degenerate for k-core (from_edges drops them,
+            # but direct construction admits them); inserting one would run
+            # the zipper against a single vertex and corrupt the forest
+            return None
+        rk = int(np.int64(ct) * self._stride + edge_id)
         l, eu, via_u = self._find_side(uu, rk)
         r, ev, via_v = self._find_side(vv, rk)
         if l != NONE and l == r:
@@ -225,16 +392,17 @@ class IncrementalBuilder:
 
         x = self._new_node(edge_id, ct)
         self.n_in[x] = True
-        self.n_child[x][0] = l
-        self.n_child[x][1] = r
+        self.n_child[x, 0] = l
+        self.n_child[x, 1] = r
         if l != NONE:
             self.n_parent[l] = x
             self._dirty_nodes.add(l)
         if r != NONE:
             self.n_parent[r] = x
             self._dirty_nodes.add(r)
-        self._inc_add(uu, x)
-        self._inc_add(vv, x)
+        self._inc_add(uu, x, rk)
+        self._inc_add(vv, x, rk)
+        self._live_add(x)
         self._dirty_nodes.add(x)
 
         # zipper merge of the two ancestor chains (WE-operator cascade)
@@ -245,6 +413,7 @@ class IncrementalBuilder:
             via[ev] = via_v
         cur, a, b = x, eu, ev
         expired = None
+        rank = self.n_rank
         while True:
             if a == NONE and b == NONE:
                 self.n_parent[cur] = NONE
@@ -252,23 +421,23 @@ class IncrementalBuilder:
             if a == NONE or b == NONE:
                 t = a if a != NONE else b
                 self.n_parent[cur] = t
-                self.n_child[t][via[t]] = cur
+                self.n_child[t, via[t]] = cur
                 self._dirty_nodes.add(t)
                 break
             if a == b:
                 # Lemma 5.7: the meeting node is the cycle's LCA -> expired
                 expired = a
-                p = self.n_parent[a]
+                p = int(self.n_parent[a])
                 self.n_parent[cur] = p
                 if p != NONE:
-                    self.n_child[p][self._slot_of(p, a)] = cur
+                    self.n_child[p, self._slot_of(p, a)] = cur
                     self._dirty_nodes.add(p)
                 self._delete_node(a)
                 break
-            lo, hi = (a, b) if self.rank(a) < self.rank(b) else (b, a)
-            nxt = self.n_parent[lo]
+            lo, hi = (a, b) if rank[a] < rank[b] else (b, a)
+            nxt = int(self.n_parent[lo])
             self.n_parent[cur] = lo
-            self.n_child[lo][via[lo]] = cur
+            self.n_child[lo, via[lo]] = cur
             self._dirty_nodes.add(lo)
             if nxt != NONE:
                 via[nxt] = self._slot_of(nxt, lo)
@@ -278,8 +447,9 @@ class IncrementalBuilder:
     def _delete_node(self, x: int):
         self.n_in[x] = False
         self.n_live_from[x] = self._cur_ts + 1
-        self._inc_remove(self.n_u[x], x)
-        self._inc_remove(self.n_v[x], x)
+        self._inc_remove(int(self.n_u[x]), x)
+        self._inc_remove(int(self.n_v[x]), x)
+        self._live_remove(x)
         self._dirty_nodes.discard(x)
 
     # -- per-ts entry flush ----------------------------------------------
@@ -287,34 +457,57 @@ class IncrementalBuilder:
         """Record delta entries for everything that changed at this start
         time (paper: an item is stored only if the neighbourhood differs
         from the previous start time)."""
+        last = self._last
         for x in self._dirty_nodes:
             if not self.n_in[x]:
                 continue
-            val = (self.n_child[x][0], self.n_child[x][1], self.n_parent[x])
-            ent = self.entries[x]
-            if not ent or (ent[-1][1], ent[-1][2], ent[-1][3]) != val:
-                ent.append((ts, *val))
+            l = int(self.n_child[x, 0])
+            r = int(self.n_child[x, 1])
+            p = int(self.n_parent[x])
+            if last[x, 0] != l or last[x, 1] != r or last[x, 2] != p:
+                last[x, 0] = l
+                last[x, 1] = r
+                last[x, 2] = p
+                self.ent_node.append(x)
+                self.ent_ts.append(ts)
+                self.ent_l.append(l)
+                self.ent_r.append(r)
+                self.ent_p.append(p)
         for vert in self._dirty_verts:
-            lst = self.inc[vert]
-            node = lst[0][2] if lst else NONE
-            ent = self.ventries[vert]
-            if not ent or ent[-1][1] != node:
-                ent.append((ts, node))
+            lst = self._inc_node[vert]
+            node = lst[0] if lst else NONE
+            if self._last_vent[vert] != node:
+                self._last_vent[vert] = node
+                self.vent_vert.append(vert)
+                self.vent_ts.append(ts)
+                self.vent_node.append(node)
         self._dirty_nodes.clear()
         self._dirty_verts.clear()
 
     # -- full build -------------------------------------------------------
     def run(self):
-        """Process all version records in descending start time (Alg 3)."""
+        """Process all version records in descending start time (Alg 3):
+        per ts, bulk-prefilter the candidate versions, insert the survivors
+        in ascending rank, then flush the delta entries."""
         tab = self.tab
         order = np.lexsort((tab.edge_id, tab.ct, -tab.ts_to))
-        i, R = 0, order.shape[0]
+        e_sorted = tab.edge_id[order].astype(np.int64)
+        c_sorted = tab.ct[order].astype(np.int64)
+        neg_ts = -tab.ts_to[order].astype(np.int64)   # ascending
+        R = order.shape[0]
+        done = 0
         for ts in range(tab.t_max, 0, -1):
             self._cur_ts = ts
-            while i < R and int(tab.ts_to[order[i]]) == ts:
-                ridx = order[i]
-                self.insert(int(tab.edge_id[ridx]), int(tab.ct[ridx]))
-                i += 1
+            lo = int(np.searchsorted(neg_ts, -ts, side="left"))
+            hi = int(np.searchsorted(neg_ts, -ts, side="right"))
+            if hi > lo:
+                ce, cc = e_sorted[lo:hi], c_sorted[lo:hi]
+                acc = self._accept_mask(ce, cc)
+                for e, c in zip(ce[acc].tolist(), cc[acc].tolist()):
+                    self.insert(e, c)
+                done = hi
             self.flush(ts)
-        assert i == R, (i, R)
+        if done != R:
+            raise ForestInvariantError(
+                f"processed {done} of {R} version records")
         return self

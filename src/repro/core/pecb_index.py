@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 from .core_time import CoreTimeTable, edge_core_times
-from .ecb_forest import NONE, IncrementalBuilder
+from .ecb_forest import NONE, ForestInvariantError, IncrementalBuilder
 from .temporal_graph import TemporalGraph
 
 
@@ -93,45 +93,43 @@ class PECBIndex:
             result.add(int(self.node_u[e]))
             result.add(int(self.node_v[e]))
             links = self.resolve(e, ts)
-            assert links is not None, "reached a node outside the ts-forest"
+            if links is None:
+                # A reachable node must be in the ts-forest; a bare assert
+                # here would vanish under `python -O` and silently return a
+                # truncated component.
+                raise ForestInvariantError(
+                    f"query ({u}, {ts}, {te}) reached node {e} outside the "
+                    "ts-forest: corrupt index")
             for nb in links:
                 if nb != NONE and nb not in seen and self.node_ct[nb] <= te:
                     stack.append(nb)
         return result
 
 
+def _csr_sorted(ids, ts, cols, num_rows):
+    """(row_ptr, sorted column arrays) for flat (id, ts, *cols) records,
+    per-id ascending ts — one lexsort replaces the per-row Python loop."""
+    ids = np.asarray(ids, np.int64)
+    ts = np.asarray(ts, np.int32)
+    order = np.lexsort((ts, ids))
+    row_ptr = np.zeros(num_rows + 1, np.int32)
+    np.cumsum(np.bincount(ids, minlength=num_rows), out=row_ptr[1:])
+    return row_ptr, ts[order], [np.asarray(c, np.int32)[order] for c in cols]
+
+
 def pack_index(g: TemporalGraph, k: int, b: IncrementalBuilder) -> PECBIndex:
-    N = len(b.n_edge)
-    node_u = np.asarray(b.n_u, np.int32) if N else np.zeros(0, np.int32)
-    node_v = np.asarray(b.n_v, np.int32) if N else np.zeros(0, np.int32)
-    node_ct = np.asarray(b.n_ct, np.int32) if N else np.zeros(0, np.int32)
-    node_edge = np.asarray(b.n_edge, np.int32) if N else np.zeros(0, np.int32)
-    live_from = np.asarray(b.n_live_from, np.int32) if N else np.zeros(0, np.int32)
-    live_to = np.asarray(b.n_live_to, np.int32) if N else np.zeros(0, np.int32)
-
-    row_ptr = np.zeros(N + 1, np.int32)
-    ts_l, l_l, r_l, p_l = [], [], [], []
-    for x in range(N):
-        ent = b.entries[x][::-1]  # ascending ts
-        row_ptr[x + 1] = row_ptr[x] + len(ent)
-        for (ts, l, r, p) in ent:
-            ts_l.append(ts); l_l.append(l); r_l.append(r); p_l.append(p)
-    vrow_ptr = np.zeros(g.n + 1, np.int32)
-    vts_l, vn_l = [], []
-    for vert in range(g.n):
-        ent = b.ventries[vert][::-1]
-        vrow_ptr[vert + 1] = vrow_ptr[vert] + len(ent)
-        for (ts, node) in ent:
-            vts_l.append(ts); vn_l.append(node)
-
+    N = b.num_nodes
+    row_ptr, ent_ts, (ent_l, ent_r, ent_p) = _csr_sorted(
+        b.ent_node, b.ent_ts, (b.ent_l, b.ent_r, b.ent_p), N)
+    vrow_ptr, vent_ts, (vent_node,) = _csr_sorted(
+        b.vent_vert, b.vent_ts, (b.vent_node,), g.n)
+    i32 = lambda a: np.ascontiguousarray(a[:N], np.int32)
     return PECBIndex(
         g.n, g.m, g.t_max, k,
-        node_u, node_v, node_ct, node_edge, live_from, live_to,
-        row_ptr,
-        np.asarray(ts_l, np.int32), np.asarray(l_l, np.int32),
-        np.asarray(r_l, np.int32), np.asarray(p_l, np.int32),
-        vrow_ptr,
-        np.asarray(vts_l, np.int32), np.asarray(vn_l, np.int32),
+        i32(b.n_u), i32(b.n_v), i32(b.n_ct), i32(b.n_edge),
+        i32(b.n_live_from), i32(b.n_live_to),
+        row_ptr, ent_ts, ent_l, ent_r, ent_p,
+        vrow_ptr, vent_ts, vent_node,
     )
 
 

@@ -37,13 +37,16 @@ class TemporalGraph:
 
     @property
     def t_max(self) -> int:
-        return int(self.t.max()) if self.m else 0
+        # Cached in __post_init__: the serving path and the workload
+        # generators hit this per request, and arrays are immutable here.
+        return self._t_max
 
     def __post_init__(self):
         assert self.src.shape == self.dst.shape == self.t.shape
         if self.m:
             assert int(self.src.max()) < self.n and int(self.dst.max()) < self.n
             assert int(self.t.min()) >= 1
+        object.__setattr__(self, "_t_max", int(self.t.max()) if self.m else 0)
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -3,9 +3,13 @@
 Wires the subsystem together::
 
     submit(workload, k, u, ts, te)
-        -> registry.get(workload, k)          (build/memoize the index pair)
+        -> registry.get_nowait(workload, k)   (memoized handle, or kick off
+                                               the background build; a cold
+                                               key never blocks the caller)
         -> result cache probe                 (hit: resolve immediately)
-        -> per-handle micro-batcher           (shape-bucketed batching)
+        -> per-handle micro-batcher           (shape-bucketed batching;
+                                               cold keys enqueue when the
+                                               build future resolves)
         -> planner                            (host Alg 1 | sharded device)
         -> future resolves with frozenset of component vertices
 
@@ -56,6 +60,7 @@ class ServingEngine:
                 f"{cfg.min_bucket} max_batch={cfg.max_batch}")
         self.metrics = EngineMetrics()
         self.cache = ResultCache(cfg.cache_capacity)
+        self._owns_registry = registry is None
         self.registry = registry if registry is not None else IndexRegistry(
             cfg.registry_capacity, metrics=self.metrics)
         self.executor = ShardedExecutor(devices)
@@ -90,6 +95,10 @@ class ServingEngine:
             b *= 2
         return handle
 
+    def prefetch(self, workload: str, k: int) -> Future:
+        """Kick off (or join) the background index build; never blocks."""
+        return self.registry.get_async(workload, k)
+
     # -- query paths -----------------------------------------------------
     def submit(self, workload: str, k: int, u: int, ts: int, te: int) -> Future:
         return self.submit_many(workload, k, [(u, ts, te)])[0]
@@ -97,10 +106,16 @@ class ServingEngine:
     def submit_many(self, workload: str, k: int,
                     queries: Iterable[Sequence[int]]) -> list[Future]:
         """One future per (u, ts, te), in input order. Cache hits resolve
-        before this returns; misses resolve when their batch flushes."""
+        before this returns; misses resolve when their batch flushes. A cold
+        (workload, k) never blocks the caller: the index builds on the
+        registry's background pool and the misses are enqueued when the
+        handle future resolves."""
         if self._closed:
             raise RuntimeError("engine is closed")
-        handle = self.registry.get(workload, k)
+        key = (workload, int(k))
+        # probe only: don't schedule a build until a cache miss proves one
+        # is needed (a fully-cached stream must not rebuild an evicted index)
+        handle = self.registry.get_nowait(workload, k, start_build=False)
         t0 = time.perf_counter()
         futures: list[Future] = []
         misses: list[Request] = []
@@ -109,7 +124,7 @@ class ServingEngine:
             fut: Future = Future()
             futures.append(fut)
             self.metrics.count("queries")
-            hit = self.cache.get((handle.key, u, ts, te))
+            hit = self.cache.get((key, u, ts, te))
             if hit is not None:
                 self.metrics.count("cache_hits")
                 fut.set_result(hit)
@@ -118,8 +133,25 @@ class ServingEngine:
                 self.metrics.count("cache_misses")
                 misses.append(Request(u, ts, te, fut, t_submit=t0))
         if misses:
-            self._batcher_for(handle).submit_many(misses)
+            if handle is not None:
+                self._batcher_for(handle).submit_many(misses)
+            else:
+                self.metrics.count("cold_submits")
+                self._submit_when_built(workload, k, misses)
         return futures
+
+    def _submit_when_built(self, workload: str, k: int,
+                           misses: list[Request]) -> None:
+        """Chain a batch of misses onto the pending index build."""
+        def on_built(handle_fut: Future) -> None:
+            try:
+                handle = handle_fut.result()
+                self._batcher_for(handle).submit_many(misses)
+            except BaseException as exc:  # build failed or engine closed
+                for req in misses:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+        self.registry.get_async(workload, k).add_done_callback(on_built)
 
     def query(self, workload: str, k: int, u: int, ts: int, te: int,
               timeout: float | None = 60.0) -> frozenset:
@@ -183,6 +215,8 @@ class ServingEngine:
         self.registry.remove_evict_listener(self._on_index_evicted)
         for b in batchers:
             b.close()
+        if self._owns_registry:
+            self.registry.close(wait=True)
 
     def __enter__(self) -> "ServingEngine":
         return self

@@ -8,10 +8,21 @@ online plane (microseconds). The registry keeps that split honest: the
 first request for a (workload, k) pays the build once, everyone after gets
 the memoized handle; capacity-bounded LRU eviction drops cold indexes.
 
+Builds run on a small background pool and are exposed three ways:
+
+* ``get_async`` — returns a ``Future[IndexHandle]`` immediately; a
+  thundering herd on a cold key coalesces onto one pending future, while
+  distinct keys build in parallel (bounded by ``build_workers``).
+* ``get_nowait`` — non-blocking probe; on a miss it (optionally) kicks off
+  the background build and returns ``None`` so the caller's thread never
+  blocks behind a multi-second build (the engine's submit path uses this).
+* ``get`` — the blocking convenience wrapper (``get_async().result()``).
+
+Each build records per-stage wall times (core times, forest, pack, device
+upload) on the handle and into the metrics sink (``index_build_<stage>``).
+
 Graphs resolve by name: either registered explicitly (``register_graph``)
-or one of the named bench workloads (``BENCH_WORKLOADS``). Builds are
-serialized per key (a per-key lock) so a thundering herd on a cold key
-builds exactly once, while builds of *different* keys proceed in parallel.
+or one of the named bench workloads (``BENCH_WORKLOADS``).
 """
 
 from __future__ import annotations
@@ -20,10 +31,12 @@ import dataclasses
 import threading
 import time
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
 from repro.core.core_time import edge_core_times
-from repro.core.pecb_index import PECBIndex, build_pecb_index
+from repro.core.ecb_forest import IncrementalBuilder
+from repro.core.pecb_index import PECBIndex, pack_index
 from repro.core.batch_query import DeviceIndex, to_device
 
 
@@ -36,6 +49,7 @@ class IndexHandle:
     pecb: PECBIndex
     device: DeviceIndex
     build_seconds: float
+    build_stages: dict = dataclasses.field(default_factory=dict, compare=False)
 
     @property
     def nbytes(self) -> int:
@@ -43,7 +57,8 @@ class IndexHandle:
 
 
 class IndexRegistry:
-    def __init__(self, capacity: int = 8, metrics=None, on_evict=None):
+    def __init__(self, capacity: int = 8, metrics=None, on_evict=None,
+                 build_workers: int = 2):
         assert capacity >= 1
         self.capacity = capacity
         self._metrics = metrics
@@ -57,7 +72,9 @@ class IndexRegistry:
         self._graphs: dict[str, TemporalGraph] = {}
         self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
         self._lock = threading.Lock()
-        self._build_locks: dict[tuple[str, int], threading.Lock] = {}
+        self._pending: dict[tuple[str, int], Future] = {}
+        self._build_workers = max(1, int(build_workers))
+        self._pool: ThreadPoolExecutor | None = None
         self.builds = 0
         self.evictions = 0
 
@@ -102,49 +119,116 @@ class IndexRegistry:
         )
 
     # -- handle lookup ---------------------------------------------------
-    def get(self, workload: str, k: int) -> IndexHandle:
+    def get(self, workload: str, k: int,
+            timeout: float | None = None) -> IndexHandle:
+        """Blocking lookup: memoized handle, or wait for the build."""
+        return self.get_async(workload, k).result(timeout=timeout)
+
+    def get_nowait(self, workload: str, k: int, *,
+                   start_build: bool = True) -> IndexHandle | None:
+        """Non-blocking probe. On a miss, optionally schedule the
+        background build (so a later probe hits) and return ``None``."""
         key = (workload, int(k))
         with self._lock:
             h = self._entries.get(key)
             if h is not None:
                 self._entries.move_to_end(key)
                 return h
-            bl = self._build_locks.setdefault(key, threading.Lock())
-        with bl:
-            # double-check: another thread may have built while we waited
-            with self._lock:
-                h = self._entries.get(key)
-                if h is not None:
-                    self._entries.move_to_end(key)
-                    return h
-            h = self._build(key)
-            evicted = []
-            with self._lock:
-                self._entries[key] = h
+        if start_build:
+            self.get_async(workload, k)
+        return None
+
+    def get_async(self, workload: str, k: int) -> "Future[IndexHandle]":
+        """Future resolving to the built handle; build failures (including
+        unknown workloads) surface as the future's exception. Concurrent
+        callers of one cold key share a single pending future."""
+        key = (workload, int(k))
+        with self._lock:
+            h = self._entries.get(key)
+            if h is not None:
                 self._entries.move_to_end(key)
-                while len(self._entries) > self.capacity:
-                    evicted.append(self._entries.popitem(last=False))
-                    self.evictions += 1
-                    if self._metrics is not None:
-                        self._metrics.count("index_evictions")
+                fut: Future = Future()
+                fut.set_result(h)
+                return fut
+            fut = self._pending.get(key)
+            if fut is not None:
+                return fut
+            fut = Future()
+            self._pending[key] = fut
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._build_workers,
+                    thread_name_prefix="index-build")
+            # submit under the lock: close() also takes it, so the pool
+            # cannot shut down between registering the pending future and
+            # scheduling its build
+            try:
+                self._pool.submit(self._run_build, key, fut)
+            except RuntimeError as exc:   # pool raced to shutdown anyway
+                self._pending.pop(key, None)
+                fut.set_exception(exc)
+        return fut
+
+    def _run_build(self, key: tuple[str, int], fut: Future) -> None:
+        try:
+            handle = self._build(key)
+        except BaseException as exc:
             with self._lock:
-                listeners = list(self._evict_listeners)
-            for (k2, h2) in evicted:
-                for cb in listeners:
-                    cb(k2, h2)
-            return h
+                self._pending.pop(key, None)
+            fut.set_exception(exc)
+            return
+        evicted = []
+        with self._lock:
+            self._pending.pop(key, None)
+            self._entries[key] = handle
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                evicted.append(self._entries.popitem(last=False))
+                self.evictions += 1
+                if self._metrics is not None:
+                    self._metrics.count("index_evictions")
+            listeners = list(self._evict_listeners)
+        for (k2, h2) in evicted:
+            for cb in listeners:
+                cb(k2, h2)
+        fut.set_result(handle)
 
     def _build(self, key: tuple[str, int]) -> IndexHandle:
         workload, k = key
         g = self.resolve_graph(workload)
+        stages = {}
         t0 = time.perf_counter()
-        idx = build_pecb_index(g, k, edge_core_times(g, k))
-        handle = IndexHandle(key, g, idx, to_device(idx), time.perf_counter() - t0)
-        self.builds += 1
+        tab = edge_core_times(g, k)
+        stages["core_times"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        builder = IncrementalBuilder(g, tab).run()
+        stages["forest"] = time.perf_counter() - t1
+        t1 = time.perf_counter()
+        idx = pack_index(g, k, builder)
+        stages["pack"] = time.perf_counter() - t1
+        t1 = time.perf_counter()
+        dev = to_device(idx)
+        stages["device"] = time.perf_counter() - t1
+        total = time.perf_counter() - t0
+        handle = IndexHandle(key, g, idx, dev, total, stages)
+        with self._lock:
+            # under the lock: concurrent builds of *different* keys would
+            # otherwise lose increments (read-modify-write race)
+            self.builds += 1
         if self._metrics is not None:
             self._metrics.count("index_builds")
-            self._metrics.observe("index_build", handle.build_seconds)
+            self._metrics.observe("index_build", total)
+            for stage, seconds in stages.items():
+                self._metrics.observe(f"index_build_{stage}", seconds)
         return handle
+
+    def close(self, wait: bool = True) -> None:
+        """Stop the build pool. Pending futures still resolve when
+        ``wait=True`` (builds run to completion)."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=wait)
 
     def __contains__(self, key: tuple[str, int]) -> bool:
         with self._lock:
@@ -157,5 +241,6 @@ class IndexRegistry:
                 "capacity": self.capacity,
                 "builds": self.builds,
                 "evictions": self.evictions,
+                "pending": list(self._pending),
                 "resident_bytes": sum(h.nbytes for h in self._entries.values()),
             }

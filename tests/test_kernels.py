@@ -129,3 +129,48 @@ class TestFlashAttention:
         got = np.asarray(fa.flash_attention(q, ke, ve, causal=True, bq=16, bk=16))
         np.testing.assert_allclose(got.reshape(B, S, Hq * dh), wanted,
                                    rtol=2e-3, atol=2e-3)
+
+
+class TestSegmentedSelect:
+    """The construction-plane inner op: three backends, one answer."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("k", [1, 2, 5])
+    def test_kth_backends_agree(self, seed, k):
+        from repro.kernels import segmented_select as ss
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(3, 50))
+        deg = rng.integers(0, 14, n)
+        seg = np.repeat(np.arange(n), deg).astype(np.int32)
+        vptr = np.zeros(n + 1, np.int64)
+        np.cumsum(deg, out=vptr[1:])
+        inf = int(rng.integers(6, 60))
+        w = rng.integers(0, inf + 1, int(deg.sum())).astype(np.int32)
+        lo = rng.integers(0, inf + 1, n).astype(np.int32)
+        ref_kth = ss.segmented_kth_smallest_np(w, vptr, k, inf, lo=lo)
+        steps = int(np.ceil(np.log2(inf + 1))) + 1
+        xla = ss.kth_smallest_csr(
+            jnp.asarray(w), jnp.asarray(lo), k, inf, steps,
+            jnp.asarray(seg), jnp.asarray(vptr.astype(np.int32)))
+        assert np.array_equal(np.asarray(xla), ref_kth)
+        pallas = ss.kth_smallest_pallas(
+            jnp.asarray(w), jnp.asarray(seg), n, k, inf, lo=jnp.asarray(lo))
+        assert np.array_equal(np.asarray(pallas), ref_kth)
+
+    def test_count_le_pallas_blocked(self):
+        """Pallas counter with blocks smaller than the data (real grid)."""
+        from repro.kernels import segmented_select as ss
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(7)
+        n, e = 70, 900
+        seg = np.sort(rng.integers(0, n, e)).astype(np.int32)
+        w = rng.integers(0, 50, e).astype(np.int32)
+        thr = rng.integers(0, 50, n).astype(np.int32)
+        got = ss.segmented_count_le(jnp.asarray(w), jnp.asarray(seg),
+                                    jnp.asarray(thr), n,
+                                    slot_block=256, seg_block=32)
+        want = np.array([(w[seg == v] <= thr[v]).sum() for v in range(n)])
+        assert np.array_equal(np.asarray(got), want)

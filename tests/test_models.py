@@ -45,9 +45,16 @@ def smoke_batch(spec, shape_name, cfg, dims, rng):
 
 ALL_CELLS = sorted(C.all_cells())
 
+# Heavy shapes run in the scheduled slow CI job; every arch keeps at least
+# one cheap shape (prefill/decode/molecule/train_batch) in the fast job.
+_SLOW_SHAPES = {"train_4k", "full_graph_sm", "ogb_products", "minibatch_lg"}
 
-@pytest.mark.parametrize("arch_id,shape_name", ALL_CELLS,
-                         ids=[f"{a}-{s}" for a, s in ALL_CELLS])
+
+@pytest.mark.parametrize(
+    "arch_id,shape_name",
+    [pytest.param(a, s, id=f"{a}-{s}",
+                  marks=[pytest.mark.slow] if s in _SLOW_SHAPES else [])
+     for a, s in ALL_CELLS])
 def test_cell_smoke(arch_id, shape_name):
     spec = C.get(arch_id)
     dims = C.smoke_dims(spec, shape_name)
@@ -127,7 +134,8 @@ class TestLMDetails:
 
 
 class TestEquivariance:
-    @pytest.mark.parametrize("arch", ["nequip", "mace"])
+    @pytest.mark.parametrize(
+        "arch", [pytest.param("nequip", marks=pytest.mark.slow), "mace"])
     def test_energy_invariance_force_equivariance(self, arch):
         spec = C.get(arch)
         cfg = dataclasses.replace(spec.smoke_cfg, d_species=8)

@@ -435,3 +435,115 @@ def test_engine_multi_device_sharded():
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "sharded engine ok" in res.stdout
+
+
+class TestAsyncRegistry:
+    """PR-2: background index builds (DESIGN.md §7.4)."""
+
+    def test_builds_counter_survives_concurrent_cold_keys(self):
+        """The builds counter is a read-modify-write under the registry
+        lock; hammering many distinct cold keys from many threads must not
+        lose updates."""
+        import threading
+
+        reg = IndexRegistry(capacity=32, build_workers=8)
+        keys = []
+        for i in range(8):
+            name = f"g{i}"
+            reg.register_graph(name, gen_temporal_graph(
+                n=12, m=50, t_max=5, seed=i))
+            keys.extend([(name, 2), (name, 3)])
+        start = threading.Barrier(16)
+
+        def hammer(key):
+            start.wait()
+            for _ in range(4):
+                reg.get(*key)
+
+        threads = [threading.Thread(target=hammer, args=(key,))
+                   for key in keys]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert reg.builds == len(keys)
+        reg.close()
+
+    def test_get_nowait_miss_then_hit(self):
+        reg = IndexRegistry()
+        reg.register_graph("g", gen_temporal_graph(n=12, m=50, t_max=5, seed=0))
+        assert reg.get_nowait("g", 2, start_build=False) is None
+        assert ("g", 2) not in reg
+        h = reg.get_nowait("g", 2)              # miss, but schedules the build
+        assert h is None
+        built = reg.get_async("g", 2).result(timeout=60)
+        assert reg.get_nowait("g", 2) is built
+        reg.close()
+
+    def test_get_async_coalesces_thundering_herd(self):
+        reg = IndexRegistry()
+        reg.register_graph("g", gen_temporal_graph(n=14, m=60, t_max=6, seed=1))
+        futs = [reg.get_async("g", 2) for _ in range(6)]
+        handles = {id(f.result(timeout=60)) for f in futs}
+        assert len(handles) == 1 and reg.builds == 1
+        reg.close()
+
+    def test_build_failure_surfaces_on_future(self):
+        reg = IndexRegistry()
+        with pytest.raises(KeyError):
+            reg.get_async("no_such_graph", 2).result(timeout=60)
+        assert reg.builds == 0
+        # the failed key is not stuck pending: a later register succeeds
+        reg.register_graph("no_such_graph",
+                           gen_temporal_graph(n=10, m=40, t_max=4, seed=2))
+        assert reg.get("no_such_graph", 2).pecb is not None
+        reg.close()
+
+    def test_build_stage_metrics_recorded(self):
+        from repro.serving.metrics import EngineMetrics
+
+        metrics = EngineMetrics()
+        reg = IndexRegistry(metrics=metrics)
+        reg.register_graph("g", gen_temporal_graph(n=14, m=70, t_max=6, seed=3))
+        h = reg.get("g", 2)
+        assert set(h.build_stages) == {"core_times", "forest", "pack", "device"}
+        assert all(v >= 0 for v in h.build_stages.values())
+        snap = metrics.snapshot()
+        for stage in ("core_times", "forest", "pack", "device"):
+            assert snap["latency"][f"index_build_{stage}"]["count"] == 1
+        reg.close()
+
+    def test_cold_submit_does_not_block_on_build(self):
+        """A cold (workload, k) submit returns before the build completes;
+        the queries resolve once the background build installs the index."""
+        import threading
+
+        release = threading.Event()
+
+        class SlowRegistry(IndexRegistry):
+            def _build(self, key):
+                release.wait(timeout=60)        # simulate a long offline build
+                return super()._build(key)
+
+        g = gen_temporal_graph(n=15, m=70, t_max=6, seed=4)
+        reg = SlowRegistry()
+        reg.register_graph("g", g)
+        cfg = EngineConfig(flush_ms=5.0)
+        with ServingEngine(cfg, registry=reg) as eng:
+            t0 = time.perf_counter()
+            fut = eng.submit("g", 2, 0, 1, 6)
+            submitted_in = time.perf_counter() - t0
+            assert submitted_in < 30            # returned while build blocked
+            assert not fut.done()
+            release.set()
+            want = frozenset(reg.get("g", 2).pecb.query(0, 1, 6))
+            assert fut.result(timeout=60) == want
+        reg.close()
+
+    def test_engine_prefetch_warms_registry(self):
+        g = gen_temporal_graph(n=15, m=70, t_max=6, seed=5)
+        with ServingEngine(EngineConfig()) as eng:
+            eng.register_graph("g", g)
+            eng.prefetch("g", 2).result(timeout=60)
+            assert ("g", 2) in eng.registry
+            assert eng.registry.stats()["pending"] == []

@@ -168,3 +168,101 @@ class TestQueries:
     def test_kmax_positive(self):
         g = gen_temporal_graph(n=60, m=600, t_max=30, seed=5)
         assert k_max(g) >= 2
+
+
+class TestConstructionEngines:
+    """Seeded (non-hypothesis) engine-equivalence coverage, so the batched
+    plane is exercised even where hypothesis is not installed."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_three_engines_bit_identical(self, seed):
+        g = gen_temporal_graph(n=30, m=180, t_max=14, seed=seed)
+        for k in (2, 3):
+            legacy = edge_core_times(g, k, engine="legacy")
+            host = edge_core_times(g, k, engine="host")
+            jaxed = edge_core_times(g, k, engine="jax")
+            for f in ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct"):
+                assert np.array_equal(getattr(legacy, f), getattr(host, f)), f
+                assert np.array_equal(getattr(legacy, f), getattr(jaxed, f)), f
+
+    def test_jax_pallas_engine_matches_host(self):
+        g = gen_temporal_graph(n=14, m=60, t_max=6, seed=7)
+        host = edge_core_times(g, 2, engine="host")
+        pallas = edge_core_times(g, 2, engine="jax_pallas")
+        for f in ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct"):
+            assert np.array_equal(getattr(host, f), getattr(pallas, f)), f
+
+    def test_self_loops_do_not_corrupt_builder(self):
+        """Directly-constructed graphs may carry self-loops (from_edges
+        drops them); the builder must treat them as degenerate on both
+        prefilter paths instead of corrupting the forest."""
+        import dataclasses
+        from repro.core.ecb_forest import IncrementalBuilder
+        from repro.core.pecb_index import pack_index
+
+        base = gen_temporal_graph(n=12, m=60, t_max=6, seed=3)
+        g = TemporalGraph(
+            base.n,
+            np.concatenate([base.src, np.int32([1, 4])]),
+            np.concatenate([base.dst, np.int32([1, 4])]),
+            np.concatenate([base.t, np.int32([2, 5])]),
+        )
+        tab = edge_core_times(g, 2)
+        a = pack_index(g, 2, IncrementalBuilder(g, tab, prefilter=True).run())
+        b = pack_index(g, 2, IncrementalBuilder(g, tab, prefilter=False).run())
+        for f in dataclasses.fields(a):
+            va, vb = getattr(a, f.name), getattr(b, f.name)
+            same = (np.array_equal(va, vb) if isinstance(va, np.ndarray)
+                    else va == vb)
+            assert same, f.name
+
+    def test_unknown_engine_raises(self):
+        g = gen_temporal_graph(n=10, m=30, t_max=5, seed=0)
+        with pytest.raises(ValueError, match="engine"):
+            edge_core_times(g, 2, engine="warp")
+
+    def test_nbytes_counts_actual_version_bytes(self):
+        g = gen_temporal_graph(n=25, m=120, t_max=10, seed=1)
+        tab = edge_core_times(g, 2)
+        assert tab.nbytes() == (tab.edge_id.nbytes + tab.ts_from.nbytes
+                                + tab.ts_to.nbytes + tab.ct.nbytes)
+        assert tab.nbytes() == 16 * tab.num_versions   # 4 int32 words
+
+    def test_builder_prefilter_identical_index(self):
+        import dataclasses
+        from repro.core.ecb_forest import IncrementalBuilder
+        from repro.core.pecb_index import pack_index
+
+        g = gen_temporal_graph(n=30, m=200, t_max=12, seed=5)
+        tab = edge_core_times(g, 2)
+        a = pack_index(g, 2, IncrementalBuilder(g, tab, prefilter=True).run())
+        b = pack_index(g, 2, IncrementalBuilder(g, tab, prefilter=False).run())
+        for f in dataclasses.fields(a):
+            va, vb = getattr(a, f.name), getattr(b, f.name)
+            same = (np.array_equal(va, vb) if isinstance(va, np.ndarray)
+                    else va == vb)
+            assert same, f.name
+
+    def test_query_invariant_error_not_assert(self):
+        """The reachable-state guard must survive `python -O`: it raises an
+        explicit error instead of asserting."""
+        from repro.core.ecb_forest import ForestInvariantError
+        from repro.core.pecb_index import build_pecb_index
+
+        g = gen_temporal_graph(n=20, m=120, t_max=8, seed=2)
+        idx = build_pecb_index(g, 2)
+        if idx.num_nodes == 0:
+            pytest.skip("degenerate graph")
+        # corrupt the index: point an entry's left child at a node that has
+        # no entry covering ts (simulates the exact state a bare assert hid)
+        idx.ent_left[:] = idx.num_nodes - 1
+        idx.row_ptr[-1] = idx.row_ptr[-2]       # last node: no entries at all
+        u = int(idx.node_u[0])
+        with pytest.raises(ForestInvariantError):
+            for ts in range(1, g.t_max + 1):
+                idx.query(u, ts, g.t_max)
+
+    def test_t_max_cached(self):
+        g = gen_temporal_graph(n=10, m=40, t_max=6, seed=0)
+        assert g.t_max == int(g.t.max())
+        assert g._t_max == g.t_max              # computed once in __post_init__
