@@ -19,6 +19,7 @@ from .common import default_k, random_queries, timed, workload, write_csv
 from repro.core.core_time import edge_core_times
 from repro.core.pecb_index import build_pecb_index
 from repro.core.batch_query import to_device, batch_query
+from repro.core.query_api import WindowSweep
 from repro.serving import EngineConfig, IndexRegistry, ServingEngine
 
 
@@ -76,7 +77,7 @@ def bench_engine_load_sweep(name: str = "fb_like",
     registry = IndexRegistry(capacity=4)
     registry.register_graph(name, g)
     queries = random_queries(g, n_q, seed=seed)
-    rows = []
+    rows = bench_window_sweep(name, registry=registry)
     for load in loads:
         cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
         with ServingEngine(cfg, registry=registry) as eng:
@@ -113,6 +114,71 @@ def bench_engine_load_sweep(name: str = "fb_like",
               ["workload", "k", "offered_qps", "queries", "achieved_qps",
                "p50_ms", "p95_ms", "p99_ms", "device_batches", "host_batches"],
               rows)
+    return rows
+
+
+def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
+                       registry: IndexRegistry | None = None):
+    """Window-sweep scenario (query API v2): one vertex, ``W`` sliding
+    windows — the contact-tracing trajectory query.
+
+    Compares the pre-v2 client pattern (``W`` independent ``submit`` round
+    trips, each paying batcher deadline + its own route) against ONE
+    ``WindowSweep`` engine call (a single ``window_sweep`` device launch
+    for all cache-missing windows). Results are asserted identical; rows
+    land in the offered-load CSV with offered_qps labels ``perwin_w{W}`` /
+    ``sweep_w{W}``.
+    """
+    g = workload(name)
+    k = default_k(name)
+    if registry is None:
+        registry = IndexRegistry(capacity=4)
+        registry.register_graph(name, g)
+    rng = np.random.default_rng(seed)
+    u = int(rng.integers(0, g.n))
+    span = max(2, g.t_max // 10)
+    starts = np.linspace(1, max(1, g.t_max - span), W).astype(int)
+    windows = [(int(s), min(int(s) + span, g.t_max)) for s in starts]
+    rows = []
+
+    # -- W independent submits (the pre-v2 client loop) -------------------
+    cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
+    with ServingEngine(cfg, registry=registry) as eng:
+        eng.warmup(name, k)
+        t0 = time.perf_counter()
+        per_win = [eng.submit(name, k, u, ts, te).result(timeout=300)
+                   for (ts, te) in windows]
+        dt_perwin = time.perf_counter() - t0
+        snap = eng.stats()
+        e2e = snap["engine"]["latency"]["e2e"]
+        counters = snap["engine"]["counters"]
+        rows.append([name, k, f"perwin_w{W}", W, round(W / dt_perwin, 1),
+                     round(e2e["p50_ms"], 3), round(e2e["p95_ms"], 3),
+                     round(e2e["p99_ms"], 3),
+                     counters.get("device_batches", 0),
+                     counters.get("host_batches", 0)])
+
+    # -- one WindowSweep call --------------------------------------------
+    with ServingEngine(cfg, registry=registry) as eng:
+        eng.warmup(name, k, sweep=True)   # compile outside the measurement
+        t0 = time.perf_counter()
+        swept = eng.sweep(name, WindowSweep(u, k, windows), timeout=300)
+        dt_sweep = time.perf_counter() - t0
+        snap = eng.stats()
+        e2e = snap["engine"]["latency"]["sweep_exec"]
+        counters = snap["engine"]["counters"]
+        rows.append([name, k, f"sweep_w{W}", W, round(W / dt_sweep, 1),
+                     round(e2e["p50_ms"], 3), round(e2e["p95_ms"], 3),
+                     round(e2e["p99_ms"], 3),
+                     counters.get("sweep_launches", 0),
+                     counters.get("host_batches", 0)])
+
+    for res, want in zip(swept, per_win):
+        assert res.vertices == want, "sweep/per-window mismatch"
+    # the acceptance bar: one sweep launch beats W independent submits
+    assert dt_sweep < dt_perwin, (dt_sweep, dt_perwin)
+    print(f"[sweep] {name} k={k} u={u} W={W}: per-window {dt_perwin:.3f}s "
+          f"vs sweep {dt_sweep:.3f}s ({dt_perwin/dt_sweep:.1f}x)")
     return rows
 
 

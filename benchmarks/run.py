@@ -53,7 +53,7 @@ def main(argv=None):
     _emit("Batched TCCS engine (beyond paper; CPU-interpret caveat in module doc)",
           ["workload", "batch", "batched_us_per_q", "alg1_us_per_q", "speedup"],
           be.bench_batch_query("fb_like", batches=(32, 128) if args.fast else (32, 128, 512)))
-    _emit("Serving engine offered-load sweep (beyond paper)",
+    _emit("Serving engine offered-load sweep + window-sweep scenario (beyond paper)",
           ["workload", "k", "offered_qps", "queries", "achieved_qps",
            "p50_ms", "p95_ms", "p99_ms", "device_batches", "host_batches"],
           be.bench_engine_load_sweep(

@@ -5,38 +5,59 @@
 Given a confirmed infection and a day window, TCCS returns the *cohesive*
 exposure cohort — people who were in the k-core component of the patient
 during that window (repeated mutual contact), not merely anyone ever met.
-One PECB index answers all (patient x window) follow-ups in microseconds.
+
+Query API v2 turns the per-patient follow-up into ONE ``WindowSweep``: the
+incubation sweep (every 7-day window ending on day d) is a single engine
+call — one device launch for all windows — instead of a client-side loop
+of point queries. EDGES mode then yields the actual contact edges of the
+peak-day cohort for the tracers to walk.
+
+Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the network.
 """
 
+import os
 import time
 
 import numpy as np
 
+from repro.core import ResultMode, TCCSQuery, WindowSweep
 from repro.core.temporal_graph import gen_contact_network
-from repro.core.pecb_index import build_pecb_index
 from repro.core.kcore import k_max
+from repro.serving import EngineConfig, ServingEngine
 
-n_people, days = 400, 30
+TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
+n_people, days, n_patients = (120, 12, 3) if TINY else (400, 30, 5)
+
 g = gen_contact_network(n_people, days, seed=7)
 k = max(2, int(0.25 * k_max(g)))   # moderate cohesion: most patients have cohorts
 print(f"contact network: {n_people} people, {days} days, {g.m} contacts, k={k}")
 
-t0 = time.perf_counter()
-index = build_pecb_index(g, k)
-print(f"index built in {time.perf_counter()-t0:.2f}s "
-      f"({index.nbytes()/1e3:.0f} KB)")
-
-rng = np.random.default_rng(0)
-patients = rng.integers(0, n_people, 5)
-for patient in patients:
-    # incubation-window sweep: every 7-day window that ends on day d
-    exposed_by_day = {}
+with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
+    eng.register_graph("contacts", g)
     t0 = time.perf_counter()
-    for end_day in range(7, days + 1):
-        cohort = index.query(int(patient), end_day - 6, end_day)
-        if cohort:
-            exposed_by_day[end_day] = len(cohort)
-    dt = (time.perf_counter() - t0) * 1e3
-    peak = max(exposed_by_day.items(), key=lambda kv: kv[1]) if exposed_by_day else None
-    print(f"patient {patient:3d}: {len(exposed_by_day)} active windows "
-          f"({dt:.1f} ms total){f', peak cohort {peak[1]} on day {peak[0]}' if peak else ''}")
+    handle = eng.warmup("contacts", k)
+    print(f"index built in {time.perf_counter()-t0:.2f}s "
+          f"({handle.nbytes/1e3:.0f} KB)")
+
+    rng = np.random.default_rng(0)
+    patients = rng.integers(0, n_people, n_patients)
+    windows = [(end_day - 6, end_day) for end_day in range(7, days + 1)]
+    for patient in patients:
+        # incubation-window sweep: one engine call, one device launch
+        t0 = time.perf_counter()
+        traj = eng.sweep("contacts", WindowSweep(int(patient), k, windows))
+        dt = (time.perf_counter() - t0) * 1e3
+        active = {r.query.te: r.num_vertices for r in traj if r.num_vertices}
+        peak = max(active.items(), key=lambda kv: kv[1]) if active else None
+        print(f"patient {patient:3d}: {len(active)} active windows "
+              f"({dt:.1f} ms sweep)"
+              f"{f', peak cohort {peak[1]} on day {peak[0]}' if peak else ''}")
+        if peak:
+            # drill down: the peak cohort's actual contact edges
+            day = peak[0]
+            detail = eng.answer("contacts", TCCSQuery(
+                int(patient), day - 6, day, k, ResultMode.EDGES))
+            assert detail.vertices == traj[day - 7].vertices
+            print(f"             day {day}: {detail.num_edges} member "
+                  f"contacts among {detail.num_vertices} people "
+                  f"(route={detail.provenance.route})")

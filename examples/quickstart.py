@@ -1,16 +1,25 @@
-"""Quickstart: build a PECB index and answer TCCS queries.
+"""Quickstart: build a PECB index and answer TCCS queries via Query API v2.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Reproduces the paper's running example (Figure 1 / Example 4.14), then a
-random workload with oracle verification.
+Reproduces the paper's running example (Figure 1 / Example 4.14) through
+the typed query surface — vertices, the member-edge set, and the induced
+temporal subgraph of the component — then a random workload with oracle
+verification on every result mode.
+
+Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the random workload.
 """
+
+import os
 
 import numpy as np
 
+from repro.core import InvalidQueryError, ResultMode, TCCSQuery
 from repro.core.temporal_graph import TemporalGraph, gen_temporal_graph
 from repro.core.pecb_index import build_pecb_index
-from repro.core.kcore import tccs_oracle
+from repro.core.kcore import tccs_oracle, tccs_oracle_edges
+
+TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
 
 # --- the paper's Figure 1 graph (v1..v8 -> 0..7) -------------------------
 g = TemporalGraph.from_edges(8, [
@@ -22,24 +31,51 @@ g = TemporalGraph.from_edges(8, [
 index = build_pecb_index(g, k=2)
 
 # Example 4.14: query vertex v2, window [3, 5] -> component {v1, v2, v3}
-result = index.query(1, 3, 5)
-print("TCCS(v2, [3,5], k=2) =", sorted(f"v{v+1}" for v in result))
-assert result == {0, 1, 2}
+res = index.answer(TCCSQuery(u=1, ts=3, te=5, k=2))
+print("TCCS(v2, [3,5], k=2) =", sorted(f"v{v+1}" for v in res.vertices))
+assert res.vertices == {0, 1, 2}
+
+# the same query in SUBGRAPH mode: the induced temporal component
+sub = index.answer(TCCSQuery(1, 3, 5, 2, ResultMode.SUBGRAPH))
+print(f"  induced subgraph: {sub.num_vertices} vertices, "
+      f"{sub.subgraph.m} temporal edges "
+      f"{[(int(a), int(b), int(t)) for a, b, t in zip(sub.subgraph.src, sub.subgraph.dst, sub.subgraph.t)]}")
+assert sub.edges.vertex_projection() == res.vertices
 
 # Example 2.3: window [4, 5] has two 2-core components
-print("TCCS(v7, [4,5], k=2) =", sorted(f"v{v+1}" for v in index.query(6, 4, 5)))
+r2 = index.answer(TCCSQuery(6, 4, 5, 2))
+print("TCCS(v7, [4,5], k=2) =", sorted(f"v{v+1}" for v in r2.vertices))
+
+# windows beyond t_max canonicalize: same answer, same cache key
+wide = TCCSQuery(1, 3, 999, 2).canonical(g.t_max)
+assert wide == TCCSQuery(1, 3, g.t_max, 2)
+
+# malformed queries fail loudly at the boundary (no silent empty sets)
+for bad in (TCCSQuery(1, 5, 3, 2), TCCSQuery(99, 3, 5, 2), TCCSQuery(1, 3, 5, 1)):
+    try:
+        index.answer(bad)
+        raise AssertionError("InvalidQueryError expected")
+    except InvalidQueryError as e:
+        print(f"  rejected {bad.u, bad.ts, bad.te, bad.k}: {e}")
+
+# the legacy positional shim still answers (deprecated)
+assert index.query(1, 3, 5) == {0, 1, 2}
 
 # --- a random temporal graph, verified against brute force ---------------
-g2 = gen_temporal_graph(n=200, m=3000, t_max=60, seed=1)
+n, m, t_max, n_checks = (60, 600, 20, 40) if TINY else (200, 3000, 60, 200)
+g2 = gen_temporal_graph(n=n, m=m, t_max=t_max, seed=1)
 idx2 = build_pecb_index(g2, k=4)
 rng = np.random.default_rng(0)
 checked = 0
-for _ in range(200):
+for _ in range(n_checks):
     u = int(rng.integers(0, g2.n))
     ts = int(rng.integers(1, g2.t_max + 1))
     te = int(rng.integers(ts, g2.t_max + 1))
-    assert idx2.query(u, ts, te) == tccs_oracle(g2, 4, u, ts, te)
+    r = idx2.answer(TCCSQuery(u, ts, te, 4, ResultMode.EDGES))
+    assert r.vertices == tccs_oracle(g2, 4, u, ts, te)
+    assert r.edges.edge_ids() == tccs_oracle_edges(g2, 4, u, ts, te)
     checked += 1
-print(f"random graph: {checked} queries verified against the oracle")
+print(f"random graph: {checked} queries verified against the oracle "
+      "(vertices + member edges)")
 print(f"index: {idx2.num_nodes} forest nodes, {idx2.nbytes()/1e3:.1f} KB "
       f"for {g2.m} temporal edges")

@@ -1,14 +1,16 @@
-"""Serving-engine demo: contact-tracing traffic against one engine.
+"""Serving-engine demo: contact-tracing traffic through Query API v2.
 
 A health authority traces exposure cohorts on a contact network: "who was
 in the temporal k-core component of case u during days [ts, te]?". Traffic
 is mixed — two cohort densities (k=8 loose, k=10 tight), an initial sweep
 of fresh cases, then follow-up waves where many tracers re-check the same
 hot cases over canonical exposure windows (cache hits), plus sporadic
-single look-ups (straggler batches the planner routes to host Algorithm 1).
-One ServingEngine serves all of it: per-(workload, k) indexes are built and
-memoized by the registry; batched misses run on the device plane in
-power-of-two buckets.
+single look-ups (straggler batches the planner routes to host Algorithm 1)
+and periodic SUBGRAPH drill-downs on hot cases (full-mode device
+launches). One ServingEngine serves all of it through typed specs:
+per-(workload, k) indexes are built and memoized by the registry; batched
+misses run on the device plane in power-of-two buckets; every result
+carries provenance (route, batch shape, timings).
 
     PYTHONPATH=src python examples/serve_queries.py
 """
@@ -17,8 +19,9 @@ import time
 
 import numpy as np
 
-from repro.core.temporal_graph import gen_contact_network
+from repro.core import ResultMode, TCCSQuery
 from repro.serving import EngineConfig, ServingEngine
+from repro.core.temporal_graph import gen_contact_network
 
 
 def main():
@@ -32,15 +35,15 @@ def main():
     # canonical exposure windows tracers all use (days [ts, te])
     windows = [(d, min(d + 6, g.t_max)) for d in (1, 3, 4)]
 
-    def hot_query():
+    def hot_spec(k):
         u = int(rng.choice(hot_cases))
         ts, te = windows[int(rng.integers(len(windows)))]
-        return (u, ts, te)
+        return TCCSQuery(u, ts, te, k)
 
-    def fresh_query():
+    def fresh_spec(k):
         u = int(rng.integers(0, g.n))
         ts = int(rng.integers(1, g.t_max))
-        return (u, ts, min(ts + int(rng.integers(1, 7)), g.t_max))
+        return TCCSQuery(u, ts, min(ts + int(rng.integers(1, 7)), g.t_max), k)
 
     with ServingEngine(cfg) as eng:
         eng.register_graph("contacts", g)
@@ -54,9 +57,9 @@ def main():
 
         # -- phase 1: morning sweep — every hot case once, plus fresh ones
         for k in (8, 10):
-            reqs = [(int(u), *w) for u in hot_cases for w in windows]
-            reqs += [fresh_query() for _ in range(40)]
-            futures += eng.submit_many("contacts", k, reqs)
+            specs = [TCCSQuery(int(u), *w, k) for u in hot_cases for w in windows]
+            specs += [fresh_spec(k) for _ in range(40)]
+            futures += eng.submit_specs("contacts", specs)
         eng.flush()
         eng.drain()                            # results land, cache fills
 
@@ -64,22 +67,35 @@ def main():
         for wave in range(8):
             k = 8 if wave % 3 else 10
             n_req = int(rng.integers(15, 50))
-            reqs = [hot_query() if rng.random() < 0.5 else fresh_query()
-                    for _ in range(n_req)]
-            futures += eng.submit_many("contacts", k, reqs)
+            specs = [hot_spec(k) if rng.random() < 0.5 else fresh_spec(k)
+                     for _ in range(n_req)]
+            if wave % 2:                       # a drill-down on a hot case:
+                specs.append(TCCSQuery(        # induced subgraph, same batch
+                    int(rng.choice(hot_cases)), *windows[0], k,
+                    ResultMode.SUBGRAPH))
+            futures += eng.submit_specs("contacts", specs)
             if wave % 5 == 0:                  # a lone tracer's single query
-                futures.append(eng.submit("contacts", 8,
-                                          int(rng.integers(0, g.n)), 1, g.t_max))
+                futures.append(eng.submit_spec("contacts", TCCSQuery(
+                    int(rng.integers(0, g.n)), 1, g.t_max, 8)))
                 eng.flush()
         eng.flush()
         results = [f.result(timeout=120) for f in futures]
         dt = time.perf_counter() - t0
 
-        sizes = np.asarray([len(r) for r in results])
+        sizes = np.asarray([r.num_vertices for r in results])
+        routes = {}
+        for r in results:
+            routes[r.provenance.route] = routes.get(r.provenance.route, 0) + 1
         print(f"\n[serve] {len(results)} queries in {dt:.3f}s "
               f"-> {len(results)/dt:,.0f} q/s")
         print(f"[serve] cohort sizes: median={int(np.median(sizes))} "
               f"max={int(sizes.max())} empty={(sizes == 0).sum()}")
+        print(f"[serve] result routes: {routes}")
+        subs = [r for r in results if r.query.mode is ResultMode.SUBGRAPH]
+        for r in subs[:3]:
+            print(f"[serve] drill-down case {r.query.u} days "
+                  f"[{r.query.ts},{r.query.te}]: {r.num_vertices} people, "
+                  f"{r.num_edges} contacts (route={r.provenance.route})")
 
         snap = eng.stats()
         e2e = snap["engine"]["latency"]["e2e"]
@@ -92,8 +108,8 @@ def main():
         # spot-check exactness against host Algorithm 1
         h8 = eng.registry.get("contacts", 8)
         u0, (ts0, te0) = int(hot_cases[0]), windows[0]
-        assert eng.query("contacts", 8, u0, ts0, te0) == \
-            frozenset(h8.pecb.query(u0, ts0, te0))
+        got = eng.answer("contacts", TCCSQuery(u0, ts0, te0, 8))
+        assert got.vertices == frozenset(h8.pecb.query(u0, ts0, te0))
         print("[verify] engine result == Algorithm 1 on spot check")
 
 

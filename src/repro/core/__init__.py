@@ -1,3 +1,20 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Historical k-core search core: temporal graphs, core times, the ECB
+forest / PECB index and baselines, the batched device query plane, and the
+typed Query API v2 surface (DESIGN.md §8) they all answer through."""
+
+from .query_api import (
+    EdgeSet,
+    InvalidQueryError,
+    Provenance,
+    ResultMode,
+    TCCSBackend,
+    TCCSQuery,
+    TCCSResult,
+    VersionStore,
+    WindowSweep,
+)
+
+__all__ = [
+    "EdgeSet", "InvalidQueryError", "Provenance", "ResultMode",
+    "TCCSBackend", "TCCSQuery", "TCCSResult", "VersionStore", "WindowSweep",
+]

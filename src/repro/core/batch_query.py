@@ -1,4 +1,4 @@
-"""Batched TCCS query engine (device plane; beyond-paper, DESIGN.md §3).
+"""Batched TCCS query engine (device plane; beyond-paper, DESIGN.md §3, §8).
 
 Algorithm 1 answers one query in tens of microseconds on a CPU by chasing
 pointers. A TPU should instead answer *thousands of queries per launch*.
@@ -25,14 +25,32 @@ builder: a node participates for query b iff
 stale entries of expired nodes harmless here (the host DFS never reaches
 them; the data-parallel propagation must mask them explicitly).
 
-Output equality with Algorithm 1 is asserted in tests for random graphs and
+Query API v2 additions (DESIGN.md §8):
+
+* :func:`batch_query_full` — besides the vertex mask, derives **edge
+  membership** on device: the converged labels give forest-node membership
+  (``label[b, x] == label[b, entry_b]``, the masked gather inside
+  :func:`_component_masks` that already produces the vertex mask), and a
+  *core-time version* j is then a member iff its record covers ``ts_b``,
+  ``ct_j <= te_b`` and the vertex mask is set at its ``src`` endpoint (one
+  gather over the version arrays, :func:`_version_member`). The resulting
+  ``(B, V)`` mask is exact against the brute-force induced-edge oracle —
+  it feeds the EDGES/SUBGRAPH result modes without any host-side graph
+  traversal.
+* :func:`window_sweep` — the same vertex over W sliding windows in ONE
+  launch (the contact-tracing trajectory query). The per-vertex entry
+  segment ``[vrow_ptr[u], vrow_ptr[u+1])`` is resolved once and shared by
+  all windows; everything downstream reuses the batched propagation core
+  with B = W.
+
+Output equality with Algorithm 1 (and, for edge modes, with
+``kcore.tccs_oracle_edges``) is asserted in tests for random graphs and
 random query batches.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
@@ -63,8 +81,15 @@ class DeviceIndex:
     vrow_ptr: jnp.ndarray
     vent_ts: jnp.ndarray
     vent_node: jnp.ndarray
+    # core-time version arrays (query API v2: EDGES/SUBGRAPH modes).
+    # Padded to length >= 1 with inert records (ts_from=1, ts_to=0).
+    ver_ts_from: jnp.ndarray
+    ver_ts_to: jnp.ndarray
+    ver_ct: jnp.ndarray
+    ver_src: jnp.ndarray
     max_node_entries: int     # static: longest per-node entry list
     max_vert_entries: int     # static: longest per-vertex entry list
+    num_versions: int         # static: true version count (pre-padding)
 
     @property
     def num_nodes(self) -> int:
@@ -75,8 +100,10 @@ _ARRAY_FIELDS = (
     "node_u", "node_v", "node_ct", "live_from", "live_to",
     "row_ptr", "ent_ts", "ent_left", "ent_right", "ent_parent",
     "vrow_ptr", "vent_ts", "vent_node",
+    "ver_ts_from", "ver_ts_to", "ver_ct", "ver_src",
 )
-_META_FIELDS = ("n", "t_max", "max_node_entries", "max_vert_entries")
+_META_FIELDS = ("n", "t_max", "max_node_entries", "max_vert_entries",
+                "num_versions")
 
 jax.tree_util.register_pytree_node(
     DeviceIndex,
@@ -91,6 +118,8 @@ def to_device(index: PECBIndex) -> DeviceIndex:
     i32 = lambda a: jnp.asarray(np.asarray(a, np.int32))
     seg = np.diff(index.row_ptr)
     vseg = np.diff(index.vrow_ptr)
+    store = index.versions
+    has_vers = store is not None and store.num_versions > 0
     return DeviceIndex(
         n=index.n,
         t_max=index.t_max,
@@ -107,8 +136,13 @@ def to_device(index: PECBIndex) -> DeviceIndex:
         vrow_ptr=i32(index.vrow_ptr),
         vent_ts=i32(index.vent_ts) if index.vent_ts.size else jnp.zeros((1,), jnp.int32),
         vent_node=i32(index.vent_node) if index.vent_node.size else jnp.full((1,), NONE, jnp.int32),
+        ver_ts_from=i32(store.ts_from) if has_vers else jnp.ones((1,), jnp.int32),
+        ver_ts_to=i32(store.ts_to) if has_vers else jnp.zeros((1,), jnp.int32),
+        ver_ct=i32(store.ct) if has_vers else jnp.zeros((1,), jnp.int32),
+        ver_src=i32(store.src) if has_vers else jnp.zeros((1,), jnp.int32),
         max_node_entries=int(seg.max()) if seg.size else 0,
         max_vert_entries=int(vseg.max()) if vseg.size else 0,
+        num_versions=store.num_versions if has_vers else 0,
     )
 
 
@@ -129,28 +163,39 @@ def _lower_bound(ts_arr: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     return lo
 
 
-@jax.jit
-def batch_query(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
-                te: jnp.ndarray) -> jnp.ndarray:
-    """bool[B, n] vertex-membership of each query's k-core component."""
-    B = u.shape[0]
-    N = dix.num_nodes
-    n = dix.n
-    if N == 0:
-        return jnp.zeros((B, n), bool)
-
+def _entry_steps(dix: DeviceIndex) -> tuple[int, int]:
     vsteps = int(np.ceil(np.log2(max(dix.max_vert_entries, 1) + 1))) + 1
     nsteps = int(np.ceil(np.log2(max(dix.max_node_entries, 1) + 1))) + 1
+    return vsteps, nsteps
 
-    # -- 1. entry nodes ------------------------------------------------
-    vlo = dix.vrow_ptr[u]
-    vhi = dix.vrow_ptr[u + 1]
+
+def _entry_nodes(dix: DeviceIndex, vlo, vhi, ts, te):
+    """Resolve entry nodes given per-query vertex CSR bounds (Alg 1 line 3).
+    Returns (e0_ok, e0c): validity mask + clipped entry node ids."""
+    vsteps, _ = _entry_steps(dix)
+    N = dix.num_nodes
     vi = _lower_bound(dix.vent_ts, vlo, vhi, ts, vsteps)
     has_entry = vi < vhi
-    e0 = jnp.where(has_entry, dix.vent_node[jnp.clip(vi, 0, dix.vent_ts.shape[0] - 1)], NONE)
+    e0 = jnp.where(has_entry,
+                   dix.vent_node[jnp.clip(vi, 0, dix.vent_ts.shape[0] - 1)],
+                   NONE)
     e0_ok = has_entry & (e0 >= 0)
     e0c = jnp.clip(e0, 0, N - 1)
     e0_ok = e0_ok & (dix.node_ct[e0c] <= te)
+    return e0_ok, e0c
+
+
+def _component_masks(dix: DeviceIndex, e0_ok, e0c, ts, te) -> jnp.ndarray:
+    """Steps 2-5: per-(query, node) link resolution, activity masking,
+    min-label propagation, membership collection.
+
+    Returns the ``bool[B, n]`` vertex mask: forest-node membership is the
+    converged-label derivation (``label[x] == label[entry_b]``, masked by
+    activity), scattered to the member nodes' endpoints."""
+    B = ts.shape[0]
+    N = dix.num_nodes
+    n = dix.n
+    _, nsteps = _entry_steps(dix)
 
     # -- 2. per-(query, node) link resolution ---------------------------
     lo = jnp.broadcast_to(dix.row_ptr[:-1][None, :], (B, N))
@@ -193,8 +238,8 @@ def batch_query(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
 
     labels, _ = jax.lax.while_loop(lambda s: s[1], body, (labels0, jnp.array(True)))
 
-    # -- 5. collect vertices of the entry component ----------------------
-    root = jnp.take_along_axis(labels, jnp.clip(e0c, 0, N - 1)[:, None], axis=1)
+    # -- 5. membership: label[x] == label[entry_b], masked by activity ----
+    root = jnp.take_along_axis(labels, e0c[:, None], axis=1)
     member = active & (labels == root) & e0_ok[:, None]
 
     out = jnp.zeros((B, n), jnp.int32)
@@ -202,6 +247,66 @@ def batch_query(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
     out = out.at[rows, jnp.broadcast_to(dix.node_u[None, :], (B, N))].max(member.astype(jnp.int32))
     out = out.at[rows, jnp.broadcast_to(dix.node_v[None, :], (B, N))].max(member.astype(jnp.int32))
     return out.astype(bool)
+
+
+def _version_member(dix: DeviceIndex, vertex_mask, ts, te):
+    """bool[B, V] core-time version membership: version j is a member edge
+    for query b iff its record covers ``ts_b``, ``ct_j <= te_b`` and its
+    src endpoint is in the component (one gather over the vertex mask)."""
+    src_in = vertex_mask[:, dix.ver_src]
+    return (
+        (dix.ver_ts_from[None, :] <= ts[:, None])
+        & (ts[:, None] <= dix.ver_ts_to[None, :])
+        & (dix.ver_ct[None, :] <= te[:, None])
+        & src_in
+    )
+
+
+@jax.jit
+def batch_query(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
+                te: jnp.ndarray) -> jnp.ndarray:
+    """bool[B, n] vertex-membership of each query's k-core component."""
+    B = u.shape[0]
+    if dix.num_nodes == 0:
+        return jnp.zeros((B, dix.n), bool)
+    e0_ok, e0c = _entry_nodes(dix, dix.vrow_ptr[u], dix.vrow_ptr[u + 1], ts, te)
+    return _component_masks(dix, e0_ok, e0c, ts, te)
+
+
+@jax.jit
+def batch_query_full(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
+                     te: jnp.ndarray):
+    """(bool[B, n] vertex mask, bool[B, V] version-membership mask).
+
+    The version mask is the device-side EDGES/SUBGRAPH payload: exactly the
+    member edges of each query's component (oracle-exact; see module doc).
+    """
+    B = u.shape[0]
+    if dix.num_nodes == 0:
+        return (jnp.zeros((B, dix.n), bool),
+                jnp.zeros((B, dix.ver_src.shape[0]), bool))
+    e0_ok, e0c = _entry_nodes(dix, dix.vrow_ptr[u], dix.vrow_ptr[u + 1], ts, te)
+    vmask = _component_masks(dix, e0_ok, e0c, ts, te)
+    return vmask, _version_member(dix, vmask, ts, te)
+
+
+@jax.jit
+def window_sweep(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
+                 te: jnp.ndarray) -> jnp.ndarray:
+    """bool[W, n] vertex masks for ONE vertex over W windows, one launch.
+
+    ``u`` is a scalar: the vertex's entry segment ``[vrow_ptr[u],
+    vrow_ptr[u+1])`` is resolved once and shared by every window — the
+    sweep never re-gathers per-query CSR bounds the way ``batch_query``
+    must for a heterogeneous batch.
+    """
+    W = ts.shape[0]
+    if dix.num_nodes == 0:
+        return jnp.zeros((W, dix.n), bool)
+    vlo = jnp.broadcast_to(dix.vrow_ptr[u], (W,))
+    vhi = jnp.broadcast_to(dix.vrow_ptr[u + 1], (W,))
+    e0_ok, e0c = _entry_nodes(dix, vlo, vhi, ts, te)
+    return _component_masks(dix, e0_ok, e0c, ts, te)
 
 
 def batch_query_np(index: PECBIndex, queries: list[tuple[int, int, int]]) -> list[set[int]]:
@@ -212,3 +317,19 @@ def batch_query_np(index: PECBIndex, queries: list[tuple[int, int, int]]) -> lis
     te = jnp.asarray([q[2] for q in queries], jnp.int32)
     mask = np.asarray(batch_query(dix, u, ts, te))
     return [set(np.nonzero(row)[0].tolist()) for row in mask]
+
+
+def batch_query_edges_np(index: PECBIndex,
+                         queries: list[tuple[int, int, int]]) -> list[set[int]]:
+    """Host wrapper over :func:`batch_query_full` returning per-query member
+    *edge id* sets (for tests/benches)."""
+    dix = to_device(index)
+    store = index.versions
+    if store is None:
+        raise ValueError("index has no version store")
+    u = jnp.asarray([q[0] for q in queries], jnp.int32)
+    ts = jnp.asarray([q[1] for q in queries], jnp.int32)
+    te = jnp.asarray([q[2] for q in queries], jnp.int32)
+    _, vermask = batch_query_full(dix, u, ts, te)
+    vermask = np.asarray(vermask)[:, :dix.num_versions]
+    return [set(store.edge_id[np.nonzero(row)[0]].tolist()) for row in vermask]

@@ -20,6 +20,7 @@ import numpy as np
 
 from .core_time import CoreTimeTable, edge_core_times
 from .ecb_forest import NONE, IncrementalBuilder
+from .query_api import ComponentBackend, VersionStore
 from .temporal_graph import TemporalGraph
 
 
@@ -40,11 +41,14 @@ class _VertexCentricBuilder(IncrementalBuilder):
         super().flush(ts)
 
 
-class CTMSFIndex:
+class CTMSFIndex(ComponentBackend):
+    backend_name = "ctmsf"
+
     def __init__(self, g: TemporalGraph, k: int, tab: CoreTimeTable | None = None):
         self.g = g
         self.k = k
         tab = tab if tab is not None else edge_core_times(g, k)
+        self.versions = VersionStore.from_table(g, k, tab)  # v2 surface
         b = _VertexCentricBuilder(g, tab).run()
         N = b.num_nodes
         self.node_u = np.asarray(b.n_u[:N], np.int32)
@@ -70,6 +74,10 @@ class CTMSFIndex:
         return ent[i][1]
 
     def query(self, u: int, ts: int, te: int) -> set[int]:
+        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``."""
+        return self._component_vertices(u, ts, te)
+
+    def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:
         first = self._list_at(u, ts)
         if not first or self.node_ct[first[0]] > te:
             return set()

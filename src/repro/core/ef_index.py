@@ -34,6 +34,7 @@ import numpy as np
 from .core_time import CoreTimeTable, edge_core_times
 from .ctmsf import kruskal_msf
 from .ecb_forest import active_versions
+from .query_api import ComponentBackend, VersionStore
 from .temporal_graph import TemporalGraph
 
 
@@ -69,11 +70,14 @@ class _ChainForest:
                        self.node_u.nbytes + self.node_v.nbytes + self.node_ct.nbytes)
 
 
-class EFIndex:
+class EFIndex(ComponentBackend):
+    backend_name = "ef"
+
     def __init__(self, g: TemporalGraph, k: int, tab: CoreTimeTable | None = None):
         self.g = g
         self.k = k
         tab = tab if tab is not None else edge_core_times(g, k)
+        self.versions = VersionStore.from_table(g, k, tab)  # v2 surface
         t_max = g.t_max
         self.t_max = t_max
 
@@ -124,6 +128,10 @@ class EFIndex:
 
     # -- label-constrained DFS over the chain's MTSF ----------------------
     def query(self, u: int, ts: int, te: int) -> set[int]:
+        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``."""
+        return self._component_vertices(u, ts, te)
+
+    def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:
         if not (1 <= ts <= self.t_max):
             return set()
         f = self.forests[int(self.ts_to_forest[ts])]

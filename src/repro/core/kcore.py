@@ -93,6 +93,26 @@ def tccs_oracle(g: TemporalGraph, k: int, u: int, ts: int, te: int) -> set[int]:
     return set(int(v) for v in comp if touched[v])
 
 
+def tccs_oracle_edges(g: TemporalGraph, k: int, u: int, ts: int, te: int) -> set[int]:
+    """Brute-force member edges of u's k-core component in G_[ts,te]:
+    edge ids (into g) of the temporal k-core edges with an endpoint in the
+    component (components partition core edges, so one endpoint in implies
+    both). Ground truth for the v2 EDGES/SUBGRAPH result modes."""
+    ids = temporal_kcore_edges(g, k, ts, te)
+    if ids.size == 0:
+        return set()
+    s, d = g.src[ids], g.dst[ids]
+    touched = np.zeros(g.n, bool)
+    touched[s] = True
+    touched[d] = True
+    if not touched[u]:
+        return set()
+    comp = connected_component(s, d, g.n, u)
+    in_comp = np.zeros(g.n, bool)
+    in_comp[comp] = True
+    return set(int(e) for e in ids[in_comp[s]])
+
+
 def k_max(g: TemporalGraph) -> int:
     """Largest k with a non-empty k-core of the full window (paper Table 3)."""
     s, d = g.src, g.dst

@@ -9,6 +9,13 @@ Entry resolution for a node at start time ``ts`` is the paper's binary
 search: the entry with the smallest recorded start time >= ts (entries are
 recorded while ts descends, only on change). Nodes/vertices whose earliest
 recorded entry is below ``ts`` are not in the forest at ``ts``.
+
+Query surface: the typed v2 API (``answer(TCCSQuery) -> TCCSResult``, via
+:class:`repro.core.query_api.ComponentBackend`) is primary; ``query(u, ts,
+te)`` remains as a thin deprecation shim over the same component routine.
+The attached :class:`VersionStore` (the core-time table carried through
+construction) powers the EDGES/SUBGRAPH modes; it is deliberately excluded
+from ``nbytes()`` so the paper's index-size comparison stays undistorted.
 """
 
 from __future__ import annotations
@@ -19,11 +26,12 @@ import numpy as np
 
 from .core_time import CoreTimeTable, edge_core_times
 from .ecb_forest import NONE, ForestInvariantError, IncrementalBuilder
+from .query_api import ComponentBackend, VersionStore
 from .temporal_graph import TemporalGraph
 
 
 @dataclasses.dataclass
-class PECBIndex:
+class PECBIndex(ComponentBackend):
     n: int
     m: int
     t_max: int
@@ -45,6 +53,11 @@ class PECBIndex:
     vrow_ptr: np.ndarray      # int32[n+1]
     vent_ts: np.ndarray       # int32[VE]
     vent_node: np.ndarray     # int32[VE]
+    # v2 query surface: per-version membership metadata (EDGES/SUBGRAPH
+    # modes); not index payload, excluded from nbytes()
+    versions: VersionStore | None = None
+
+    backend_name = "pecb"
 
     @property
     def num_nodes(self) -> int:
@@ -78,7 +91,15 @@ class PECBIndex:
 
     # -- Algorithm 1 -----------------------------------------------------
     def query(self, u: int, ts: int, te: int) -> set[int]:
-        """All vertices of the temporal k-core component of u in [ts, te]."""
+        """All vertices of the temporal k-core component of u in [ts, te].
+
+        .. deprecated:: kept as a thin shim over the v2 surface; prefer
+           ``answer(TCCSQuery(u, ts, te, k))`` which validates, carries
+           result modes and records provenance.
+        """
+        return self._component_vertices(u, ts, te)
+
+    def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:
         e0 = self.entry_node(u, ts)
         if e0 == NONE or self.node_ct[e0] > te:
             return set()
@@ -130,6 +151,7 @@ def pack_index(g: TemporalGraph, k: int, b: IncrementalBuilder) -> PECBIndex:
         i32(b.n_live_from), i32(b.n_live_to),
         row_ptr, ent_ts, ent_l, ent_r, ent_p,
         vrow_ptr, vent_ts, vent_node,
+        versions=VersionStore.from_table(g, k, b.tab),
     )
 
 

@@ -1,15 +1,30 @@
-"""TCCS serving engine (DESIGN.md §7): shape-bucketed micro-batching,
+"""TCCS serving engine (DESIGN.md §7, §8): shape-bucketed micro-batching,
 host/device query planning, per-query LRU result caching, a memoizing
-(workload, k) index registry, and batch-dim-sharded device execution.
+(workload, k) index registry, and batch-dim-sharded device execution, all
+behind the typed Query API v2 surface.
 
 Quick start::
 
+    from repro.core import ResultMode, TCCSQuery, WindowSweep
     from repro.serving import EngineConfig, ServingEngine
 
     with ServingEngine(EngineConfig(max_batch=256, flush_ms=2.0)) as eng:
-        fut = eng.submit("cm_like", k=3, u=17, ts=4, te=90)
-        print(sorted(fut.result()))      # == PECBIndex.query(17, 4, 90)
+        res = eng.answer("cm_like", TCCSQuery(u=17, ts=4, te=90, k=3))
+        print(sorted(res.vertices), res.provenance.route)
+        cohort = eng.answer("cm_like", TCCSQuery(17, 4, 90, 3,
+                                                 ResultMode.SUBGRAPH))
+        print(cohort.subgraph.m, "member edges")
+        traj = eng.sweep("cm_like", WindowSweep(u=17, k=3,
+                                                windows=[(d, d + 6)
+                                                         for d in range(1, 80)]))
+
+The positional ``submit``/``submit_many``/``query`` signatures remain as
+deprecation shims resolving with the vertex frozenset.
 """
+
+from repro.core.query_api import (EdgeSet, InvalidQueryError, Provenance,
+                                  ResultMode, TCCSBackend, TCCSQuery,
+                                  TCCSResult, WindowSweep)
 
 from .batcher import MicroBatcher, Request
 from .cache import ResultCache
@@ -25,4 +40,7 @@ __all__ = [
     "QueryPlanner", "ShardedExecutor", "bucket_size", "pad_queries",
     "PAD_QUERY", "ResultCache", "IndexHandle", "IndexRegistry",
     "EngineMetrics", "LatencyHistogram",
+    # query API v2 (re-exported from repro.core.query_api)
+    "TCCSQuery", "TCCSResult", "ResultMode", "WindowSweep",
+    "InvalidQueryError", "Provenance", "EdgeSet", "TCCSBackend",
 ]

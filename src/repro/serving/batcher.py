@@ -27,7 +27,13 @@ from typing import Callable, Sequence
 
 @dataclasses.dataclass
 class Request:
-    """One TCCS query in flight."""
+    """One TCCS query in flight.
+
+    ``spec`` is the canonical :class:`repro.core.query_api.TCCSQuery` the
+    engine resolved (mode, k, clamped window); the positional ``u/ts/te``
+    mirror it for the device plane's array packing and for legacy callers
+    that construct bare requests.
+    """
 
     u: int
     ts: int
@@ -35,6 +41,7 @@ class Request:
     future: Future
     t_submit: float          # engine submit time (e2e latency anchor)
     t_enqueue: float = 0.0   # batcher enqueue time (queue-wait anchor)
+    spec: object | None = None  # canonical TCCSQuery (query API v2)
 
 
 class MicroBatcher:

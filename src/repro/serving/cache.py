@@ -1,10 +1,17 @@
 """Per-query LRU result cache (DESIGN.md §7.3).
 
 TCCS answers are immutable for a frozen index, so a result cache in front of
-the planner is exact, never stale: key = (index key, u, ts, te), value = the
-frozen vertex set. Real query streams are heavily skewed (contact tracing
-re-queries the same hot cases; the bench workloads draw vertices from a
-Zipf), which is what makes an LRU worthwhile before any device work.
+the planner is exact, never stale: key = (index key, canonical spec key),
+value = the :class:`TCCSResult`. Canonicalization (query_api) means every
+window clamped to ``[1, t_max]`` and every empty window share one entry.
+Real query streams are heavily skewed (contact tracing re-queries the same
+hot cases; the bench workloads draw vertices from a Zipf), which is what
+makes an LRU worthwhile before any device work.
+
+When the index registry evicts a (workload, k) pair, the engine's eviction
+listener calls :meth:`ResultCache.purge_index` so stale keys for dead
+handles stop occupying LRU capacity (they could never be hit *wrongly* —
+results are immutable — but they crowd out live entries).
 
 Thread-safe; the engine consults it on the submit path (caller thread) and
 fills it from batcher worker threads.
@@ -29,6 +36,7 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.purges = 0
 
     def get(self, key):
         with self._lock:
@@ -52,6 +60,19 @@ class ResultCache:
                 self._data.popitem(last=False)
                 self.evictions += 1
 
+    def purge_index(self, index_key) -> int:
+        """Drop every entry whose key belongs to ``index_key`` (an evicted
+        (workload, k) pair). Engine cache keys are ``(index_key, spec_key)``
+        tuples; foreign-shaped keys are left alone. Returns purge count."""
+        with self._lock:
+            dead = [k for k in self._data
+                    if isinstance(k, tuple) and len(k) == 2
+                    and k[0] == index_key]
+            for k in dead:
+                del self._data[k]
+            self.purges += len(dead)
+            return len(dead)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._data)
@@ -64,4 +85,5 @@ class ResultCache:
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "purges": self.purges,
             }

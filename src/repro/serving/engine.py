@@ -1,23 +1,38 @@
-"""TCCS serving engine: the user-facing facade (DESIGN.md §7).
+"""TCCS serving engine: the user-facing facade (DESIGN.md §7, §8).
 
 Wires the subsystem together::
 
-    submit(workload, k, u, ts, te)
+    submit_spec(workload, TCCSQuery(u, ts, te, k, mode))
+        -> validate + canonicalize            (InvalidQueryError at the
+                                               boundary; clamped windows
+                                               share one cache key; empty
+                                               windows resolve instantly)
         -> registry.get_nowait(workload, k)   (memoized handle, or kick off
                                                the background build; a cold
                                                key never blocks the caller)
-        -> result cache probe                 (hit: resolve immediately)
+        -> result cache probe                 (hit: resolve immediately,
+                                               re-stamped route="cache")
         -> per-handle micro-batcher           (shape-bucketed batching;
                                                cold keys enqueue when the
                                                build future resolves)
-        -> planner                            (host Alg 1 | sharded device)
-        -> future resolves with frozenset of component vertices
+        -> planner                            (host typed answer | sharded
+                                               device, full-mode launch
+                                               when the batch wants edges)
+        -> future resolves with a TCCSResult
 
-Results are always identical to ``PECBIndex.query`` (Algorithm 1) — the
-engine only changes *where and when* the answer is computed, never *what*;
-tests assert exact equality across every route.
+``sweep(workload, WindowSweep(u, k, windows))`` answers one vertex over
+many sliding windows in a single device launch (the contact-tracing
+trajectory query); cache-hot windows are skipped, misses share one
+``window_sweep`` program.
 
-Thread-safety: ``submit`` may be called from any number of caller threads;
+Results are always identical to ``PECBIndex.answer`` (Algorithm 1 plus the
+version-store edge derivation) — the engine only changes *where and when*
+the answer is computed, never *what*; tests assert exact equality across
+every route. The positional ``submit``/``submit_many``/``query`` signatures
+remain as thin deprecation shims whose futures resolve with the component
+vertex frozenset, exactly as before v2.
+
+Thread-safety: ``submit*`` may be called from any number of caller threads;
 each index handle owns one batcher worker thread; the registry serializes
 builds per key. ``close()`` (or the context manager) drains and stops all
 workers.
@@ -31,12 +46,30 @@ from concurrent.futures import Future
 from threading import Lock
 from typing import Iterable, Sequence
 
+from repro.core.query_api import (InvalidQueryError, Provenance, TCCSQuery,
+                                  TCCSResult, WindowSweep, empty_result)
+
 from .batcher import MicroBatcher, Request
 from .cache import ResultCache
 from .executor import ShardedExecutor
 from .metrics import EngineMetrics
-from .planner import QueryPlanner
+from .planner import QueryPlanner, assemble_device_results
 from .registry import IndexHandle, IndexRegistry
+
+
+def _vertices_future(inner: Future) -> Future:
+    """Legacy-shim adapter: a future resolving with ``result.vertices``."""
+    outer: Future = Future()
+
+    def _done(f: Future) -> None:
+        exc = f.exception()
+        if exc is not None:
+            outer.set_exception(exc)
+        else:
+            outer.set_result(f.result().vertices)
+
+    inner.add_done_callback(_done)
+    return outer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,9 +111,13 @@ class ServingEngine:
     def register_graph(self, name: str, g) -> None:
         self.registry.register_graph(name, g)
 
-    def warmup(self, workload: str, k: int) -> IndexHandle:
-        """Build the (workload, k) index and pre-compile every bucket shape,
-        so no live request pays a build or an XLA compile."""
+    def warmup(self, workload: str, k: int, *, sweep: bool = False,
+               full: bool = False) -> IndexHandle:
+        """Build the (workload, k) index and pre-compile every bucket shape
+        of the vertex-mask program, so no live request pays a build or an
+        XLA compile. ``sweep=True`` / ``full=True`` additionally warm the
+        window-sweep / full-mode (EDGES) programs for callers that will use
+        those paths."""
         handle = self.registry.get(workload, k)
         if handle.pecb.num_nodes == 0:
             return handle  # host-only route, nothing to compile
@@ -90,6 +127,10 @@ class ServingEngine:
             bucket = self.executor.final_bucket(
                 min(b, cfg.max_batch), cfg.min_bucket, cfg.max_batch)
             self.executor.run(handle.device, [0], [1], [0], bucket)
+            if sweep:
+                self.executor.run_sweep(handle.device, 0, [1], [0], bucket)
+            if full:
+                self.executor.run_full(handle.device, [0], [1], [0], bucket)
             if b >= cfg.max_batch:
                 break
             b *= 2
@@ -99,39 +140,118 @@ class ServingEngine:
         """Kick off (or join) the background index build; never blocks."""
         return self.registry.get_async(workload, k)
 
-    # -- query paths -----------------------------------------------------
+    # -- query paths: v2 typed surface -----------------------------------
+    def submit_spec(self, workload: str, spec: TCCSQuery) -> Future:
+        """Future resolving with a :class:`TCCSResult`. Malformed specs
+        (``ts > te``, out-of-range ``u``, ``k < 2``) raise
+        :class:`InvalidQueryError` here, at the boundary."""
+        return self.submit_specs(workload, [spec])[0]
+
+    def submit_specs(self, workload: str,
+                     specs: Iterable[TCCSQuery]) -> list[Future]:
+        """One TCCSResult future per spec, in input order; specs may mix k
+        values (each k routes to its own index/batcher) and result modes
+        (a batch launches the full-mode device program iff any of its
+        members wants EDGES/SUBGRAPH)."""
+        specs = list(specs)
+        # validate the WHOLE call before any group is enqueued: a malformed
+        # spec in a later k-group must not leave earlier groups already
+        # submitted (all-or-nothing across groups, not just within one)
+        try:
+            g = self.registry.resolve_graph(workload)
+        except KeyError:
+            g = None
+        for s in specs:
+            s.validate(n=g.n if g is not None else None)
+        futures: list = [None] * len(specs)
+        groups: dict[int, list[int]] = {}
+        for i, s in enumerate(specs):
+            groups.setdefault(s.k, []).append(i)
+        for k, idxs in groups.items():
+            fs = self._submit_specs(workload, k, [specs[i] for i in idxs],
+                                    lenient=False)
+            for i, f in zip(idxs, fs):
+                futures[i] = f
+        return futures
+
+    def answer(self, workload: str, spec: TCCSQuery,
+               timeout: float | None = 60.0) -> TCCSResult:
+        """Synchronous v2 convenience wrapper."""
+        return self.submit_spec(workload, spec).result(timeout=timeout)
+
+    # -- query paths: legacy positional shims ----------------------------
     def submit(self, workload: str, k: int, u: int, ts: int, te: int) -> Future:
+        """Deprecated shim over :meth:`submit_spec`; resolves with the
+        vertex frozenset and keeps the lenient pre-v2 semantics (malformed
+        windows answer the empty set instead of raising)."""
         return self.submit_many(workload, k, [(u, ts, te)])[0]
 
     def submit_many(self, workload: str, k: int,
                     queries: Iterable[Sequence[int]]) -> list[Future]:
-        """One future per (u, ts, te), in input order. Cache hits resolve
-        before this returns; misses resolve when their batch flushes. A cold
-        (workload, k) never blocks the caller: the index builds on the
-        registry's background pool and the misses are enqueued when the
-        handle future resolves."""
+        """Deprecated shim: one vertex-frozenset future per (u, ts, te), in
+        input order, lenient validation. Cache hits resolve before this
+        returns; misses resolve when their batch flushes."""
+        specs = [TCCSQuery(int(u), int(ts), int(te), int(k))
+                 for (u, ts, te) in queries]
+        inner = self._submit_specs(workload, int(k), specs, lenient=True)
+        return [_vertices_future(f) for f in inner]
+
+    # -- the shared submit core ------------------------------------------
+    def _submit_specs(self, workload: str, k: int, specs: list[TCCSQuery],
+                      *, lenient: bool) -> list[Future]:
+        """Validate/canonicalize, short-circuit trivial queries and cache
+        hits, batch the misses. A cold (workload, k) never blocks the
+        caller: the index builds on the registry's background pool and the
+        misses are enqueued when the handle future resolves."""
         if self._closed:
             raise RuntimeError("engine is closed")
         key = (workload, int(k))
         # probe only: don't schedule a build until a cache miss proves one
         # is needed (a fully-cached stream must not rebuild an evicted index)
         handle = self.registry.get_nowait(workload, k, start_build=False)
+        g = None
+        try:
+            g = self.registry.resolve_graph(workload)
+        except KeyError:
+            pass  # unknown workload: surface as the build future's error
+        # validate every spec before creating any future (all-or-nothing:
+        # a boundary error must not leave earlier futures dangling)
+        prepared: list[tuple[TCCSQuery, bool]] = []
+        for spec in specs:
+            if g is not None:
+                if not lenient:
+                    spec.validate(n=g.n)
+                cq = spec.canonical(g.t_max)
+                trivial = cq.is_empty_window or not 0 <= cq.u < g.n
+            else:
+                if not lenient:
+                    spec.validate()
+                cq, trivial = spec, False
+            prepared.append((cq, trivial))
         t0 = time.perf_counter()
         futures: list[Future] = []
         misses: list[Request] = []
-        for (u, ts, te) in queries:
-            u, ts, te = int(u), int(ts), int(te)
+        for (cq, trivial) in prepared:
             fut: Future = Future()
             futures.append(fut)
             self.metrics.count("queries")
-            hit = self.cache.get((key, u, ts, te))
+            if trivial:
+                # an empty window (or lenient out-of-range vertex) needs no
+                # index at all — not even a cache slot
+                self.metrics.count("trivial_queries")
+                fut.set_result(empty_result(
+                    cq, g.n, Provenance(route="trivial", index_key=key)))
+                self.metrics.observe("e2e", time.perf_counter() - t0)
+                continue
+            hit = self.cache.get((key, cq.cache_key()))
             if hit is not None:
                 self.metrics.count("cache_hits")
-                fut.set_result(hit)
+                fut.set_result(self._stamp_cache_hit(hit))
                 self.metrics.observe("e2e", time.perf_counter() - t0)
             else:
                 self.metrics.count("cache_misses")
-                misses.append(Request(u, ts, te, fut, t_submit=t0))
+                misses.append(Request(cq.u, cq.ts, cq.te, fut, t_submit=t0,
+                                      spec=cq))
         if misses:
             if handle is not None:
                 self._batcher_for(handle).submit_many(misses)
@@ -139,6 +259,83 @@ class ServingEngine:
                 self.metrics.count("cold_submits")
                 self._submit_when_built(workload, k, misses)
         return futures
+
+    @staticmethod
+    def _stamp_cache_hit(res: TCCSResult) -> TCCSResult:
+        prov = (dataclasses.replace(res.provenance, route="cache")
+                if res.provenance is not None else Provenance(route="cache"))
+        return dataclasses.replace(res, provenance=prov)
+
+    # -- window sweeps ----------------------------------------------------
+    def sweep(self, workload: str, ws: WindowSweep,
+              timeout: float | None = 120.0) -> list[TCCSResult]:
+        """Answer one vertex over many windows — cache-hot windows are
+        served from the LRU, the remaining windows share device
+        ``window_sweep`` launches (or a host loop for straggler sweeps and
+        empty forests). Blocking: the sweep is a throughput API; a cold
+        index is built first (use :meth:`prefetch` to hide that)."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        handle = self.registry.get(workload, ws.k, timeout=timeout)
+        g, key = handle.graph, handle.key
+        specs = ws.specs()
+        for s in specs:
+            s.validate(n=g.n)
+        self.metrics.count("queries", len(specs))
+        t0 = time.perf_counter()
+        results: list = [None] * len(specs)
+        misses: list[tuple[int, TCCSQuery]] = []
+        for i, s in enumerate(specs):
+            cq = s.canonical(g.t_max)
+            if cq.is_empty_window:
+                self.metrics.count("trivial_queries")
+                results[i] = empty_result(
+                    cq, g.n, Provenance(route="trivial", index_key=key))
+                continue
+            hit = self.cache.get((key, cq.cache_key()))
+            if hit is not None:
+                self.metrics.count("cache_hits")
+                results[i] = self._stamp_cache_hit(hit)
+            else:
+                self.metrics.count("cache_misses")
+                misses.append((i, cq))
+        cfg = self.config
+        if misses and (handle.pecb.num_nodes == 0
+                       or len(misses) < cfg.host_threshold):
+            for i, cq in misses:
+                res = handle.pecb.answer(cq)
+                res = dataclasses.replace(res, provenance=dataclasses.replace(
+                    res.provenance, index_key=key))
+                results[i] = res
+                self.cache.put((key, cq.cache_key()), res)
+            self.metrics.count("host_batches")
+            self.metrics.count("host_queries", len(misses))
+        elif misses:
+            store = handle.pecb.versions
+            for c0 in range(0, len(misses), cfg.max_batch):
+                chunk = misses[c0:c0 + cfg.max_batch]
+                bucket = self.executor.final_bucket(
+                    len(chunk), cfg.min_bucket, cfg.max_batch)
+                ts = [cq.ts for _, cq in chunk]
+                te = [cq.te for _, cq in chunk]
+                t1 = time.perf_counter()
+                vmask = self.executor.run_sweep(handle.device, ws.u, ts, te,
+                                                bucket)
+                dt = time.perf_counter() - t1
+                prov = Provenance(route="sweep", backend="pecb-device-sweep",
+                                  index_key=key, batch_size=len(chunk),
+                                  bucket=bucket, timings={"exec_s": dt})
+                chunk_res = assemble_device_results(
+                    store, [cq for _, cq in chunk], vmask, None, prov)
+                for (i, cq), res in zip(chunk, chunk_res):
+                    results[i] = res
+                    self.cache.put((key, cq.cache_key()), res)
+                self.metrics.count("sweep_launches")
+                self.metrics.count("sweep_windows", len(chunk))
+                self.metrics.count("sweep_padded_slots", bucket - len(chunk))
+                self.metrics.observe("sweep_exec", dt)
+        self.metrics.observe("sweep_e2e", time.perf_counter() - t0)
+        return results
 
     def _submit_when_built(self, workload: str, k: int,
                            misses: list[Request]) -> None:
@@ -186,7 +383,11 @@ class ServingEngine:
     def _on_index_evicted(self, key: tuple[str, int],
                           handle: IndexHandle) -> None:
         """Registry eviction hook: retire the batcher (and its worker
-        thread) bound to the evicted handle."""
+        thread) bound to the evicted handle, and purge the dead handle's
+        result-cache entries so stale keys stop occupying LRU capacity."""
+        purged = self.cache.purge_index(key)
+        if purged:
+            self.metrics.count("cache_purged", purged)
         with self._lock:
             entry = self._batchers.get(key)
             if entry is None or entry[0] is not handle:

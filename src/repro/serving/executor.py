@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.batch_query import DeviceIndex, batch_query
+from repro.core.batch_query import (DeviceIndex, batch_query,
+                                    batch_query_full, window_sweep)
 
 #: Inert padding query: te < ts matches no core-time entry (cts are >= 1).
 PAD_QUERY = (0, 1, 0)
@@ -92,24 +93,49 @@ class ShardedExecutor:
         use this for padding metrics and pass the result to ``run``."""
         return self.align(bucket_size(b, min_bucket, max_batch))
 
+    def _place(self, up, tsp, tep, bucket):
+        if self.batch_sharding is not None and bucket % self.num_devices == 0:
+            return tuple(jax.device_put(jnp.asarray(a), self.batch_sharding)
+                         for a in (up, tsp, tep))
+        return jnp.asarray(up), jnp.asarray(tsp), jnp.asarray(tep)
+
     def run(self, dix: DeviceIndex, u, ts, te, bucket: int) -> np.ndarray:
         """bool[B, n] membership masks for the *unpadded* prefix. ``bucket``
         must come from ``final_bucket`` (already device-aligned)."""
         b = len(u)
         assert self.align(bucket) == bucket, bucket
-        up, tsp, tep = pad_queries(u, ts, te, bucket)
-        if self.batch_sharding is not None and bucket % self.num_devices == 0:
-            qu = jax.device_put(jnp.asarray(up), self.batch_sharding)
-            qts = jax.device_put(jnp.asarray(tsp), self.batch_sharding)
-            qte = jax.device_put(jnp.asarray(tep), self.batch_sharding)
-        else:
-            qu, qts, qte = jnp.asarray(up), jnp.asarray(tsp), jnp.asarray(tep)
+        qu, qts, qte = self._place(*pad_queries(u, ts, te, bucket), bucket)
         mask = batch_query(dix, qu, qts, qte)
         return np.asarray(jax.device_get(mask))[:b]
+
+    def run_full(self, dix: DeviceIndex, u, ts, te,
+                 bucket: int) -> tuple[np.ndarray, np.ndarray]:
+        """(bool[B, n] vertex masks, bool[B, V] version-membership masks)
+        for the unpadded prefix — the EDGES/SUBGRAPH-mode launch."""
+        b = len(u)
+        assert self.align(bucket) == bucket, bucket
+        qu, qts, qte = self._place(*pad_queries(u, ts, te, bucket), bucket)
+        vmask, vermask = batch_query_full(dix, qu, qts, qte)
+        return (np.asarray(jax.device_get(vmask))[:b],
+                np.asarray(jax.device_get(vermask))[:b, :dix.num_versions])
+
+    def run_sweep(self, dix: DeviceIndex, u: int, ts, te,
+                  bucket: int) -> np.ndarray:
+        """bool[W, n] masks of one vertex over W windows in one launch.
+        Windows pad with the inert (ts=1, te=0) window; the batch (window)
+        dimension shards exactly like ``run``'s."""
+        w = len(ts)
+        assert self.align(bucket) == bucket, bucket
+        _, tsp, tep = pad_queries([u] * w, ts, te, bucket)
+        _, qts, qte = self._place(np.zeros(bucket, np.int32), tsp, tep, bucket)
+        mask = window_sweep(dix, jnp.int32(u), qts, qte)
+        return np.asarray(jax.device_get(mask))[:w]
 
     @staticmethod
     def compile_count() -> int:
         """Number of distinct programs compiled for the batched query plane
-        (jit cache entries). Bucketing tests assert this stays flat across
-        batch sizes within one bucket."""
-        return batch_query._cache_size()
+        (jit cache entries, summed over the vertex-mask, full-mode and
+        window-sweep programs). Bucketing tests assert this stays flat
+        across batch sizes within one bucket."""
+        return (batch_query._cache_size() + batch_query_full._cache_size()
+                + window_sweep._cache_size())

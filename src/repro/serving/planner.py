@@ -1,5 +1,5 @@
-"""Query planner: route batches to the host or device plane, fill the cache
-(DESIGN.md §7.2).
+"""Query planner: route batches to the host or device plane, build typed
+results, fill the cache (DESIGN.md §7.2, §8).
 
 The two query planes have opposite cost shapes. Algorithm 1 on the host is
 O(answer size) per query with zero launch overhead — unbeatable for a
@@ -7,27 +7,54 @@ straggler batch of three. The device plane pays a fixed launch (and, cold,
 a compile) but amortizes to microseconds per query at depth. The planner
 picks per flushed batch:
 
-* ``B < host_threshold``  -> host loop over ``PECBIndex.query``;
+* ``B < host_threshold``  -> host loop over the backend's typed ``answer``;
 * otherwise               -> pad to the power-of-two bucket and launch the
-  sharded device engine.
+  sharded device engine — the vertex-mask program for VERTICES/COUNT-only
+  batches, the full-mode program (vertex + version-membership masks) when
+  any request in the batch wants EDGES/SUBGRAPH.
 
 An empty forest (k above the graph's k-max) always routes host: every
 answer is the empty set and a device launch would compile a program to
 compute nothing.
 
-After execution the planner writes every (u, ts, te) -> result into the LRU
-cache, so repeats are resolved on the submit path without ever reaching a
-batcher.
+Every result is a :class:`repro.core.query_api.TCCSResult` carrying the
+canonical spec it answered and :class:`Provenance` (route, index key,
+batch/bucket shape, stage timings). After execution the planner writes
+every (index key, canonical spec key) -> result into the LRU cache, so
+repeats are resolved on the submit path without ever reaching a batcher.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
+from repro.core.query_api import (Provenance, ResultMode, TCCSQuery,
+                                  build_result)
+
 from .batcher import Request
 from .executor import ShardedExecutor
+
+_EDGE_MODES = (ResultMode.EDGES, ResultMode.SUBGRAPH)
+
+
+def assemble_device_results(store, specs, vmask, vermask,
+                            prov: Provenance) -> list:
+    """Typed results from device masks — the single owner of mask-to-result
+    assembly, shared by the planner's device branch and the engine's window
+    sweeps. ``vermask`` may be None (no full-mode launch): edge modes then
+    derive their payload host-side from the version store."""
+    results = []
+    for i, s in enumerate(specs):
+        vertices = frozenset(np.nonzero(vmask[i])[0].tolist())
+        edge_set = (store.select(np.nonzero(vermask[i])[0])
+                    if vermask is not None and s.mode in _EDGE_MODES
+                    else None)
+        results.append(build_result(s, vertices, store, prov,
+                                    edge_set=edge_set))
+    return results
 
 
 class QueryPlanner:
@@ -52,29 +79,53 @@ class QueryPlanner:
         """The ``execute_fn`` a batcher calls for this index handle."""
         return lambda batch: self.execute(handle, batch)
 
-    def execute(self, handle, batch: list[Request]) -> list[frozenset]:
+    @staticmethod
+    def _spec_of(r: Request, k: int) -> TCCSQuery:
+        # bare requests (tests, legacy callers) carry no spec: VERTICES mode
+        return r.spec if r.spec is not None else TCCSQuery(r.u, r.ts, r.te, k)
+
+    def execute(self, handle, batch: list[Request]) -> list:
         b = len(batch)
+        k = handle.key[1]
+        specs = [self._spec_of(r, k) for r in batch]
+        store = handle.pecb.versions
         route = self.route(handle, b)
         t0 = time.perf_counter()
         if route == "host":
-            results = [frozenset(handle.pecb.query(r.u, r.ts, r.te))
-                       for r in batch]
+            results = []
+            for s in specs:
+                res = handle.pecb.answer(s)
+                results.append(dataclasses.replace(
+                    res, provenance=dataclasses.replace(
+                        res.provenance, index_key=handle.key, batch_size=b)))
             self.metrics.observe("host_exec", time.perf_counter() - t0)
             self.metrics.count("host_batches")
             self.metrics.count("host_queries", b)
         else:
             bucket = self.executor.final_bucket(b, self.min_bucket,
                                                 self.max_batch)
-            u = [r.u for r in batch]
-            ts = [r.ts for r in batch]
-            te = [r.te for r in batch]
-            mask = self.executor.run(handle.device, u, ts, te, bucket)
-            results = [frozenset(np.nonzero(mask[i])[0].tolist())
-                       for i in range(b)]
-            self.metrics.observe("device_exec", time.perf_counter() - t0)
+            u = [s.u for s in specs]
+            ts = [s.ts for s in specs]
+            te = [s.te for s in specs]
+            need_edges = (store is not None
+                          and any(s.mode in _EDGE_MODES for s in specs))
+            if need_edges:
+                vmask, vermask = self.executor.run_full(
+                    handle.device, u, ts, te, bucket)
+            else:
+                vmask = self.executor.run(handle.device, u, ts, te, bucket)
+                vermask = None
+            dt = time.perf_counter() - t0
+            prov = Provenance(route="device",
+                              backend="pecb-device" + ("-full" if need_edges else ""),
+                              index_key=handle.key, batch_size=b,
+                              bucket=bucket, timings={"exec_s": dt})
+            results = assemble_device_results(store, specs, vmask, vermask,
+                                              prov)
+            self.metrics.observe("device_exec", dt)
             self.metrics.count("device_batches")
             self.metrics.count("device_queries", b)
             self.metrics.count("device_padded_slots", bucket - b)
-        for r, res in zip(batch, results):
-            self.cache.put((handle.key, r.u, r.ts, r.te), res)
+        for s, res in zip(specs, results):
+            self.cache.put((handle.key, s.cache_key()), res)
         return results

@@ -162,6 +162,62 @@ def test_builder_prefilter_is_pure_acceleration(g, k):
         assert same, f.name
 
 
+@given(g=temporal_graphs(), k=st.integers(2, 3), data=st.data())
+@settings(**SETTINGS)
+def test_canonical_windows_answer_identically_all_backends(g, k, data):
+    """Query API v2: a raw window and its canonical form (clamped to
+    [1, t_max], empty windows folded) answer identically on all three
+    backends, and the three backends agree."""
+    from repro.core.ctmsf_index import CTMSFIndex
+    from repro.core.ef_index import EFIndex
+    from repro.core.query_api import TCCSQuery
+
+    tab = edge_core_times(g, k)
+    backends = [build_pecb_index(g, k, tab), EFIndex(g, k, tab),
+                CTMSFIndex(g, k, tab)]
+    t_max = max(g.t_max, 1)
+    for _ in range(5):
+        u = data.draw(st.integers(0, g.n - 1))
+        ts = data.draw(st.integers(1, t_max))
+        te = data.draw(st.integers(ts, 2 * t_max + 3))
+        raw = TCCSQuery(u, ts, te, k)
+        canon = raw.canonical(g.t_max)
+        answers = []
+        for b in backends:
+            assert b.answer(raw).vertices == b.answer(canon).vertices, \
+                (b.backend_name, u, ts, te)
+            answers.append(b.answer(canon).vertices)
+        assert answers[0] == answers[1] == answers[2], (u, ts, te)
+
+
+@given(g=temporal_graphs(), k=st.integers(2, 3), data=st.data())
+@settings(**SETTINGS)
+def test_edges_mode_projects_and_matches_oracle(g, k, data):
+    """Query API v2: EDGES-mode results vertex-project exactly to the
+    VERTICES-mode result and their edge ids equal the brute-force oracle's
+    induced member edges, on all three backends."""
+    from repro.core.ctmsf_index import CTMSFIndex
+    from repro.core.ef_index import EFIndex
+    from repro.core.kcore import tccs_oracle_edges
+    from repro.core.query_api import ResultMode, TCCSQuery
+
+    tab = edge_core_times(g, k)
+    backends = [build_pecb_index(g, k, tab), EFIndex(g, k, tab),
+                CTMSFIndex(g, k, tab)]
+    t_max = max(g.t_max, 1)
+    for _ in range(5):
+        u = data.draw(st.integers(0, g.n - 1))
+        ts = data.draw(st.integers(1, t_max))
+        te = data.draw(st.integers(ts, t_max))
+        want_e = frozenset(tccs_oracle_edges(g, k, u, ts, te))
+        for b in backends:
+            r = b.answer(TCCSQuery(u, ts, te, k, ResultMode.EDGES))
+            rv = b.answer(TCCSQuery(u, ts, te, k))
+            assert r.edges.edge_ids() == want_e, (b.backend_name, u, ts, te)
+            assert r.edges.vertex_projection() == rv.vertices, \
+                (b.backend_name, u, ts, te)
+
+
 @given(g=temporal_graphs())
 @settings(**SETTINGS)
 def test_core_time_table_nbytes_is_exact(g):
