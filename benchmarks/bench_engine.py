@@ -37,7 +37,7 @@ def bench_batch_query(name: str = "fb_like", batches=(32, 128, 512)):
     # sequential Algorithm 1 reference
     t0 = time.perf_counter()
     for (uu, a, b) in queries[:256]:
-        idx.query(uu, a, b)
+        idx._component_vertices(uu, a, b)
     seq_us = (time.perf_counter() - t0) / 256 * 1e6
 
     for B in batches:

@@ -25,6 +25,7 @@ def main(argv=None):
     from . import bench_construction as bc
     from . import bench_paper as bp
     from . import bench_engine as be
+    from . import bench_streaming as bs
 
     workloads = ["fb_like", "cm_like"] if args.fast else bp.WORKLOADS
 
@@ -60,6 +61,20 @@ def main(argv=None):
               "fb_like",
               loads=(2000, 0) if args.fast else (1000, 4000, 16000, 0),
               n_q=512 if args.fast else 2048))
+    _emit("Streaming refresh vs cold rebuild (beyond paper; equality "
+          "asserted before reporting)",
+          ["workload", "k", "suffix_edges", "refresh_tab_s",
+           "refresh_index_s", "refresh_device_s", "refresh_total_s",
+           "cold_total_s", "speedup", "device_uploaded_bytes",
+           "device_reused_bytes"],
+          # the fast job smoke-runs the small workload without the em_like
+          # 5x floor (CI machines are noisy); the full run asserts it
+          bs.bench_refresh(("fb_like",) if args.fast else ("em_like",),
+                           assert_speedup=not args.fast))
+    _emit("Query availability during streaming refresh (beyond paper)",
+          ["workload", "k", "suffix_edges", "queries_during_refresh",
+           "refresh_s", "mean_ms", "worst_ms"],
+          bs.bench_availability("fb_like" if args.fast else "em_like"))
     _emit("Pallas kernel micro (interpret mode vs jnp ref)",
           ["kernel", "pallas_interpret_ms", "jnp_ref_ms"],
           be.bench_kernels())

@@ -16,6 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import TCCSQuery
 from repro.core.temporal_graph import gen_temporal_graph
 from repro.core.core_time import edge_core_times
 from repro.core.pecb_index import build_pecb_index
@@ -35,7 +36,8 @@ window = (10, 30)
 rng = np.random.default_rng(0)
 seeds = rng.choice(g.n, 32, replace=False)
 
-cohorts = {int(s): index.query(int(s), *window) for s in seeds}
+cohorts = {int(s): index.answer(TCCSQuery(int(s), *window, k)).vertices
+           for s in seeds}
 live_seeds = [s for s, c in cohorts.items() if c]
 print(f"{len(live_seeds)}/{len(seeds)} seeds are in a temporal {k}-core over {window}")
 

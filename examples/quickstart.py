@@ -11,6 +11,7 @@ Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the random workload.
 """
 
 import os
+import warnings
 
 import numpy as np
 
@@ -58,8 +59,10 @@ for bad in (TCCSQuery(1, 5, 3, 2), TCCSQuery(99, 3, 5, 2), TCCSQuery(1, 3, 5, 1)
     except InvalidQueryError as e:
         print(f"  rejected {bad.u, bad.ts, bad.te, bad.k}: {e}")
 
-# the legacy positional shim still answers (deprecated)
-assert index.query(1, 3, 5) == {0, 1, 2}
+# the legacy positional shim still answers (deprecated, now warning)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    assert index.query(1, 3, 5) == {0, 1, 2}
 
 # --- a random temporal graph, verified against brute force ---------------
 n, m, t_max, n_checks = (60, 600, 20, 40) if TINY else (200, 3000, 60, 200)

@@ -1,0 +1,73 @@
+"""Streaming contact feed: serve queries while new days arrive (DESIGN.md §9).
+
+    PYTHONPATH=src python examples/streaming_ingest.py
+
+A contact-tracing deployment never has a finished graph: each day's
+contacts land after the fact, and the dashboard must keep answering while
+the index catches up. The streaming epoch plane makes that a one-liner —
+``engine.ingest(name, edges)`` appends the suffix day, refreshes the
+resident index incrementally in the background (bit-identical to a cold
+rebuild, several times faster), and queries keep resolving against the
+old epoch until the refreshed handle is atomically swapped in. Cached
+answers for historical windows survive the epoch: a window that predates
+the new day cannot have changed.
+
+Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the network.
+"""
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import TCCSQuery
+from repro.core.temporal_graph import gen_contact_network
+from repro.core.kcore import k_max
+from repro.serving import EngineConfig, ServingEngine
+
+TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
+n_people, days_total, days_live = (120, 12, 3) if TINY else (300, 24, 6)
+
+full = gen_contact_network(n_people, days_total, seed=11)
+k = max(2, int(0.25 * k_max(full)))
+# replay harness: start serving with the first days, stream in the rest
+g0, backlog = full.split_at(days_total - days_live)
+print(f"contact feed: {n_people} people, day 1..{g0.t_max} indexed, "
+      f"{days_live} days ({backlog.shape[0]} contacts) still to arrive, k={k}")
+
+with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
+    eng.register_graph("feed", g0)
+    t0 = time.perf_counter()
+    eng.warmup("feed", k)
+    print(f"epoch-0 index built in {time.perf_counter() - t0:.2f}s")
+
+    patient = int(np.argmax(np.bincount(np.concatenate([g0.src, g0.dst]))))
+    historic = TCCSQuery(patient, 1, max(1, g0.t_max - 1), k)
+    cohort0 = eng.answer("feed", historic)
+    print(f"patient {patient}: historical cohort of {len(cohort0.vertices)}")
+
+    for day in range(g0.t_max + 1, days_total + 1):
+        arrivals = backlog[backlog[:, 2] == day]
+        futures = eng.ingest("feed", [tuple(e) for e in arrivals.tolist()])
+        # the dashboard keeps answering while the refresh runs in background
+        served = 0
+        while any(not f.done() for f in futures.values()):
+            eng.answer("feed", historic)
+            served += 1
+        handle = [f.result() for f in futures.values()][0]
+        latest = eng.answer(
+            "feed", TCCSQuery(patient, max(1, day - 6), day, k))
+        print(f"day {day}: +{arrivals.shape[0]} contacts, refresh "
+              f"{handle.build_seconds * 1e3:.0f} ms (epoch {handle.epoch}), "
+              f"{served} queries served during refresh, "
+              f"7-day cohort now {len(latest.vertices)}")
+
+    hit = eng.answer("feed", historic)
+    print(f"historical window after {days_live} ingests: "
+          f"route={hit.provenance.route} (cache survived every epoch), "
+          f"cohort {len(hit.vertices)} unchanged="
+          f"{hit.vertices == cohort0.vertices}")
+    s = eng.stats()
+    print(f"[stats] refreshes={s['registry']['refreshes']} "
+          f"epochs={s['registry']['epochs']} "
+          f"cache={s['cache']['hits']} hits/{s['cache']['misses']} misses")

@@ -1,6 +1,8 @@
 """Historical k-core search core: temporal graphs, core times, the ECB
-forest / PECB index and baselines, the batched device query plane, and the
-typed Query API v2 surface (DESIGN.md §8) they all answer through."""
+forest / PECB index and baselines, the batched device query plane, the
+typed Query API v2 surface (DESIGN.md §8) they all answer through, and the
+streaming epoch plane (DESIGN.md §9: ``TemporalGraph.extend`` +
+``extend_core_times`` + ``extend_pecb_index``)."""
 
 from .query_api import (
     EdgeSet,

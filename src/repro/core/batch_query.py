@@ -114,36 +114,93 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def to_device(index: PECBIndex) -> DeviceIndex:
-    i32 = lambda a: jnp.asarray(np.asarray(a, np.int32))
+def _host_layout(index: PECBIndex):
+    """(meta dict, name -> int32 host array) in the device layout — the
+    single source of truth for ``to_device`` and ``refresh_device``
+    (including the length->=1 inert padding of optional arrays)."""
+    i32 = lambda a: np.asarray(a, np.int32)
     seg = np.diff(index.row_ptr)
     vseg = np.diff(index.vrow_ptr)
     store = index.versions
     has_vers = store is not None and store.num_versions > 0
-    return DeviceIndex(
-        n=index.n,
-        t_max=index.t_max,
-        node_u=i32(index.node_u),
-        node_v=i32(index.node_v),
-        node_ct=i32(index.node_ct),
-        live_from=i32(index.node_live_from),
-        live_to=i32(index.node_live_to),
-        row_ptr=i32(index.row_ptr),
-        ent_ts=i32(index.ent_ts) if index.ent_ts.size else jnp.zeros((1,), jnp.int32),
-        ent_left=i32(index.ent_left) if index.ent_left.size else jnp.full((1,), NONE, jnp.int32),
-        ent_right=i32(index.ent_right) if index.ent_right.size else jnp.full((1,), NONE, jnp.int32),
-        ent_parent=i32(index.ent_parent) if index.ent_parent.size else jnp.full((1,), NONE, jnp.int32),
-        vrow_ptr=i32(index.vrow_ptr),
-        vent_ts=i32(index.vent_ts) if index.vent_ts.size else jnp.zeros((1,), jnp.int32),
-        vent_node=i32(index.vent_node) if index.vent_node.size else jnp.full((1,), NONE, jnp.int32),
-        ver_ts_from=i32(store.ts_from) if has_vers else jnp.ones((1,), jnp.int32),
-        ver_ts_to=i32(store.ts_to) if has_vers else jnp.zeros((1,), jnp.int32),
-        ver_ct=i32(store.ct) if has_vers else jnp.zeros((1,), jnp.int32),
-        ver_src=i32(store.src) if has_vers else jnp.zeros((1,), jnp.int32),
-        max_node_entries=int(seg.max()) if seg.size else 0,
-        max_vert_entries=int(vseg.max()) if vseg.size else 0,
-        num_versions=store.num_versions if has_vers else 0,
-    )
+    pad0 = np.zeros((1,), np.int32)
+    padn = np.full((1,), NONE, np.int32)
+    arrays = {
+        "node_u": i32(index.node_u),
+        "node_v": i32(index.node_v),
+        "node_ct": i32(index.node_ct),
+        "live_from": i32(index.node_live_from),
+        "live_to": i32(index.node_live_to),
+        "row_ptr": i32(index.row_ptr),
+        "ent_ts": i32(index.ent_ts) if index.ent_ts.size else pad0,
+        "ent_left": i32(index.ent_left) if index.ent_left.size else padn,
+        "ent_right": i32(index.ent_right) if index.ent_right.size else padn,
+        "ent_parent": i32(index.ent_parent) if index.ent_parent.size else padn,
+        "vrow_ptr": i32(index.vrow_ptr),
+        "vent_ts": i32(index.vent_ts) if index.vent_ts.size else pad0,
+        "vent_node": i32(index.vent_node) if index.vent_node.size else padn,
+        "ver_ts_from": i32(store.ts_from) if has_vers else np.ones((1,), np.int32),
+        "ver_ts_to": i32(store.ts_to) if has_vers else pad0,
+        "ver_ct": i32(store.ct) if has_vers else pad0,
+        "ver_src": i32(store.src) if has_vers else pad0,
+    }
+    meta = {
+        "n": index.n,
+        "t_max": index.t_max,
+        "max_node_entries": int(seg.max()) if seg.size else 0,
+        "max_vert_entries": int(vseg.max()) if vseg.size else 0,
+        "num_versions": store.num_versions if has_vers else 0,
+    }
+    return meta, arrays
+
+
+def to_device(index: PECBIndex) -> DeviceIndex:
+    meta, arrays = _host_layout(index)
+    return DeviceIndex(**meta,
+                       **{k: jnp.asarray(v) for k, v in arrays.items()})
+
+
+def refresh_device(prev_host: PECBIndex, prev_dev: DeviceIndex,
+                   new_host: PECBIndex) -> tuple[DeviceIndex, dict]:
+    """Refresh a device mirror across a streaming epoch, re-uploading only
+    what changed.
+
+    Per array (compared in the shared host layout): if the new array equals
+    the old one, the resident device buffer is reused outright (zero
+    transfer); if the old array is a strict prefix of the new one (a pure
+    suffix grow), only the suffix is shipped and concatenated on device;
+    otherwise the array is uploaded in full. Always exact — the result is
+    indistinguishable from ``to_device(new_host)`` (test-asserted); the
+    returned stats (``reused_bytes``/``uploaded_bytes`` + per-kind counts)
+    make the transfer savings observable to the registry's refresh metrics.
+    """
+    _, old_arrays = _host_layout(prev_host)
+    meta, new_arrays = _host_layout(new_host)
+    stats = {"reused": 0, "suffix": 0, "full": 0,
+             "reused_bytes": 0, "uploaded_bytes": 0}
+    arrays = {}
+    for name in _ARRAY_FIELDS:
+        old_np, new_np = old_arrays[name], new_arrays[name]
+        old_dev = getattr(prev_dev, name)
+        if (old_np.shape == new_np.shape and old_dev.shape == old_np.shape
+                and np.array_equal(old_np, new_np)):
+            arrays[name] = old_dev
+            stats["reused"] += 1
+            stats["reused_bytes"] += int(new_np.nbytes)
+        elif (old_np.shape[0] < new_np.shape[0]
+              and old_dev.shape == old_np.shape
+              and np.array_equal(old_np, new_np[:old_np.shape[0]])):
+            suffix = jnp.asarray(
+                np.ascontiguousarray(new_np[old_np.shape[0]:]))
+            arrays[name] = jnp.concatenate([old_dev, suffix])
+            stats["suffix"] += 1
+            stats["reused_bytes"] += int(old_np.nbytes)
+            stats["uploaded_bytes"] += int(suffix.nbytes)
+        else:
+            arrays[name] = jnp.asarray(new_np)
+            stats["full"] += 1
+            stats["uploaded_bytes"] += int(new_np.nbytes)
+    return DeviceIndex(**meta, **arrays), stats
 
 
 def _lower_bound(ts_arr: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,

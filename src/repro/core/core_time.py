@@ -246,7 +246,9 @@ def _compress(g: TemporalGraph, vct: np.ndarray,
     Per edge, CT rows over ts form maximal constant runs; finite runs are
     the stored versions. Edge-major run detection keeps the output exactly
     in the legacy path's (edge_id, ts_from) lexsort order. Chunked over
-    edges to bound the (T, chunk) scratch."""
+    edges to bound the (chunk, T) scratch. (The streaming plane's
+    `extend_core_times` does not recompress full rows: it keeps old records
+    verbatim and run-detects only the per-vertex flip intervals.)"""
     t_max, m = g.t_max, g.m
     inf = t_max + 1
     if t_max == 0 or m == 0:
@@ -496,6 +498,197 @@ def edge_core_times(g: TemporalGraph, k: int, *,
     else:
         vct = _sweep_jax(g, k, use_pallas=(engine == "jax_pallas"))
     return _compress(g, vct)
+
+
+# ----------------------------------------------------------------------
+# Streaming plane: incremental sweep for suffix-extended graphs
+# ----------------------------------------------------------------------
+
+def extend_core_times(g: TemporalGraph, k: int,
+                      prev: CoreTimeTable) -> CoreTimeTable:
+    """Extend a core-time table after a suffix append (streaming epochs).
+
+    ``g`` must be a suffix extension of the graph ``prev`` was built for
+    (``TemporalGraph.extend``): the old edges are a prefix of ``g``'s
+    arrays and every appended timestamp exceeds ``prev.t_max``. The result
+    is **bit-identical** to ``edge_core_times(g, k)`` (test-asserted), but
+    recomputes only what a suffix append can change:
+
+    * **Finite old entries are final.** For ``te <= t_old`` the window
+      ``[ts, te]`` contains no appended edge, so its k-core — and hence
+      any vertex core time that was ``<= t_old`` — is unchanged. Only
+      entries that were INF in the old epoch can move (into
+      ``(t_old, t_new]``, or to the new INF).
+    * **New start times see only the suffix.** For ``ts > t_old`` the
+      window contains appended edges exclusively, so those rows come from
+      one ordinary sweep over the (timestamp-shifted) suffix subgraph.
+    * **Old start times run a frontier fixpoint.** Per ts, only vertices
+      whose old entry was INF *and* whose entry at ts-1 is still finite
+      in the new epoch (column monotonicity: ``c[ts] >= c[ts-1]``, so a
+      column that reaches the new INF stays there) are re-solved; all
+      other vertices enter the operator as constants. Iterating the
+      clamped operator from the lower bound ``max(c[ts-1], t_old + 1)``
+      converges to the same least fixpoint as the full-width sweep
+      (same sandwich argument as the module docstring, with the known
+      coordinates pinned at their — already least-fixpoint — values).
+    * **Interval recompress.** Every previous record is kept verbatim, and
+      *new* records are detected only over the cells that can hold one: a
+      cell ``(e, ts)`` grows a record iff an endpoint's vertex core time
+      flipped from old-INF to new-finite there, and by column monotonicity
+      those cells form one ts-interval per vertex (``[first old-INF,
+      last new-finite]``). Runs never straddle the interval boundary
+      (values change from ``<= t_old`` to ``> t_old`` across it), so run
+      detection over the flattened per-edge interval union is exact.
+    """
+    t_old, t_new = prev.t_max, g.t_max
+    m_old, m_new = prev.m, g.m
+    if prev.n != g.n:
+        raise ValueError(f"vertex count changed ({prev.n} -> {g.n}); "
+                         "extend_core_times needs the same vertex set")
+    if m_old > m_new or t_old > t_new:
+        raise ValueError("prev table does not describe a prefix of g")
+    if m_old and g.t[m_old - 1] > t_old:
+        raise ValueError("prev table does not match g's edge prefix")
+    if m_new > m_old and g.t[m_old] <= t_old:
+        raise ValueError(
+            f"appended edges must be a timestamp suffix (> {t_old}); "
+            "historical edges need a cold edge_core_times rebuild")
+    if m_new == m_old:
+        return prev                       # no appended edges: same epoch
+    if m_old == 0 or t_old == 0:
+        return _compress(g, _sweep_host(g, k))   # nothing to extend from
+    inf_old, inf_new = t_old + 1, t_new + 1
+    n = g.n
+    vct = np.full((t_new + 1, n), inf_new, np.int32)
+    vo = prev.vertex_ct
+
+    # -- new start times: ordinary sweep over the shifted suffix ---------
+    g_suf = TemporalGraph(n, g.src[m_old:], g.dst[m_old:],
+                          (g.t[m_old:] - t_old).astype(np.int32))
+    vs = _sweep_host(g_suf, k)            # (t_new - t_old + 1, n)
+    t_suf = t_new - t_old
+    fin = vs[1:] <= t_suf
+    block = np.full((t_suf, n), inf_new, np.int32)
+    block[fin] = (vs[1:][fin] + t_old).astype(np.int32)
+    vct[t_old + 1:] = block
+
+    # -- old start times: frontier fixpoint ------------------------------
+    csr = _pair_csr(g)
+    stride = np.int64(t_new + 2)
+    packed = csr.pidx * stride + csr.tsorted      # globally sorted
+    rowend = csr.ptr[1:]
+    deg_all = np.diff(csr.vptr)
+    S = np.int64(1)
+    while S < inf_new + 2:
+        S <<= 1
+    carry = np.zeros(n, np.int32)     # previous new row (lower bound)
+    for ts in range(1, t_old + 1):
+        old = vo[ts]
+        known = old <= t_old
+        vct[ts] = np.where(known, old, inf_new)
+        front = np.flatnonzero(~known & (carry <= t_new) & (deg_all >= k))
+        if front.size == 0:
+            carry = vct[ts]
+            continue
+        starts = csr.vptr[front]
+        counts = csr.vptr[front + 1] - starts
+        total = int(counts.sum())
+        segptr = np.zeros(front.size + 1, np.int64)
+        np.cumsum(counts, out=segptr[1:])
+        rows = (np.arange(total, dtype=np.int64)
+                - np.repeat(segptr[:-1], counts) + np.repeat(starts, counts))
+        # t_uv at this ts for the frontier's pair rows only
+        pos = np.searchsorted(packed, rows * stride + ts)
+        tuv = np.full(total, inf_new, np.int64)
+        valid = pos < rowend[rows]
+        tuv[valid] = csr.tsorted[pos[valid]]
+        dstv = csr.dst[rows].astype(np.int64)
+        base = np.repeat(np.arange(front.size, dtype=np.int64), counts) * S
+        segbase = np.arange(front.size, dtype=np.int64) * S
+        sel = segptr[:-1] + (k - 1)
+        val = vct[ts].astype(np.int64)    # known + settled-INF constants
+        c = np.maximum(carry[front].astype(np.int64), t_old + 1)
+        while True:
+            val[front] = c
+            key = base + np.maximum(tuv, val[dstv])
+            key.sort()
+            cnt = np.searchsorted(key, segbase + c + 1) - segptr[:-1]
+            if bool(((cnt >= k) | (c >= inf_new)).all()):
+                break
+            c_new = key[sel] % S          # k-th smallest per segment
+            np.minimum(c_new, inf_new, out=c_new)
+            np.maximum(c, c_new, out=c)
+        vct[ts, front] = c.astype(np.int32)
+        carry = vct[ts]
+
+    # -- interval recompress ----------------------------------------------
+    # Per vertex, the cells whose CT flipped old-INF -> new-finite form one
+    # ts-interval [s_v, L_v] (both signals are monotone in ts): s_v = first
+    # old-INF row, L_v = last new-finite row. A new record of an old edge
+    # lives only where an endpoint flipped; appended edges are all-new over
+    # [1, t(e)]. Flatten those per-edge intervals and run-detect over them.
+    s_v = (vo[1:] <= t_old).sum(axis=0).astype(np.int64) + 1
+    L_v = (vct[1:] <= t_new).sum(axis=0).astype(np.int64)
+    eu = g.src.astype(np.int64)
+    ev = g.dst.astype(np.int64)
+    te_e = g.t.astype(np.int64)
+    # old edges: union of the two endpoint intervals, clipped to [1, t(e)]
+    a1 = np.maximum(s_v[eu[:m_old]], 1)
+    b1 = np.minimum(L_v[eu[:m_old]], te_e[:m_old])
+    a2 = np.maximum(s_v[ev[:m_old]], 1)
+    b2 = np.minimum(L_v[ev[:m_old]], te_e[:m_old])
+    swap = a2 < a1
+    a1s, a2s = np.where(swap, a2, a1), np.where(swap, a1, a2)
+    b1s, b2s = np.where(swap, b2, b1), np.where(swap, b1, b2)
+    merged = a2s <= b1s + 1                     # touching/overlapping
+    lo_a = a1s
+    hi_a = np.where(merged, np.maximum(b1s, b2s), b1s)
+    lo_b = np.where(merged, 1, a2s)             # second piece (if distinct)
+    hi_b = np.where(merged, 0, b2s)
+    # appended edges: one full piece [1, t(e)]
+    app = np.arange(m_old, m_new, dtype=np.int64)
+    piece_e = np.concatenate([np.arange(m_old, dtype=np.int64)] * 2 + [app])
+    piece_lo = np.concatenate([lo_a, lo_b, np.ones(app.size, np.int64)])
+    piece_hi = np.concatenate([hi_a, hi_b, te_e[app]])
+    keep_p = piece_lo <= piece_hi
+    piece_e, piece_lo, piece_hi = piece_e[keep_p], piece_lo[keep_p], piece_hi[keep_p]
+    lens = piece_hi - piece_lo + 1
+    total_cells = int(lens.sum())
+    if total_cells == 0:
+        new_e = new_f = new_t = new_c = np.zeros(0, np.int64)
+    else:
+        # order pieces by (edge, ts) so runs are contiguous per edge
+        po = np.lexsort((piece_lo, piece_e))
+        piece_e, piece_lo, lens = piece_e[po], piece_lo[po], lens[po]
+        pp = np.zeros(piece_e.size + 1, np.int64)
+        np.cumsum(lens, out=pp[1:])
+        flat_ts = (np.arange(total_cells, dtype=np.int64)
+                   - np.repeat(pp[:-1], lens) + np.repeat(piece_lo, lens))
+        flat_e = np.repeat(piece_e, lens)
+        cu = vct[flat_ts, eu[flat_e]].astype(np.int64)
+        cv = vct[flat_ts, ev[flat_e]].astype(np.int64)
+        cval = np.maximum(np.maximum(cu, cv), te_e[flat_e])
+        np.minimum(cval, inf_new, out=cval)
+        # run boundaries: edge change, ts gap, or value change
+        brk = np.ones(total_cells, bool)
+        brk[1:] = ((flat_e[1:] != flat_e[:-1])
+                   | (flat_ts[1:] != flat_ts[:-1] + 1)
+                   | (cval[1:] != cval[:-1]))
+        sidx = np.flatnonzero(brk)
+        eidx = np.empty_like(sidx)
+        eidx[:-1] = sidx[1:] - 1
+        eidx[-1] = total_cells - 1
+        fin = cval[sidx] < inf_new
+        sidx, eidx = sidx[fin], eidx[fin]
+        new_e, new_f = flat_e[sidx], flat_ts[sidx]
+        new_t, new_c = flat_ts[eidx], cval[sidx]
+    edge_id = np.concatenate([prev.edge_id.astype(np.int64), new_e])
+    ts_from = np.concatenate([prev.ts_from.astype(np.int64), new_f])
+    ts_to = np.concatenate([prev.ts_to.astype(np.int64), new_t])
+    ct = np.concatenate([prev.ct.astype(np.int64), new_c])
+    order = np.lexsort((ts_from, edge_id))
+    return _as_table(g, edge_id[order], ts_from[order], ts_to[order],
+                     ct[order], vct)
 
 
 # ----------------------------------------------------------------------

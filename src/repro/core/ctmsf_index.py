@@ -15,6 +15,7 @@ paper's observation that the two build times coincide (§6.2).
 from __future__ import annotations
 
 import bisect
+import warnings
 
 import numpy as np
 
@@ -74,7 +75,12 @@ class CTMSFIndex(ComponentBackend):
         return ent[i][1]
 
     def query(self, u: int, ts: int, te: int) -> set[int]:
-        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``."""
+        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``.
+        Emits :class:`DeprecationWarning`."""
+        warnings.warn(
+            "CTMSFIndex.query(u, ts, te) is deprecated; use "
+            "answer(TCCSQuery(u, ts, te, k))",
+            DeprecationWarning, stacklevel=2)
         return self._component_vertices(u, ts, te)
 
     def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:

@@ -28,6 +28,7 @@ against, with documented simplifications that are neutral or favour EF:
 from __future__ import annotations
 
 import bisect
+import warnings
 
 import numpy as np
 
@@ -128,7 +129,12 @@ class EFIndex(ComponentBackend):
 
     # -- label-constrained DFS over the chain's MTSF ----------------------
     def query(self, u: int, ts: int, te: int) -> set[int]:
-        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``."""
+        """Deprecated positional shim; prefer ``answer(TCCSQuery(...))``.
+        Emits :class:`DeprecationWarning`."""
+        warnings.warn(
+            "EFIndex.query(u, ts, te) is deprecated; use "
+            "answer(TCCSQuery(u, ts, te, k))",
+            DeprecationWarning, stacklevel=2)
         return self._component_vertices(u, ts, te)
 
     def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:

@@ -21,6 +21,7 @@ from ``nbytes()`` so the paper's index-size comparison stays undistorted.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -95,8 +96,13 @@ class PECBIndex(ComponentBackend):
 
         .. deprecated:: kept as a thin shim over the v2 surface; prefer
            ``answer(TCCSQuery(u, ts, te, k))`` which validates, carries
-           result modes and records provenance.
+           result modes and records provenance. Emits
+           :class:`DeprecationWarning`.
         """
+        warnings.warn(
+            "PECBIndex.query(u, ts, te) is deprecated; use "
+            "answer(TCCSQuery(u, ts, te, k))",
+            DeprecationWarning, stacklevel=2)
         return self._component_vertices(u, ts, te)
 
     def _component_vertices(self, u: int, ts: int, te: int) -> set[int]:
@@ -156,9 +162,25 @@ def pack_index(g: TemporalGraph, k: int, b: IncrementalBuilder) -> PECBIndex:
 
 
 def build_pecb_index(g: TemporalGraph, k: int,
-                     tab: CoreTimeTable | None = None) -> PECBIndex:
+                     tab: CoreTimeTable | None = None, *,
+                     resume_from: PECBIndex | None = None) -> PECBIndex:
     """End-to-end PECB construction (Alg 3): core times -> incremental
-    forest maintenance -> packed index."""
+    forest maintenance -> packed index.
+
+    ``resume_from`` is the streaming plane's epoch-resume path: pass the
+    previous epoch's index (built for a graph that ``g`` suffix-extends via
+    ``TemporalGraph.extend``) together with the extended table ``tab``
+    (``extend_core_times``), and the index is *grown* from the previous
+    epoch's packed arrays instead of replaying every version
+    (``streaming.extend_pecb_index``). The result is bit-identical to a
+    cold ``build_pecb_index(g, k)`` (test-asserted)."""
+    if resume_from is not None:
+        if tab is None:
+            raise ValueError(
+                "resume_from needs the extended table: pass "
+                "tab=extend_core_times(g, k, prev_tab)")
+        from .streaming import extend_pecb_index
+        return extend_pecb_index(g, k, tab, resume_from)
     tab = tab if tab is not None else edge_core_times(g, k)
     b = IncrementalBuilder(g, tab).run()
     return pack_index(g, k, b)

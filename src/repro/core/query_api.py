@@ -118,7 +118,12 @@ class TCCSQuery:
     def canonical(self, t_max: int) -> "TCCSQuery":
         """Clamp the window to ``[1, t_max]``; fold empty windows onto
         :data:`EMPTY_WINDOW`. Equivalent queries canonicalize identically,
-        so they share one cache key and one device-batch lane."""
+        so they share one cache key and one device-batch lane.
+
+        An empty graph (``t_max == 0``) clamps every window to ``ts > te``
+        and therefore folds it onto the marker too — the result is always
+        either a valid non-empty window or :data:`EMPTY_WINDOW`, never an
+        un-marked invalid clamp like a raw ``[1, 0]``."""
         ts, te = max(self.ts, 1), min(self.te, t_max)
         if ts > te:
             ts, te = EMPTY_WINDOW

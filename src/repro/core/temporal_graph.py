@@ -67,6 +67,57 @@ class TemporalGraph:
             arr[:, 2].astype(np.int32),
         )
 
+    # -- streaming epochs ----------------------------------------------
+    def extend(self, edges: Iterable[tuple[int, int, int]]) -> "TemporalGraph":
+        """Append *suffix* edges (all strictly newer than ``t_max``) and
+        return the next graph epoch.
+
+        The suffix condition is what makes the streaming plane cheap and
+        exact: because edges are stored sorted by ``(t, src, dst)``, a
+        suffix append keeps every existing edge id (the old edge arrays are
+        a prefix of the new ones), so core-time tables, PECB indexes and
+        cached results built for this epoch remain valid for every window
+        with ``te <= t_max`` and can be *extended* rather than rebuilt
+        (``core_time.extend_core_times``, ``pecb_index.build_pecb_index``
+        with ``resume_from``). Out-of-order (historical) edges are
+        rejected: they would invalidate the prefix property and require a
+        cold rebuild — callers wanting that should build a new graph.
+
+        Self-loops are dropped (as in :meth:`from_edges`); an empty
+        ``edges`` returns ``self``.
+        """
+        arr = np.asarray(
+            [(u, v, t) for (u, v, t) in edges if u != v], dtype=np.int64)
+        if arr.size == 0:
+            return self
+        if int(arr[:, 2].min()) <= self.t_max:
+            raise ValueError(
+                f"extend() takes suffix edges only: got timestamp "
+                f"{int(arr[:, 2].min())} <= t_max={self.t_max}; historical "
+                "edges need a cold rebuild (TemporalGraph.from_edges)")
+        if int(arr[:, :2].max()) >= self.n or int(arr[:, :2].min()) < 0:
+            raise ValueError(
+                f"extend() edge endpoints must lie in [0, {self.n})")
+        order = np.lexsort((arr[:, 1], arr[:, 0], arr[:, 2]))
+        arr = arr[order]
+        return TemporalGraph(
+            self.n,
+            np.concatenate([self.src, arr[:, 0].astype(np.int32)]),
+            np.concatenate([self.dst, arr[:, 1].astype(np.int32)]),
+            np.concatenate([self.t, arr[:, 2].astype(np.int32)]),
+        )
+
+    def split_at(self, t: int) -> tuple["TemporalGraph", np.ndarray]:
+        """(epoch graph of edges with timestamp <= t, suffix triples after
+        ``t`` as an int64[(s, 3)] array) — the replay harness for streaming
+        benchmarks/tests: ``g0.extend(suffix)`` reproduces ``self``."""
+        cut = int(np.searchsorted(self.t, t, side="right"))
+        g0 = TemporalGraph(self.n, self.src[:cut], self.dst[:cut],
+                           self.t[:cut])
+        suffix = np.stack([self.src[cut:], self.dst[cut:],
+                           self.t[cut:]], axis=1).astype(np.int64)
+        return g0, suffix
+
     def window_mask(self, ts: int, te: int) -> np.ndarray:
         return (self.t >= ts) & (self.t <= te)
 
@@ -142,6 +193,8 @@ def random_queries(g: TemporalGraph, n_q: int, seed: int = 0) -> list[tuple[int,
     query distribution shared by benchmarks and serving drivers."""
     rng = np.random.default_rng(seed)
     u = rng.integers(0, g.n, n_q)
+    if g.t_max == 0:          # empty graph: every window is empty anyway
+        return [(int(v), 1, 0) for v in u]
     ts = rng.integers(1, g.t_max + 1, n_q)
     te = np.minimum(ts + rng.integers(0, g.t_max, n_q), g.t_max)
     return list(zip(u.tolist(), ts.tolist(), te.tolist()))

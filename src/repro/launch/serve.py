@@ -81,14 +81,14 @@ def main(argv=None):
         n_seq = min(args.verify * 8, total)
         t0 = time.perf_counter()
         for (u, ts, te) in queries[:n_seq]:
-            handle.pecb.query(u, ts, te)
+            handle.pecb._component_vertices(u, ts, te)
         t_seq = (time.perf_counter() - t0) / n_seq
         print(f"[serve] sequential Alg 1: {t_seq*1e6:.1f} us/query "
               f"(engine speedup {t_seq/(dt/total):.1f}x)")
 
         # exactness spot check (COUNT mode carries sizes only)
         def matches(i):
-            want = handle.pecb.query(*queries[i])
+            want = handle.pecb._component_vertices(*queries[i])
             if results[i].query.mode is ResultMode.COUNT:
                 return results[i].num_vertices == len(want)
             return results[i].vertices == frozenset(want)

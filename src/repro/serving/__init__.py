@@ -18,8 +18,16 @@ Quick start::
                                                 windows=[(d, d + 6)
                                                          for d in range(1, 80)]))
 
+Streaming graphs ingest through the same engine (DESIGN.md §9)::
+
+        eng.ingest("cm_like", [(u, v, t), ...])   # suffix edges, t > t_max
+
+refreshing resident indexes incrementally in the background while queries
+keep resolving against the old epoch until the atomic handle swap.
+
 The positional ``submit``/``submit_many``/``query`` signatures remain as
-deprecation shims resolving with the vertex frozenset.
+shims resolving with the vertex frozenset; each now emits
+``DeprecationWarning`` at the call site.
 """
 
 from repro.core.query_api import (EdgeSet, InvalidQueryError, Provenance,

@@ -147,8 +147,16 @@ class MicroBatcher:
                     self._count("flush_forced")
                 else:
                     self._count("flush_deadline")
-                self._force_flush = False
                 take = min(len(self._pending), self.max_batch)
+                # Clear the force flag only once this dispatch drains the
+                # queue. Clearing unconditionally would (a) swallow a
+                # flush() aimed at requests beyond a simultaneously-full
+                # batch (they'd sit out a whole deadline), and (b) if the
+                # flag were ever set with nothing pending, leak it into the
+                # next unrelated batch as a premature, miscounted
+                # flush_forced dispatch.
+                if take == len(self._pending):
+                    self._force_flush = False
                 batch = [self._pending.popleft() for _ in range(take)]
                 self._inflight += take
             self._run_batch(batch)

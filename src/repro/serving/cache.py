@@ -73,6 +73,35 @@ class ResultCache:
             self.purges += len(dead)
             return len(dead)
 
+    def purge_window(self, index_key, ts_lo: int, ts_hi: int) -> int:
+        """Targeted invalidation for a streaming epoch refresh: drop only
+        ``index_key`` entries whose canonical window intersects
+        ``[ts_lo, ts_hi]`` (the appended timestamp range).
+
+        Every other entry stays — a window with ``te < ts_lo`` contains no
+        appended edge, so its cached answer is *still exact* in the new
+        epoch (this is what makes suffix epochs cheap on the serving path:
+        in the common case the purge count is zero, versus
+        :meth:`purge_index` dropping the key's whole working set). Spec
+        keys are ``(u, ts, te, k, mode)``; the canonical empty-window
+        marker (``ts > te``) never intersects. Returns the purge count."""
+        with self._lock:
+            dead = []
+            for k in self._data:
+                if not (isinstance(k, tuple) and len(k) == 2
+                        and k[0] == index_key):
+                    continue
+                spec = k[1]
+                if not (isinstance(spec, tuple) and len(spec) >= 3):
+                    continue
+                ts, te = spec[1], spec[2]
+                if ts <= te and te >= ts_lo and ts <= ts_hi:
+                    dead.append(k)
+            for k in dead:
+                del self._data[k]
+            self.purges += len(dead)
+            return len(dead)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._data)

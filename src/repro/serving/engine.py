@@ -25,23 +25,34 @@ many sliding windows in a single device launch (the contact-tracing
 trajectory query); cache-hot windows are skipped, misses share one
 ``window_sweep`` program.
 
+``ingest(workload, edges)`` is the streaming entry point (DESIGN.md §9):
+suffix edges extend the graph epoch, resident indexes refresh
+incrementally in the background (bit-identical to a cold rebuild), and
+queries keep being answered — against the *old* epoch's handle, with its
+own window canonicalization — until the refreshed handle is atomically
+swapped in. Result-cache invalidation is *targeted*
+(``ResultCache.purge_window``): only entries whose window intersects the
+appended timestamp range are dropped, which for suffix appends is none.
+
 Results are always identical to ``PECBIndex.answer`` (Algorithm 1 plus the
 version-store edge derivation) — the engine only changes *where and when*
 the answer is computed, never *what*; tests assert exact equality across
 every route. The positional ``submit``/``submit_many``/``query`` signatures
-remain as thin deprecation shims whose futures resolve with the component
-vertex frozenset, exactly as before v2.
+remain as thin shims whose futures resolve with the component vertex
+frozenset, exactly as before v2; each emits ``DeprecationWarning`` at the
+call site.
 
 Thread-safety: ``submit*`` may be called from any number of caller threads;
 each index handle owns one batcher worker thread; the registry serializes
-builds per key. ``close()`` (or the context manager) drains and stops all
-workers.
+builds per key and refreshes on one FIFO worker. ``close()`` (or the
+context manager) drains and stops all workers.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from concurrent.futures import Future
 from threading import Lock
 from typing import Iterable, Sequence
@@ -106,6 +117,7 @@ class ServingEngine:
         self._lock = Lock()
         self._closed = False
         self.registry.add_evict_listener(self._on_index_evicted)
+        self.registry.add_refresh_listener(self._on_index_refreshed)
 
     # -- graph/index management -----------------------------------------
     def register_graph(self, name: str, g) -> None:
@@ -139,6 +151,28 @@ class ServingEngine:
     def prefetch(self, workload: str, k: int) -> Future:
         """Kick off (or join) the background index build; never blocks."""
         return self.registry.get_async(workload, k)
+
+    # -- streaming ingest -------------------------------------------------
+    def ingest(self, workload: str, edges,
+               wait: bool = False, timeout: float | None = 120.0) -> dict:
+        """Append suffix ``edges`` to ``workload``'s graph and refresh its
+        resident indexes incrementally in the background.
+
+        Non-blocking by default: returns ``{(workload, k): Future}`` for
+        every resident index being refreshed (empty when none is resident
+        — the next cold build simply sees the new epoch). Queries keep
+        resolving throughout a refresh, pinned to the old epoch's handle;
+        the swap is atomic and the refresh listener retires the old
+        batcher and runs the targeted cache purge. ``wait=True`` blocks
+        until every refresh has landed."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        self.metrics.count("ingests")
+        futures = self.registry.extend_graph(workload, edges)
+        if wait:
+            for f in futures.values():
+                f.result(timeout=timeout)
+        return futures
 
     # -- query paths: v2 typed surface -----------------------------------
     def submit_spec(self, workload: str, spec: TCCSQuery) -> Future:
@@ -183,14 +217,28 @@ class ServingEngine:
     def submit(self, workload: str, k: int, u: int, ts: int, te: int) -> Future:
         """Deprecated shim over :meth:`submit_spec`; resolves with the
         vertex frozenset and keeps the lenient pre-v2 semantics (malformed
-        windows answer the empty set instead of raising)."""
-        return self.submit_many(workload, k, [(u, ts, te)])[0]
+        windows answer the empty set instead of raising). Emits
+        :class:`DeprecationWarning`."""
+        warnings.warn(
+            "ServingEngine.submit(workload, k, u, ts, te) is deprecated; "
+            "use submit_spec(workload, TCCSQuery(u, ts, te, k))",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_legacy(workload, k, [(u, ts, te)])[0]
 
     def submit_many(self, workload: str, k: int,
                     queries: Iterable[Sequence[int]]) -> list[Future]:
         """Deprecated shim: one vertex-frozenset future per (u, ts, te), in
         input order, lenient validation. Cache hits resolve before this
-        returns; misses resolve when their batch flushes."""
+        returns; misses resolve when their batch flushes. Emits
+        :class:`DeprecationWarning`."""
+        warnings.warn(
+            "ServingEngine.submit_many(workload, k, queries) is deprecated; "
+            "use submit_specs(workload, [TCCSQuery(...), ...])",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_legacy(workload, k, queries)
+
+    def _submit_legacy(self, workload: str, k: int,
+                       queries: Iterable[Sequence[int]]) -> list[Future]:
         specs = [TCCSQuery(int(u), int(ts), int(te), int(k))
                  for (u, ts, te) in queries]
         inner = self._submit_specs(workload, int(k), specs, lenient=True)
@@ -210,10 +258,20 @@ class ServingEngine:
         # is needed (a fully-cached stream must not rebuild an evicted index)
         handle = self.registry.get_nowait(workload, k, start_build=False)
         g = None
-        try:
-            g = self.registry.resolve_graph(workload)
-        except KeyError:
-            pass  # unknown workload: surface as the build future's error
+        if handle is not None:
+            # epoch pinning: canonicalize against the graph the resident
+            # index was built for. During a streaming refresh the registry
+            # may already hold a newer graph epoch; clamping to the
+            # handle's t_max keeps window semantics and answers consistent
+            # with the index that will serve them (and those answers stay
+            # exact in every later epoch — their windows predate the
+            # appended suffix).
+            g = handle.graph
+        else:
+            try:
+                g = self.registry.resolve_graph(workload)
+            except KeyError:
+                pass  # unknown workload: surface as the build future's error
         # validate every spec before creating any future (all-or-nothing:
         # a boundary error must not leave earlier futures dangling)
         prepared: list[tuple[TCCSQuery, bool]] = []
@@ -254,16 +312,59 @@ class ServingEngine:
                                       spec=cq))
         if misses:
             if handle is not None:
-                self._batcher_for(handle).submit_many(misses)
+                self._dispatch_misses(workload, k, handle, misses)
             else:
                 self.metrics.count("cold_submits")
                 self._submit_when_built(workload, k, misses)
         return futures
 
+    def _dispatch_misses(self, workload: str, k: int, handle: IndexHandle,
+                         misses: list[Request]) -> None:
+        """Hand misses to the handle's batcher, riding out retirement
+        races: a refresh/eviction listener may close the batcher between
+        our probe and the enqueue. On that RuntimeError, re-probe the
+        registry — a refreshed key yields the new epoch's handle (the
+        already-canonicalized windows stay exact there: they predate the
+        appended suffix), an evicted key chains on the rebuild. A swap
+        landing between probe and enqueue can also make ``_batcher_for``
+        *resurrect* a batcher bound to the retired handle (its retirement
+        already ran); the post-enqueue check retires it again so a dead
+        epoch never stays pinned — ``MicroBatcher.close`` drains pending
+        work first, so the just-enqueued misses still resolve."""
+        key = (workload, int(k))
+        for _ in range(8):   # bounded: each retry needs another swap race
+            cur = self.registry.get_nowait(workload, k, start_build=False)
+            if cur is None:
+                self.metrics.count("cold_submits")
+                self._submit_when_built(workload, k, misses)
+                return
+            handle = cur
+            try:
+                self._batcher_for(handle).submit_many(misses)
+            except RuntimeError:
+                if self._closed:
+                    raise
+                continue
+            latest = self.registry.get_nowait(workload, k, start_build=False)
+            if latest is not None and latest is not handle:
+                self._retire_batcher(key, handle)
+            return
+        raise RuntimeError(
+            f"batcher for {key} kept closing under submit")
+
     @staticmethod
     def _stamp_cache_hit(res: TCCSResult) -> TCCSResult:
-        prov = (dataclasses.replace(res.provenance, route="cache")
-                if res.provenance is not None else Provenance(route="cache"))
+        """Re-stamp a cached result with ``route="cache"`` — on a *copy*.
+
+        ``dataclasses.replace`` shallow-copies, which would share the
+        mutable ``timings`` dict between the stored result and every hit
+        handed to callers (threads mutating one would corrupt the other,
+        and the stored provenance itself); the dict is copied explicitly so
+        the cached original stays pristine."""
+        if res.provenance is None:
+            return dataclasses.replace(res, provenance=Provenance(route="cache"))
+        prov = dataclasses.replace(res.provenance, route="cache",
+                                   timings=dict(res.provenance.timings))
         return dataclasses.replace(res, provenance=prov)
 
     # -- window sweeps ----------------------------------------------------
@@ -343,7 +444,7 @@ class ServingEngine:
         def on_built(handle_fut: Future) -> None:
             try:
                 handle = handle_fut.result()
-                self._batcher_for(handle).submit_many(misses)
+                self._dispatch_misses(workload, k, handle, misses)
             except BaseException as exc:  # build failed or engine closed
                 for req in misses:
                     if not req.future.done():
@@ -352,8 +453,14 @@ class ServingEngine:
 
     def query(self, workload: str, k: int, u: int, ts: int, te: int,
               timeout: float | None = 60.0) -> frozenset:
-        """Synchronous convenience wrapper (one-request batch)."""
-        return self.submit(workload, k, u, ts, te).result(timeout=timeout)
+        """Deprecated synchronous shim (one-request batch); prefer
+        :meth:`answer`. Emits :class:`DeprecationWarning`."""
+        warnings.warn(
+            "ServingEngine.query(workload, k, u, ts, te) is deprecated; "
+            "use answer(workload, TCCSQuery(u, ts, te, k))",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_legacy(
+            workload, k, [(u, ts, te)])[0].result(timeout=timeout)
 
     # -- lifecycle -------------------------------------------------------
     def _batcher_for(self, handle: IndexHandle) -> MicroBatcher:
@@ -388,6 +495,25 @@ class ServingEngine:
         purged = self.cache.purge_index(key)
         if purged:
             self.metrics.count("cache_purged", purged)
+        self._retire_batcher(key, handle)
+
+    def _on_index_refreshed(self, key: tuple[str, int], old: IndexHandle,
+                            new: IndexHandle) -> None:
+        """Registry refresh hook (streaming epoch landed): run the
+        *targeted* cache purge — only results whose canonical window
+        intersects the appended range ``(old.t_max, new.t_max]`` — and
+        retire the old epoch's batcher so new submissions bind the
+        refreshed handle. For suffix appends every cached canonical window
+        satisfies ``te <= old.t_max``, so the expected purge count is zero:
+        the whole warm working set survives the epoch."""
+        purged = self.cache.purge_window(
+            key, old.graph.t_max + 1, new.graph.t_max)
+        if purged:
+            self.metrics.count("cache_purged_targeted", purged)
+        self._retire_batcher(key, old)
+
+    def _retire_batcher(self, key: tuple[str, int],
+                        handle: IndexHandle) -> None:
         with self._lock:
             entry = self._batchers.get(key)
             if entry is None or entry[0] is not handle:
@@ -414,6 +540,7 @@ class ServingEngine:
             self._closed = True
             batchers = [b for (_, b) in self._batchers.values()]
         self.registry.remove_evict_listener(self._on_index_evicted)
+        self.registry.remove_refresh_listener(self._on_index_refreshed)
         for b in batchers:
             b.close()
         if self._owns_registry:

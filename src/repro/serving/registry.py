@@ -23,6 +23,18 @@ upload) on the handle and into the metrics sink (``index_build_<stage>``).
 
 Graphs resolve by name: either registered explicitly (``register_graph``)
 or one of the named bench workloads (``BENCH_WORKLOADS``).
+
+Streaming epochs (DESIGN.md §9): ``extend_graph(name, edges)`` appends a
+timestamp suffix to a registered graph and *refreshes* every resident
+``(name, k)`` handle incrementally on a dedicated background worker
+(``extend_core_times`` + ``extend_pecb_index`` + ``refresh_device`` —
+bit-identical to a cold rebuild, at a fraction of the cost). Handles are
+immutable and **epoch-versioned**: the swap into the registry is atomic
+under the registry lock, so queries keep being answered against the old
+epoch's handle until the refresh lands, and in-flight batches holding the
+old handle stay consistent (its graph, index and device mirror describe
+one snapshot). Refresh listeners (``add_refresh_listener``) let the engine
+retire the old handle's batcher and run the *targeted* result-cache purge.
 """
 
 from __future__ import annotations
@@ -34,15 +46,20 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
-from repro.core.core_time import edge_core_times
+from repro.core.core_time import CoreTimeTable, edge_core_times, extend_core_times
 from repro.core.ecb_forest import IncrementalBuilder
 from repro.core.pecb_index import PECBIndex, pack_index
-from repro.core.batch_query import DeviceIndex, to_device
+from repro.core.streaming import extend_pecb_index
+from repro.core.batch_query import DeviceIndex, refresh_device, to_device
 
 
 @dataclasses.dataclass(frozen=True)
 class IndexHandle:
-    """A built (workload, k) index pair: host arrays + device mirror."""
+    """A built (workload, k) index pair: host arrays + device mirror.
+
+    ``epoch`` counts suffix extensions of the workload's graph; ``tab`` is
+    the epoch's core-time table, retained so the next refresh can extend it
+    in place (``extend_core_times`` needs the dense ``vertex_ct``)."""
 
     key: tuple[str, int]          # (workload name, k)
     graph: TemporalGraph
@@ -50,10 +67,24 @@ class IndexHandle:
     device: DeviceIndex
     build_seconds: float
     build_stages: dict = dataclasses.field(default_factory=dict, compare=False)
+    epoch: int = 0
+    tab: CoreTimeTable | None = dataclasses.field(default=None, compare=False)
 
     @property
     def nbytes(self) -> int:
         return self.pecb.nbytes()
+
+    @property
+    def tab_nbytes(self) -> int:
+        """Bytes retained for the refresh path: the epoch's version arrays
+        plus the dense ``vertex_ct`` matrix ((t_max+1) x n int32 — the
+        dominant term on long-horizon graphs). Kept out of :attr:`nbytes`
+        so the paper's index-size comparison stays undistorted, but
+        surfaced in the registry's ``resident_tab_bytes`` stat because it
+        is real, per-handle resident memory."""
+        if self.tab is None:
+            return 0
+        return self.tab.nbytes() + int(self.tab.vertex_ct.nbytes)
 
 
 class IndexRegistry:
@@ -69,14 +100,22 @@ class IndexRegistry:
         self._evict_listeners: list = []
         if on_evict is not None:
             self._evict_listeners.append(on_evict)
+        # refresh listeners: called as cb(key, old_handle, new_handle) after
+        # an epoch refresh atomically swapped the resident handle
+        self._refresh_listeners: list = []
         self._graphs: dict[str, TemporalGraph] = {}
+        self._epochs: dict[str, int] = {}
         self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
         self._lock = threading.Lock()
         self._pending: dict[tuple[str, int], Future] = {}
         self._build_workers = max(1, int(build_workers))
         self._pool: ThreadPoolExecutor | None = None
+        # refreshes run on their own single worker: FIFO, so chained
+        # extend_graph calls refresh each key in epoch order
+        self._refresh_pool: ThreadPoolExecutor | None = None
         self.builds = 0
         self.evictions = 0
+        self.refreshes = 0
 
     def add_evict_listener(self, cb) -> None:
         with self._lock:
@@ -87,13 +126,24 @@ class IndexRegistry:
             if cb in self._evict_listeners:
                 self._evict_listeners.remove(cb)
 
+    def add_refresh_listener(self, cb) -> None:
+        with self._lock:
+            self._refresh_listeners.append(cb)
+
+    def remove_refresh_listener(self, cb) -> None:
+        with self._lock:
+            if cb in self._refresh_listeners:
+                self._refresh_listeners.remove(cb)
+
     # -- graph sources --------------------------------------------------
     def register_graph(self, name: str, g: TemporalGraph) -> None:
         """Bind ``name`` to a graph, immutably: indexes, cached results and
         batchers are all keyed by name, so silently rebinding a name would
         keep serving answers for the old graph. Re-registering the *same*
         object is a no-op; a different one raises — publish new snapshots
-        under new names (e.g. ``"contacts@2026-07-31"``)."""
+        under new names (e.g. ``"contacts@2026-07-31"``), or grow the bound
+        graph with suffix edges through :meth:`extend_graph` (the epoch
+        plane keeps every derived artifact consistent)."""
         with self._lock:
             prev = self._graphs.get(name)
             if prev is not None and prev is not g:
@@ -117,6 +167,104 @@ class IndexRegistry:
             f"unknown workload {name!r}: register_graph() it or use one of "
             f"{sorted(BENCH_WORKLOADS)}"
         )
+
+    # -- streaming epochs -------------------------------------------------
+    def extend_graph(self, name: str,
+                     edges) -> dict[tuple[str, int], "Future[IndexHandle]"]:
+        """Append suffix ``edges`` to workload ``name`` and refresh every
+        resident ``(name, k)`` index incrementally in the background.
+
+        The graph rebind and epoch bump happen immediately (new cold builds
+        see the new epoch); each resident handle keeps serving until its
+        refreshed replacement is atomically swapped in. Returns one future
+        per affected key, resolving with the refreshed handle. Suffix
+        violations (historical timestamps, unknown vertices) raise here,
+        before anything is mutated.
+        """
+        with self._lock:
+            g = self._graphs.get(name)
+        if g is None:
+            g = self.resolve_graph(name)
+        g2 = g.extend(edges)                 # raises on non-suffix input
+        futures: dict = {}
+        with self._lock:
+            if self._graphs.get(name) is not g:
+                raise RuntimeError(
+                    f"concurrent extend_graph({name!r}); serialize ingests")
+            if g2 is g:                      # empty append: nothing to do
+                return {}
+            self._graphs[name] = g2
+            epoch = self._epochs.get(name, 0) + 1
+            self._epochs[name] = epoch
+            stale = [(key, h) for key, h in self._entries.items()
+                     if key[0] == name]
+            if stale and self._refresh_pool is None:
+                self._refresh_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="index-refresh")
+            for key, handle in stale:
+                fut: Future = Future()
+                futures[key] = fut
+                self._refresh_pool.submit(
+                    self._run_refresh, key, handle, g2, epoch, fut)
+        return futures
+
+    def _run_refresh(self, key, old: IndexHandle, g2: TemporalGraph,
+                     epoch: int, fut: Future) -> None:
+        try:
+            workload, k = key
+            stages = {}
+            t0 = time.perf_counter()
+            if old.tab is None:
+                raise RuntimeError(
+                    f"handle {key} carries no core-time table; cannot "
+                    "refresh incrementally")
+            t1 = time.perf_counter()
+            tab2 = extend_core_times(g2, k, old.tab)
+            stages["core_times"] = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            idx2 = extend_pecb_index(g2, k, tab2, old.pecb)
+            stages["forest"] = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            dev2, upload = refresh_device(old.pecb, old.device, idx2)
+            stages["device"] = time.perf_counter() - t1
+            total = time.perf_counter() - t0
+            handle = IndexHandle(key, g2, idx2, dev2, total, stages,
+                                 epoch=epoch, tab=tab2)
+        except BaseException as exc:
+            # failures must be observable even when nobody holds the future
+            # (the build-race catch-up path): a failed refresh otherwise
+            # leaves the registry silently serving the pre-ingest epoch
+            if self._metrics is not None:
+                self._metrics.count("index_refresh_failures")
+            fut.set_exception(exc)
+            return
+        with self._lock:
+            # atomic swap. Replace the handle this refresh grew from, or —
+            # chained ingests: a prior refresh may have already swapped a
+            # lower-epoch handle in — any resident handle of an older
+            # epoch. An eviction race (no resident entry) drops the
+            # refreshed handle; the next cold build sees the new graph.
+            cur = self._entries.get(key)
+            swapped = cur is old or (cur is not None and cur.epoch < epoch)
+            replaced = cur
+            if swapped:
+                self._entries[key] = handle
+                self._entries.move_to_end(key)
+            self.refreshes += 1
+            listeners = list(self._refresh_listeners)
+        if self._metrics is not None:
+            self._metrics.count("index_refreshes")
+            self._metrics.observe("index_refresh", total)
+            for stage, seconds in stages.items():
+                self._metrics.observe(f"index_refresh_{stage}", seconds)
+            self._metrics.count("refresh_upload_bytes",
+                                upload["uploaded_bytes"])
+            self._metrics.count("refresh_reused_bytes",
+                                upload["reused_bytes"])
+        if swapped:
+            for cb in listeners:
+                cb(key, replaced, handle)
+        fut.set_result(handle)
 
     # -- handle lookup ---------------------------------------------------
     def get(self, workload: str, k: int,
@@ -178,6 +326,7 @@ class IndexRegistry:
             fut.set_exception(exc)
             return
         evicted = []
+        catchup = None
         with self._lock:
             self._pending.pop(key, None)
             self._entries[key] = handle
@@ -188,14 +337,41 @@ class IndexRegistry:
                 if self._metrics is not None:
                     self._metrics.count("index_evictions")
             listeners = list(self._evict_listeners)
+            # an extend_graph that ran while this build was in flight found
+            # no resident entry to refresh; catch the stored handle up to
+            # the current epoch now, or it would serve pre-ingest data
+            # until the next ingest
+            cur_g = self._graphs.get(key[0])
+            if (cur_g is not None and cur_g is not handle.graph
+                    and self._entries.get(key) is handle):
+                if self._refresh_pool is None:
+                    self._refresh_pool = ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix="index-refresh")
+                # capture the pool under the lock: close() nulls the
+                # attribute, and the build future must resolve regardless
+                catchup = (self._refresh_pool, handle, cur_g,
+                           self._epochs.get(key[0], 0))
         for (k2, h2) in evicted:
             for cb in listeners:
                 cb(k2, h2)
         fut.set_result(handle)
+        if catchup is not None:
+            pool, stale, cur_g, epoch = catchup
+            try:
+                pool.submit(self._run_refresh, key, stale, cur_g, epoch,
+                            Future())
+            except RuntimeError:
+                pass   # registry closing: stale data is moot
 
     def _build(self, key: tuple[str, int]) -> IndexHandle:
         workload, k = key
         g = self.resolve_graph(workload)
+        with self._lock:
+            # re-read graph and epoch together: an extend_graph between the
+            # resolve and here must not yield a new epoch number stamped on
+            # an old graph (or vice versa)
+            g = self._graphs.get(workload, g)
+            epoch = self._epochs.get(workload, 0)
         stages = {}
         t0 = time.perf_counter()
         tab = edge_core_times(g, k)
@@ -210,7 +386,8 @@ class IndexRegistry:
         dev = to_device(idx)
         stages["device"] = time.perf_counter() - t1
         total = time.perf_counter() - t0
-        handle = IndexHandle(key, g, idx, dev, total, stages)
+        handle = IndexHandle(key, g, idx, dev, total, stages,
+                             epoch=epoch, tab=tab)
         with self._lock:
             # under the lock: concurrent builds of *different* keys would
             # otherwise lose increments (read-modify-write race)
@@ -223,12 +400,15 @@ class IndexRegistry:
         return handle
 
     def close(self, wait: bool = True) -> None:
-        """Stop the build pool. Pending futures still resolve when
-        ``wait=True`` (builds run to completion)."""
+        """Stop the build and refresh pools. Pending futures still resolve
+        when ``wait=True`` (builds run to completion)."""
         with self._lock:
             pool, self._pool = self._pool, None
+            rpool, self._refresh_pool = self._refresh_pool, None
         if pool is not None:
             pool.shutdown(wait=wait)
+        if rpool is not None:
+            rpool.shutdown(wait=wait)
 
     def __contains__(self, key: tuple[str, int]) -> bool:
         with self._lock:
@@ -241,6 +421,10 @@ class IndexRegistry:
                 "capacity": self.capacity,
                 "builds": self.builds,
                 "evictions": self.evictions,
+                "refreshes": self.refreshes,
+                "epochs": dict(self._epochs),
                 "pending": list(self._pending),
                 "resident_bytes": sum(h.nbytes for h in self._entries.values()),
+                "resident_tab_bytes": sum(h.tab_nbytes
+                                          for h in self._entries.values()),
             }

@@ -230,3 +230,53 @@ def test_core_time_table_nbytes_is_exact(g):
     assert tab.nbytes() == true_bytes
     for f in ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct"):
         assert getattr(tab, f).dtype == np.int32, f
+
+
+@given(g=temporal_graphs(max_t=10), k=st.integers(2, 3),
+       cut=st.floats(0.15, 0.9), data=st.data())
+@settings(**SETTINGS)
+def test_streaming_refresh_equals_cold_rebuild(g, k, cut, data):
+    """Streaming epoch plane: ``extend()`` + incremental refresh produces
+    core-time tables, a PECB index and answers identical to a cold rebuild
+    on the merged edge list, on all three backends (DESIGN.md §9)."""
+    from repro.core.core_time import extend_core_times
+    from repro.core.ctmsf_index import CTMSFIndex
+    from repro.core.ef_index import EFIndex
+    from repro.core.query_api import TCCSQuery
+    from repro.core.streaming import extend_pecb_index
+
+    t_old = max(1, int(g.t_max * cut))
+    g0, suffix = g.split_at(t_old)
+    if g0.m == 0 or suffix.shape[0] == 0:
+        return
+    tab0 = edge_core_times(g0, k)
+    idx0 = build_pecb_index(g0, k, tab0)
+    g1 = g0.extend(map(tuple, suffix.tolist()))
+    tab1 = extend_core_times(g1, k, tab0)
+    tab_cold = edge_core_times(g, k)
+    for f in ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct"):
+        assert np.array_equal(getattr(tab1, f), getattr(tab_cold, f)), f
+
+    idx1 = extend_pecb_index(g1, k, tab1, idx0)
+    idx_cold = build_pecb_index(g, k, tab_cold)
+    for f in ("node_u", "node_v", "node_ct", "node_edge", "node_live_from",
+              "node_live_to", "row_ptr", "ent_ts", "ent_left", "ent_right",
+              "ent_parent", "vrow_ptr", "vent_ts", "vent_node"):
+        assert np.array_equal(getattr(idx1, f), getattr(idx_cold, f)), f
+    assert idx1.versions == idx_cold.versions
+
+    # EF/CTMSF have no incremental builder, but fed the incrementally
+    # extended table they must answer exactly like their cold builds
+    backends = [(idx1, idx_cold),
+                (EFIndex(g1, k, tab1), EFIndex(g, k, tab_cold)),
+                (CTMSFIndex(g1, k, tab1), CTMSFIndex(g, k, tab_cold))]
+    t_max = max(g.t_max, 1)
+    for _ in range(6):
+        u = data.draw(st.integers(0, g.n - 1))
+        ts = data.draw(st.integers(1, t_max))
+        te = data.draw(st.integers(ts, t_max))
+        q = TCCSQuery(u, ts, te, k)
+        want = tccs_oracle(g, k, u, ts, te)
+        for inc, cold in backends:
+            assert inc.answer(q).vertices == frozenset(want)
+            assert cold.answer(q).vertices == frozenset(want)
