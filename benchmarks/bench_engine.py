@@ -19,7 +19,7 @@ from .common import default_k, random_queries, timed, workload, write_csv
 from repro.core.core_time import edge_core_times
 from repro.core.pecb_index import build_pecb_index
 from repro.core.batch_query import to_device, batch_query
-from repro.core.query_api import WindowSweep
+from repro.core.query_api import TCCSQuery, WindowSweep
 from repro.serving import EngineConfig, IndexRegistry, ServingEngine
 
 
@@ -91,10 +91,13 @@ def bench_engine_load_sweep(name: str = "fb_like",
                     delay = target - time.perf_counter()
                     if delay > 0:
                         time.sleep(delay)
-                    futures.append(eng.submit(name, k, *q))
+                    futures.append(eng.submit_spec(
+                        name, TCCSQuery(*q, k)))
             else:
                 for i in range(0, len(queries), cfg.max_batch):
-                    futures += eng.submit_many(name, k, queries[i:i + cfg.max_batch])
+                    futures += eng.submit_specs(
+                        name, [TCCSQuery(u, ts, te, k) for (u, ts, te)
+                               in queries[i:i + cfg.max_batch]])
             eng.flush()
             for f in futures:
                 f.result(timeout=300)
@@ -122,8 +125,8 @@ def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
     """Window-sweep scenario (query API v2): one vertex, ``W`` sliding
     windows — the contact-tracing trajectory query.
 
-    Compares the pre-v2 client pattern (``W`` independent ``submit`` round
-    trips, each paying batcher deadline + its own route) against ONE
+    Compares the pre-v2 client pattern (``W`` independent single-query
+    round trips, each paying batcher deadline + its own route) against ONE
     ``WindowSweep`` engine call (a single ``window_sweep`` device launch
     for all cache-missing windows). Results are asserted identical; rows
     land in the offered-load CSV with offered_qps labels ``perwin_w{W}`` /
@@ -146,7 +149,8 @@ def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
     with ServingEngine(cfg, registry=registry) as eng:
         eng.warmup(name, k)
         t0 = time.perf_counter()
-        per_win = [eng.submit(name, k, u, ts, te).result(timeout=300)
+        per_win = [eng.submit_spec(name, TCCSQuery(u, ts, te, k))
+                      .result(timeout=300).vertices
                    for (ts, te) in windows]
         dt_perwin = time.perf_counter() - t0
         snap = eng.stats()

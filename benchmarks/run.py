@@ -25,6 +25,7 @@ def main(argv=None):
     from . import bench_construction as bc
     from . import bench_paper as bp
     from . import bench_engine as be
+    from . import bench_retention as br
     from . import bench_streaming as bs
 
     workloads = ["fb_like", "cm_like"] if args.fast else bp.WORKLOADS
@@ -71,6 +72,20 @@ def main(argv=None):
           # 5x floor (CI machines are noisy); the full run asserts it
           bs.bench_refresh(("fb_like",) if args.fast else ("em_like",),
                            assert_speedup=not args.fast))
+    _emit("Retention: shrink vs cold rebuild (beyond paper; equality "
+          "asserted before reporting)",
+          ["workload", "k", "t_cut", "expired_edges", "shrink_tab_s",
+           "shrink_index_s", "shrink_device_s", "shrink_total_s",
+           "cold_total_s", "speedup", "device_freed_bytes"],
+          # fast job smoke-runs the small workload without the em_like 3x
+          # floor (CI machines are noisy); the full run asserts it
+          br.bench_shrink(("fb_like",) if args.fast else ("em_like",),
+                          assert_speedup=not args.fast))
+    _emit("Retention: rolling-window steady state (beyond paper; bounded "
+          "nbytes asserted across append+expire cycles)",
+          ["workload", "k", "window", "cycle", "t_max", "index_bytes",
+           "tab_bytes", "cache_entries", "trim_s"],
+          br.bench_rolling("fb_like" if args.fast else "em_like"))
     _emit("Query availability during streaming refresh (beyond paper)",
           ["workload", "k", "suffix_edges", "queries_during_refresh",
            "refresh_s", "mean_ms", "worst_ms"],

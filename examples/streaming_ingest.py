@@ -12,6 +12,14 @@ old epoch until the refreshed handle is atomically swapped in. Cached
 answers for historical windows survive the epoch: a window that predates
 the new day cannot have changed.
 
+The second half is the *rolling window* (DESIGN.md §10): contact-tracing
+data is only epidemiologically relevant for a couple of weeks, so a
+``RetentionPolicy`` expires the stale prefix as new days arrive — the
+resident index shrinks to the retained window (bit-identical to a cold
+build of the trimmed feed), day numbers shift so "day 1" is always the
+oldest retained day, and memory stays bounded no matter how long the feed
+runs.
+
 Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the network.
 """
 
@@ -23,7 +31,7 @@ import numpy as np
 from repro.core import TCCSQuery
 from repro.core.temporal_graph import gen_contact_network
 from repro.core.kcore import k_max
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import EngineConfig, RetentionPolicy, ServingEngine
 
 TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
 n_people, days_total, days_live = (120, 12, 3) if TINY else (300, 24, 6)
@@ -71,3 +79,35 @@ with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
     print(f"[stats] refreshes={s['registry']['refreshes']} "
           f"epochs={s['registry']['epochs']} "
           f"cache={s['cache']['hits']} hits/{s['cache']['misses']} misses")
+
+    # -- rolling window: retention keeps memory bounded (DESIGN.md §10) --
+    # Contacts older than `keep_days` no longer matter for tracing; a
+    # retention policy expires them as new days arrive. Day numbers shift:
+    # after a trim, "day 1" is the oldest *retained* day.
+    keep_days = days_live + 1
+    bytes_before = eng.registry.get("feed", k).nbytes
+    for f in eng.set_retention("feed",
+                               RetentionPolicy(window=keep_days)).values():
+        f.result(timeout=120)       # wait out the first (catch-up) trim
+    for extra_day in range(1, 3):   # two more days arrive, feed stays flat
+        day_edges = gen_contact_network(n_people, 1, seed=100 + extra_day)
+        # next day number in the *current epoch's* shifted timeline — read
+        # it from the graph binding (rebound synchronously by every
+        # ingest/trim), not from a resident handle that may predate an
+        # in-flight trim
+        t_now = eng.registry.resolve_graph("feed").t_max
+        eng.ingest("feed",
+                   [(int(u), int(v), t_now + 1) for u, v in
+                    zip(day_edges.src, day_edges.dst)],
+                   wait=True)
+        h = eng.registry.get("feed", k)
+        recent = eng.answer("feed", TCCSQuery(patient, 1, h.graph.t_max, k))
+        print(f"rolling day +{extra_day}: retained days=1..{h.graph.t_max} "
+              f"(window={keep_days}), index {h.nbytes} B "
+              f"(was {bytes_before} B untrimmed), "
+              f"cohort over retained window {len(recent.vertices)}")
+        assert h.graph.t_max <= keep_days   # timeline stays bounded
+    s = eng.stats()
+    print(f"[stats] retentions={s['registry']['retentions']} "
+          f"auto_trims={s['engine']['counters'].get('auto_trims', 0)} "
+          f"cache rehomes={s['cache']['rehomes']}")

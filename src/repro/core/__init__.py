@@ -2,7 +2,9 @@
 forest / PECB index and baselines, the batched device query plane, the
 typed Query API v2 surface (DESIGN.md §8) they all answer through, and the
 streaming epoch plane (DESIGN.md §9: ``TemporalGraph.extend`` +
-``extend_core_times`` + ``extend_pecb_index``)."""
+``extend_core_times`` + ``extend_pecb_index``) with its sliding-window
+retention counterpart (DESIGN.md §10: ``TemporalGraph.expire_before`` /
+``retain_last`` + ``shrink_core_times`` + ``shrink_pecb_index``)."""
 
 from .query_api import (
     EdgeSet,

@@ -173,11 +173,22 @@ def refresh_device(prev_host: PECBIndex, prev_dev: DeviceIndex,
     indistinguishable from ``to_device(new_host)`` (test-asserted); the
     returned stats (``reused_bytes``/``uploaded_bytes`` + per-kind counts)
     make the transfer savings observable to the registry's refresh metrics.
+
+    Retention epochs (``streaming.shrink_pecb_index``) land here too: a
+    shrunk index shares no bytes with its predecessor (every surviving
+    value is shifted), so each array takes the full-upload path — smaller
+    than the buffer it replaces. ``freed_bytes`` records the net device
+    memory returned by the swap (old mirror bytes minus new), the
+    observable behind the bounded-memory claim the retention bench
+    asserts; it is 0 for grow refreshes.
     """
     _, old_arrays = _host_layout(prev_host)
     meta, new_arrays = _host_layout(new_host)
     stats = {"reused": 0, "suffix": 0, "full": 0,
-             "reused_bytes": 0, "uploaded_bytes": 0}
+             "reused_bytes": 0, "uploaded_bytes": 0, "freed_bytes": 0}
+    old_total = sum(int(a.nbytes) for a in old_arrays.values())
+    new_total = sum(int(a.nbytes) for a in new_arrays.values())
+    stats["freed_bytes"] = max(0, old_total - new_total)
     arrays = {}
     for name in _ARRAY_FIELDS:
         old_np, new_np = old_arrays[name], new_arrays[name]

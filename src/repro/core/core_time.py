@@ -692,6 +692,79 @@ def extend_core_times(g: TemporalGraph, k: int,
 
 
 # ----------------------------------------------------------------------
+# Retention plane: prefix expiry for sliding-window epochs
+# ----------------------------------------------------------------------
+
+def shrink_core_times(g: TemporalGraph, k: int,
+                      prev: CoreTimeTable) -> CoreTimeTable:
+    """Shrink a core-time table after prefix expiry (sliding-window epochs).
+
+    ``g`` must be the shifted epoch ``old_graph.expire_before(t_cut)`` of
+    the graph ``prev`` was built for: edges with timestamp ``< t_cut``
+    dropped, survivors shifted by ``shift = t_cut - 1`` and renumbered by
+    ``-cut`` (the expired edge count). The result is **bit-identical** to
+    ``edge_core_times(g, k)`` (test-asserted) at pure-slicing cost,
+    because of the *cut invariant*:
+
+        every surviving start time ``ts >= t_cut`` projects a window
+        ``[ts, te] ⊆ [ts, t_max]`` whose edges all have ``t >= ts >=
+        t_cut`` — no expired edge can appear in it.
+
+    So no vertex needs re-solving: the k-core of every surviving window
+    is untouched, and the whole table reduces by relabeling —
+
+    * **vertex rows**: new row ``ts`` = old row ``ts + shift``, finite
+      values shifted down, old-INF (``t_old + 1``) mapped to new-INF.
+    * **version records die or clip, never change.** A record survives
+      iff its start-time interval reaches the cut (``ts_to >= t_cut``);
+      a surviving record keeps its core time (shifted) with ``ts_from``
+      clipped to the cut. Clipping cannot merge runs (run values are
+      constant and maximal already) and preserves the ``(edge_id,
+      ts_from)`` sort, so the record stream needs no re-sort and no
+      re-run-detection. Records of expired edges always die: their
+      intervals end at ``ts_to <= t(e) < t_cut``.
+
+    Raises ``ValueError`` when ``(g, prev)`` is not a consistent
+    prefix-expiry pair, so a wrong table is never produced silently.
+    """
+    shift = prev.t_max - g.t_max
+    cut_m = prev.m - g.m
+    t_cut = shift + 1
+    if prev.n != g.n:
+        raise ValueError(f"vertex count changed ({prev.n} -> {g.n}); "
+                         "shrink_core_times needs the same vertex set")
+    if shift < 0 or cut_m < 0:
+        raise ValueError("prev table does not describe a supergraph of g "
+                         "(shrink goes forward in time; use "
+                         "extend_core_times to grow)")
+    if shift == 0 and cut_m == 0:
+        return prev                       # no cut: same epoch
+    if g.m == 0 or g.t_max == 0:
+        return _compress(g, _sweep_host(g, k))   # everything expired
+    inf_old, inf_new = prev.t_max + 1, g.t_max + 1
+
+    # -- vertex rows: slice + shift, INF remapped -------------------------
+    vo = prev.vertex_ct[t_cut:].astype(np.int64)
+    vct = np.full((g.t_max + 1, g.n), inf_new, np.int32)
+    fin = vo < inf_old
+    block = np.full(vo.shape, inf_new, np.int64)
+    block[fin] = vo[fin] - shift
+    vct[1:] = block.astype(np.int32)
+
+    # -- records: drop dead, clip the cut straddlers, shift, renumber -----
+    keep = prev.ts_to.astype(np.int64) >= t_cut
+    edge_id = prev.edge_id[keep].astype(np.int64) - cut_m
+    if edge_id.size and edge_id.min() < 0:
+        raise ValueError(
+            "a surviving version references an expired edge; prev is not "
+            "the table of g's pre-expiry epoch")
+    ts_from = np.maximum(prev.ts_from[keep].astype(np.int64), t_cut) - shift
+    ts_to = prev.ts_to[keep].astype(np.int64) - shift
+    ct = prev.ct[keep].astype(np.int64) - shift
+    return _as_table(g, edge_id, ts_from, ts_to, ct, vct)
+
+
+# ----------------------------------------------------------------------
 # Brute-force oracle (tests only): CT by scanning te for each (ts, e).
 # ----------------------------------------------------------------------
 

@@ -1,4 +1,5 @@
-"""Streaming epoch plane: grow a packed PECB index across suffix epochs.
+"""Streaming epoch plane: grow a packed PECB index across suffix epochs,
+shrink it across prefix-expiry (retention) epochs.
 
 ``TemporalGraph.extend`` appends *suffix* edges (every timestamp strictly
 newer than ``t_max``) and yields the next graph epoch;
@@ -570,6 +571,136 @@ def extend_pecb_index(g: TemporalGraph, k: int, tab: CoreTimeTable,
         g.n, g.m, t_new, k,
         i32(node_u), i32(node_v), i32(node_ct), i32(node_edge),
         i32(node_lf), i32(node_lt),
+        row_ptr, ent_ts_c, ent_l_c, ent_r_c, ent_p_c,
+        vrow_ptr, vent_ts_c, vent_node_c,
+        versions=VersionStore.from_table(g, k, tab),
+    )
+
+
+# ----------------------------------------------------------------------
+# the shrink path (retention plane)
+# ----------------------------------------------------------------------
+
+def shrink_pecb_index(g: TemporalGraph, k: int, tab: CoreTimeTable,
+                      prev: PECBIndex) -> PECBIndex:
+    """Shrink ``prev`` (the pre-expiry epoch's packed index) into the index
+    for the prefix-expired, shifted graph ``g`` with shrunk core-time table
+    ``tab`` (``core_time.shrink_core_times``).
+
+    Bit-identical to ``build_pecb_index(g, k, tab)`` — every packed array,
+    including node-id assignment (test-asserted) — at pure-slicing cost.
+    Where the grow path must *replay* the old layer and overlay new
+    Kruskal work, the shrink path needs neither: by the cut invariant
+    (no surviving window contains an expired edge) the ECB forest at every
+    surviving start time ``ts >= t_cut`` is **literally the old forest**
+    at that ts, so the new index is the old one restricted to the
+    surviving time range and relabeled:
+
+    * **Nodes** survive iff their forest lifetime reaches the cut
+      (``live_to >= t_cut``); ``live_from`` clips to the cut. Node ids
+      compact in order: the cold insertion order is ``(live_to desc,
+      rank asc)`` (the PR-4 invariant) and both keys shift uniformly
+      (``live_to - shift``; rank ``(ct - shift, edge - cut)``), so stable
+      compaction of the surviving old ids *is* the cold id assignment.
+    * **Entries** survive iff recorded at ``ts >= t_cut``. Recording
+      points above the cut are unchanged (same state changes at the same
+      sweep steps), and the entry covering the new ``ts = 1`` is exactly
+      the old entry covering ``t_cut`` (the step function holds
+      downward), so a ts-filter reproduces the cold build's delta
+      compression verbatim. Every reference inside a kept entry points at
+      a node in the forest at the recording ts ``>= t_cut`` — a survivor
+      — so remapping is total (a miss raises ``ForestInvariantError``).
+    * **Per-vertex entry points** filter and remap the same way.
+
+    Raises ``ValueError`` when ``(g, tab, prev)`` is not a consistent
+    prefix-expiry triple, so a wrong index is never produced silently.
+    """
+    from .pecb_index import build_pecb_index   # cold fallback (cycle-safe)
+
+    shift = prev.t_max - g.t_max
+    cut_m = prev.m - g.m
+    t_cut = shift + 1
+    if prev.k != k:
+        raise ValueError(f"index k={prev.k} does not match k={k}")
+    if prev.n != g.n:
+        raise ValueError(f"vertex count changed ({prev.n} -> {g.n}); "
+                         "shrink needs the same vertex set")
+    if shift < 0 or cut_m < 0:
+        raise ValueError("prev index does not describe a supergraph of g "
+                         "(shrink goes forward in time; use "
+                         "extend_pecb_index to grow)")
+    if tab.t_max != g.t_max or tab.m != g.m or tab.n != g.n:
+        raise ValueError("tab is not the core-time table of g; pass "
+                         "tab=shrink_core_times(g, k, prev_tab)")
+    if shift == 0 and cut_m == 0:
+        return prev                       # no cut: same epoch
+    if prev.versions is None or g.m == 0 or g.t_max == 0:
+        return build_pecb_index(g, k, tab)   # nothing trustworthy to slice
+
+    # -- integrity: prev's surviving records, clipped+shifted, must be tab
+    vs = prev.versions
+    vkeep = vs.ts_to.astype(np.int64) >= t_cut
+    if not (int(vkeep.sum()) == tab.num_versions
+            and np.array_equal(vs.edge_id[vkeep].astype(np.int64) - cut_m,
+                               tab.edge_id)
+            and np.array_equal(
+                np.maximum(vs.ts_from[vkeep].astype(np.int64), t_cut) - shift,
+                tab.ts_from)
+            and np.array_equal(vs.ts_to[vkeep].astype(np.int64) - shift,
+                               tab.ts_to)
+            and np.array_equal(vs.ct[vkeep].astype(np.int64) - shift,
+                               tab.ct)):
+        raise ValueError(
+            "surviving version records of prev do not clip to tab; this is "
+            "not a prefix expiry of the index's graph (cold rebuild "
+            "required)")
+
+    # -- node survival + id compaction (order-preserving) -----------------
+    old_lt = prev.node_live_to.astype(np.int64)
+    nkeep = old_lt >= t_cut
+    newid = np.cumsum(nkeep, dtype=np.int64) - 1      # valid where nkeep
+    total = int(nkeep.sum())
+
+    def remap_refs(refs: np.ndarray) -> np.ndarray:
+        """Old node refs -> compacted ids (NONE passthrough); referencing a
+        dead node means the index was not a consistent epoch snapshot."""
+        refs = np.asarray(refs, np.int64)
+        live = refs >= 0
+        if live.any() and not nkeep[refs[live]].all():
+            raise ForestInvariantError(
+                "a surviving entry references an expired forest node")
+        out = np.full(refs.shape, NONE, np.int64)
+        out[live] = newid[refs[live]]
+        return out
+
+    node_edge = prev.node_edge[nkeep].astype(np.int64) - cut_m
+    if node_edge.size and node_edge.min() < 0:
+        raise ValueError(
+            "a surviving forest node references an expired edge; prev is "
+            "not the index of g's pre-expiry epoch")
+
+    # -- entries: ts-filter on surviving nodes, shift, remap --------------
+    oe_node, oe_ts, oe_l, oe_r, oe_p = _flatten_entries(prev)
+    ekeep = nkeep[oe_node] & (oe_ts >= t_cut)
+    ov_vert, ov_ts, ov_node = _flatten_vent(prev)
+    vent_keep = ov_ts >= t_cut
+
+    row_ptr, ent_ts_c, (ent_l_c, ent_r_c, ent_p_c) = _csr_sorted(
+        newid[oe_node[ekeep]], oe_ts[ekeep] - shift,
+        (remap_refs(oe_l[ekeep]), remap_refs(oe_r[ekeep]),
+         remap_refs(oe_p[ekeep])), total)
+    vrow_ptr, vent_ts_c, (vent_node_c,) = _csr_sorted(
+        ov_vert[vent_keep], ov_ts[vent_keep] - shift,
+        (remap_refs(ov_node[vent_keep]),), g.n)
+
+    i32 = lambda a: np.ascontiguousarray(a, np.int32)
+    return PECBIndex(
+        g.n, g.m, g.t_max, k,
+        i32(prev.node_u[nkeep]), i32(prev.node_v[nkeep]),
+        i32(prev.node_ct[nkeep].astype(np.int64) - shift), i32(node_edge),
+        i32(np.maximum(prev.node_live_from[nkeep].astype(np.int64), t_cut)
+            - shift),
+        i32(old_lt[nkeep] - shift),
         row_ptr, ent_ts_c, ent_l_c, ent_r_c, ent_p_c,
         vrow_ptr, vent_ts_c, vent_node_c,
         versions=VersionStore.from_table(g, k, tab),

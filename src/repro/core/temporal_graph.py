@@ -107,6 +107,47 @@ class TemporalGraph:
             np.concatenate([self.t, arr[:, 2].astype(np.int32)]),
         )
 
+    def expire_before(self, t_cut: int) -> "TemporalGraph":
+        """Drop every edge with timestamp ``< t_cut`` (prefix expiry) and
+        return the next graph epoch with surviving timestamps *shifted* to
+        start at 1 again (new ``t`` = old ``t - (t_cut - 1)``).
+
+        The shift is what keeps long-running deployments bounded: every
+        downstream structure — the dense ``vertex_ct`` matrix, the packed
+        index's per-ts entry streams, device buffers — is sized by
+        ``t_max``, so retention must shrink the time axis, not merely thin
+        the edge list. The shifted epoch is exactly the graph a cold
+        ``from_edges`` build over the surviving triples would produce:
+        edges stay sorted by ``(t, src, dst)`` (a constant shift preserves
+        the order) and the surviving edges keep their relative ids
+        (new id = old id - #expired), which is what lets
+        ``core_time.shrink_core_times`` / ``streaming.shrink_pecb_index``
+        reduce the retained indices by pure slicing instead of a rebuild.
+
+        ``t_cut <= 1`` expires nothing and returns ``self``; ``t_cut >
+        t_max`` expires everything (an empty epoch over the same vertex
+        set). Note a cut below the smallest timestamp still *shifts* —
+        retention contracts the timeline, not just the edge list.
+        """
+        t_cut = int(t_cut)
+        if t_cut <= 1:
+            return self
+        cut = int(np.searchsorted(self.t, t_cut, side="left"))
+        return TemporalGraph(
+            self.n,
+            np.ascontiguousarray(self.src[cut:]),
+            np.ascontiguousarray(self.dst[cut:]),
+            np.ascontiguousarray(self.t[cut:] - np.int32(t_cut - 1)),
+        )
+
+    def retain_last(self, w: int) -> "TemporalGraph":
+        """Sliding-window retention: keep only the last ``w`` timestamps
+        (``expire_before(t_max - w + 1)``). ``w >= t_max`` keeps everything
+        and returns ``self``."""
+        if w <= 0:
+            raise ValueError(f"retention window must be positive, got {w}")
+        return self.expire_before(self.t_max - int(w) + 1)
+
     def split_at(self, t: int) -> tuple["TemporalGraph", np.ndarray]:
         """(epoch graph of edges with timestamp <= t, suffix triples after
         ``t`` as an int64[(s, 3)] array) — the replay harness for streaming

@@ -23,7 +23,17 @@ Streaming graphs ingest through the same engine (DESIGN.md §9)::
         eng.ingest("cm_like", [(u, v, t), ...])   # suffix edges, t > t_max
 
 refreshing resident indexes incrementally in the background while queries
-keep resolving against the old epoch until the atomic handle swap.
+keep resolving against the old epoch until the atomic handle swap. The
+retention plane (DESIGN.md §10) bounds a long-running deployment's
+memory::
+
+        eng.set_retention("cm_like", RetentionPolicy(window=90, slack=7))
+
+auto-trimming the expired prefix on ingest (or explicitly via
+``eng.retain(name, t_cut)``): resident indexes *shrink* to the retained
+window — bit-identical to a cold build of the trimmed edge list — and
+cached answers for surviving windows are rehomed into the shifted
+timeline.
 
 The positional ``submit``/``submit_many``/``query`` signatures remain as
 shims resolving with the vertex frozenset; each now emits
@@ -36,14 +46,14 @@ from repro.core.query_api import (EdgeSet, InvalidQueryError, Provenance,
 
 from .batcher import MicroBatcher, Request
 from .cache import ResultCache
-from .engine import EngineConfig, ServingEngine
+from .engine import EngineConfig, RetentionPolicy, ServingEngine
 from .executor import PAD_QUERY, ShardedExecutor, bucket_size, pad_queries
 from .metrics import EngineMetrics, LatencyHistogram
 from .planner import QueryPlanner
 from .registry import IndexHandle, IndexRegistry
 
 __all__ = [
-    "EngineConfig", "ServingEngine",
+    "EngineConfig", "RetentionPolicy", "ServingEngine",
     "MicroBatcher", "Request",
     "QueryPlanner", "ShardedExecutor", "bucket_size", "pad_queries",
     "PAD_QUERY", "ResultCache", "IndexHandle", "IndexRegistry",

@@ -94,7 +94,15 @@ class MicroBatcher:
                 self._cond.notify_all()
 
     def drain(self, timeout: float | None = None) -> None:
-        """Block until every submitted request has been resolved."""
+        """Block until every submitted request has been resolved.
+
+        Raises ``TimeoutError`` only while work is genuinely outstanding.
+        The predicate re-check directly before the raise makes that
+        contract locally self-evident (and robust to future edits that
+        might release the lock inside the loop body); under the current
+        single condition lock the loop-top test already guarantees it —
+        a deadline racing the worker's final notify re-tests the
+        predicate at the top and drains cleanly."""
         end = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
             while self._pending or self._inflight:
@@ -105,6 +113,8 @@ class MicroBatcher:
                 if end is not None:
                     wait = min(wait, end - time.perf_counter())
                     if wait <= 0:
+                        if not (self._pending or self._inflight):
+                            return      # emptied at the deadline: drained
                         raise TimeoutError("batcher drain timed out")
                 self._cond.wait(timeout=wait)
 

@@ -34,6 +34,14 @@ swapped in. Result-cache invalidation is *targeted*
 (``ResultCache.purge_window``): only entries whose window intersects the
 appended timestamp range are dropped, which for suffix appends is none.
 
+``retain(workload, t_cut)`` / ``set_retention(workload, RetentionPolicy)``
+are the bounded-memory leg (DESIGN.md §10): prefix expiry shrinks resident
+indexes to the retained window in the background (auto-trimmed on ingest
+under a policy), cached windows touching the expired prefix are purged and
+the survivors rehomed into the shifted timeline, and cache fills from
+pre-trim handles are gated by a per-key epoch floor so the shifted key
+space never aliases stale coordinates.
+
 Results are always identical to ``PECBIndex.answer`` (Algorithm 1 plus the
 version-store edge derivation) — the engine only changes *where and when*
 the answer is computed, never *what*; tests assert exact equality across
@@ -84,6 +92,31 @@ def _vertices_future(inner: Future) -> Future:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetentionPolicy:
+    """Sliding-window retention for one workload (DESIGN.md §10.4).
+
+    ``window`` is the number of trailing timestamps to keep. ``slack`` is
+    trim hysteresis: the auto-trim fires only once ``t_max`` exceeds
+    ``window + slack``, then cuts back to exactly ``window`` — every trim
+    is a full (cheap, but not free) shrink refresh plus a cache rehome, so
+    slack amortizes one trim over several ingests instead of shaving one
+    timestamp per day. ``every`` evaluates the policy only on every N-th
+    ingest of the workload (a second, coarser period knob)."""
+
+    window: int
+    slack: int = 0
+    every: int = 1
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"retention window must be >= 1, got {self.window}")
+        if self.slack < 0:
+            raise ValueError(f"retention slack must be >= 0, got {self.slack}")
+        if self.every < 1:
+            raise ValueError(f"retention every must be >= 1, got {self.every}")
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 256         # micro-batch flush size == largest bucket
     flush_ms: float = 2.0        # max time a request waits for batchmates
@@ -116,8 +149,18 @@ class ServingEngine:
         self._batchers: dict[tuple[str, int], tuple[IndexHandle, MicroBatcher]] = {}
         self._lock = Lock()
         self._closed = False
+        # retention state: per-workload policy + ingest tick. The epoch
+        # floor gating cache fills (a handle older than the last retention
+        # trim must not fill the cache: its canonical windows are in the
+        # pre-shift timeline and would collide with the shifted epoch's
+        # keys — unlike suffix epochs, where stale writes stay exact and
+        # are welcome) lives in the cache itself (ResultCache.raise_floor)
+        # so the drop is atomic with put/purge under the cache lock.
+        self._retention: dict[str, RetentionPolicy] = {}
+        self._ingest_ticks: dict[str, int] = {}
         self.registry.add_evict_listener(self._on_index_evicted)
         self.registry.add_refresh_listener(self._on_index_refreshed)
+        self.registry.add_retention_listener(self._on_index_retained)
 
     # -- graph/index management -----------------------------------------
     def register_graph(self, name: str, g) -> None:
@@ -169,10 +212,92 @@ class ServingEngine:
             raise RuntimeError("engine is closed")
         self.metrics.count("ingests")
         futures = self.registry.extend_graph(workload, edges)
+        trims = self._auto_trim(workload)
+        # a trim future supersedes the same key's refresh future: the FIFO
+        # refresh worker runs the suffix refresh first, so the trim future
+        # resolving implies both steps landed
+        futures = {**futures, **trims}
         if wait:
             for f in futures.values():
                 f.result(timeout=timeout)
         return futures
+
+    # -- sliding-window retention -----------------------------------------
+    def set_retention(self, workload: str,
+                      policy: RetentionPolicy | int | None) -> dict:
+        """Install (or, with ``None``, remove) a sliding-window
+        :class:`RetentionPolicy` for ``workload``; a bare int is shorthand
+        for ``RetentionPolicy(window=policy)``. Every subsequent
+        :meth:`ingest` of the workload re-evaluates the policy (subject to
+        ``policy.every``) and auto-trims the expired prefix in the
+        background — and the policy is evaluated once right here, so a
+        workload already over its window starts trimming immediately;
+        the returned ``{(workload, k): Future}`` dict (usually empty) lets
+        callers wait for that first trim to land."""
+        if isinstance(policy, int):
+            policy = RetentionPolicy(window=policy)
+        with self._lock:
+            if policy is None:
+                self._retention.pop(workload, None)
+                return {}
+            self._retention[workload] = policy
+        return self._auto_trim(workload, tick=False)
+
+    def retention_policy(self, workload: str) -> RetentionPolicy | None:
+        with self._lock:
+            return self._retention.get(workload)
+
+    def retain(self, workload: str, t_cut: int, wait: bool = False,
+               timeout: float | None = 120.0) -> dict:
+        """Manually expire the prefix below ``t_cut`` (see
+        :meth:`IndexRegistry.retain`): resident indexes shrink in the
+        background, queries keep resolving against the old epoch until the
+        atomic swap, expired cache windows are purged and surviving ones
+        rehomed into the shifted timeline. Returns ``{(workload, k):
+        Future}`` like :meth:`ingest`."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        self.metrics.count("retentions")
+        futures = self._begin_trim(workload, t_cut)
+        if wait:
+            for f in futures.values():
+                f.result(timeout=timeout)
+        return futures
+
+    def _begin_trim(self, workload: str, t_cut: int) -> dict:
+        """Schedule a registry trim and raise the cache floor for every
+        affected key *at initiation* (to the epoch the trim just bumped
+        to), not only at swap time: if the trim never swaps — the key is
+        evicted mid-queue, or a racing cold build catches up first — the
+        retention listener never fires, yet pre-trim handles must still
+        be barred from filling the cache with pre-shift windows."""
+        futures = self.registry.retain(workload, t_cut)
+        if futures:
+            epoch = self.registry.stats()["epochs"].get(workload, 0)
+            for key in futures:
+                self.cache.raise_floor(key, epoch)
+        return futures
+
+    def _auto_trim(self, workload: str, tick: bool = True) -> dict:
+        """Evaluate the workload's retention policy; trim when ``t_max``
+        overflows ``window + slack`` (cutting back to exactly ``window``)."""
+        with self._lock:
+            pol = self._retention.get(workload)
+            if pol is None:
+                return {}
+            if tick:
+                self._ingest_ticks[workload] = n = \
+                    self._ingest_ticks.get(workload, 0) + 1
+                if n % pol.every:
+                    return {}
+        try:
+            g = self.registry.resolve_graph(workload)
+        except KeyError:
+            return {}
+        if g.t_max <= pol.window + pol.slack:
+            return {}
+        self.metrics.count("auto_trims")
+        return self._begin_trim(workload, g.t_max - pol.window + 1)
 
     # -- query paths: v2 typed surface -----------------------------------
     def submit_spec(self, workload: str, spec: TCCSQuery) -> Future:
@@ -408,7 +533,8 @@ class ServingEngine:
                 res = dataclasses.replace(res, provenance=dataclasses.replace(
                     res.provenance, index_key=key))
                 results[i] = res
-                self.cache.put((key, cq.cache_key()), res)
+                self.cache.put((key, cq.cache_key()), res,
+                               epoch=handle.epoch)
             self.metrics.count("host_batches")
             self.metrics.count("host_queries", len(misses))
         elif misses:
@@ -430,7 +556,8 @@ class ServingEngine:
                     store, [cq for _, cq in chunk], vmask, None, prov)
                 for (i, cq), res in zip(chunk, chunk_res):
                     results[i] = res
-                    self.cache.put((key, cq.cache_key()), res)
+                    self.cache.put((key, cq.cache_key()), res,
+                                   epoch=handle.epoch)
                 self.metrics.count("sweep_launches")
                 self.metrics.count("sweep_windows", len(chunk))
                 self.metrics.count("sweep_padded_slots", bucket - len(chunk))
@@ -497,6 +624,23 @@ class ServingEngine:
             self.metrics.count("cache_purged", purged)
         self._retire_batcher(key, handle)
 
+    def _on_index_retained(self, key: tuple[str, int], old: IndexHandle,
+                           new: IndexHandle, t_cut: int) -> None:
+        """Registry retention hook (prefix-expiry trim landed). Ordering:
+        (1) raise the cache's epoch floor (idempotent with the raise at
+        trim initiation; atomic with puts under the cache lock, so a
+        still-running batch or sweep bound to a pre-trim handle either
+        writes before the purge — and is rehomed/dropped by it like any
+        resident entry — or is gated); (2) retire the old batcher so new
+        submissions bind the trimmed handle; (3) purge cached windows
+        that touch the expired prefix and rehome the survivors into the
+        shifted timeline (``shift = t_cut - 1``)."""
+        self.cache.raise_floor(key, new.epoch)
+        self._retire_batcher(key, old)
+        purged = self.cache.purge_window(key, 1, t_cut - 1, shift=t_cut - 1)
+        if purged:
+            self.metrics.count("cache_purged_retention", purged)
+
     def _on_index_refreshed(self, key: tuple[str, int], old: IndexHandle,
                             new: IndexHandle) -> None:
         """Registry refresh hook (streaming epoch landed): run the
@@ -541,6 +685,7 @@ class ServingEngine:
             batchers = [b for (_, b) in self._batchers.values()]
         self.registry.remove_evict_listener(self._on_index_evicted)
         self.registry.remove_refresh_listener(self._on_index_refreshed)
+        self.registry.remove_retention_listener(self._on_index_retained)
         for b in batchers:
             b.close()
         if self._owns_registry:

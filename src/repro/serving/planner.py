@@ -126,6 +126,10 @@ class QueryPlanner:
             self.metrics.count("device_batches")
             self.metrics.count("device_queries", b)
             self.metrics.count("device_padded_slots", bucket - b)
+        # the handle's epoch rides along so the cache's retention-epoch
+        # floor can drop fills from pre-trim handles atomically with the
+        # trim's purge+rehome (DESIGN.md §10.3)
+        epoch = getattr(handle, "epoch", None)
         for s, res in zip(specs, results):
-            self.cache.put((handle.key, s.cache_key()), res)
+            self.cache.put((handle.key, s.cache_key()), res, epoch=epoch)
         return results

@@ -35,6 +35,17 @@ epoch's handle until the refresh lands, and in-flight batches holding the
 old handle stay consistent (its graph, index and device mirror describe
 one snapshot). Refresh listeners (``add_refresh_listener``) let the engine
 retire the old handle's batcher and run the *targeted* result-cache purge.
+
+Retention (DESIGN.md §10): ``retain(name, t_cut)`` is the epoch
+lifecycle's second leg — prefix expiry. It expires edges below ``t_cut``,
+rebinds the name to the shifted epoch immediately, and *shrinks* every
+resident ``(name, k)`` handle on the same FIFO refresh worker
+(``shrink_core_times`` + ``shrink_pecb_index`` + ``refresh_device`` — bit-
+identical to a cold build of the trimmed edge list, at slicing cost), so a
+long-running ingest+trim loop holds index, table and device-mirror memory
+bounded. Retention listeners (``add_retention_listener``) receive
+``(key, old, new, t_cut)`` so the engine can purge expired cache windows
+and rehome the survivors into the shifted timeline.
 """
 
 from __future__ import annotations
@@ -46,10 +57,11 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
-from repro.core.core_time import CoreTimeTable, edge_core_times, extend_core_times
+from repro.core.core_time import (CoreTimeTable, edge_core_times,
+                                  extend_core_times, shrink_core_times)
 from repro.core.ecb_forest import IncrementalBuilder
 from repro.core.pecb_index import PECBIndex, pack_index
-from repro.core.streaming import extend_pecb_index
+from repro.core.streaming import extend_pecb_index, shrink_pecb_index
 from repro.core.batch_query import DeviceIndex, refresh_device, to_device
 
 
@@ -103,6 +115,10 @@ class IndexRegistry:
         # refresh listeners: called as cb(key, old_handle, new_handle) after
         # an epoch refresh atomically swapped the resident handle
         self._refresh_listeners: list = []
+        # retention listeners: called as cb(key, old_handle, new_handle,
+        # t_cut) after a retention trim atomically swapped the resident
+        # handle (the engine runs the shifted cache purge/rehome here)
+        self._retention_listeners: list = []
         self._graphs: dict[str, TemporalGraph] = {}
         self._epochs: dict[str, int] = {}
         self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
@@ -116,6 +132,7 @@ class IndexRegistry:
         self.builds = 0
         self.evictions = 0
         self.refreshes = 0
+        self.retentions = 0
 
     def add_evict_listener(self, cb) -> None:
         with self._lock:
@@ -134,6 +151,15 @@ class IndexRegistry:
         with self._lock:
             if cb in self._refresh_listeners:
                 self._refresh_listeners.remove(cb)
+
+    def add_retention_listener(self, cb) -> None:
+        with self._lock:
+            self._retention_listeners.append(cb)
+
+    def remove_retention_listener(self, cb) -> None:
+        with self._lock:
+            if cb in self._retention_listeners:
+                self._retention_listeners.remove(cb)
 
     # -- graph sources --------------------------------------------------
     def register_graph(self, name: str, g: TemporalGraph) -> None:
@@ -212,6 +238,20 @@ class IndexRegistry:
                      epoch: int, fut: Future) -> None:
         try:
             workload, k = key
+            # re-read the resident handle: the FIFO worker guarantees every
+            # previously scheduled epoch mutation has landed, so a chain
+            # like retain -> extend must grow from the *trimmed* handle the
+            # shrink just swapped in, not the pre-trim handle captured at
+            # schedule time (whose graph g2 no longer suffix-extends).
+            # Chained suffix ingests also benefit: each refresh grows from
+            # the latest epoch instead of re-deriving from the oldest.
+            with self._lock:
+                cur = self._entries.get(key)
+            if cur is not None and cur.epoch >= epoch:
+                fut.set_result(cur)      # a newer epoch already landed
+                return
+            if cur is not None and cur.epoch > old.epoch:
+                old = cur
             stages = {}
             t0 = time.perf_counter()
             if old.tab is None:
@@ -238,20 +278,8 @@ class IndexRegistry:
                 self._metrics.count("index_refresh_failures")
             fut.set_exception(exc)
             return
-        with self._lock:
-            # atomic swap. Replace the handle this refresh grew from, or —
-            # chained ingests: a prior refresh may have already swapped a
-            # lower-epoch handle in — any resident handle of an older
-            # epoch. An eviction race (no resident entry) drops the
-            # refreshed handle; the next cold build sees the new graph.
-            cur = self._entries.get(key)
-            swapped = cur is old or (cur is not None and cur.epoch < epoch)
-            replaced = cur
-            if swapped:
-                self._entries[key] = handle
-                self._entries.move_to_end(key)
-            self.refreshes += 1
-            listeners = list(self._refresh_listeners)
+        swapped, replaced, listeners = self._swap_epoch_handle(
+            key, old, handle, epoch, kind="refresh")
         if self._metrics is not None:
             self._metrics.count("index_refreshes")
             self._metrics.observe("index_refresh", total)
@@ -264,6 +292,138 @@ class IndexRegistry:
         if swapped:
             for cb in listeners:
                 cb(key, replaced, handle)
+        fut.set_result(handle)
+
+    def _swap_epoch_handle(self, key, grown_from: IndexHandle,
+                           handle: IndexHandle, epoch: int, kind: str):
+        """Atomic epoch-handle swap shared by refresh and shrink workers.
+
+        Replaces the handle the worker grew from, or — chained epoch
+        mutations: a prior worker may have already swapped a lower-epoch
+        handle in — any resident handle of an older epoch. An eviction
+        race (no resident entry) drops the new handle; the next cold
+        build sees the new graph. Returns ``(swapped, replaced handle,
+        listener snapshot)``; listeners are dispatched by the caller,
+        outside the lock."""
+        with self._lock:
+            cur = self._entries.get(key)
+            swapped = (cur is grown_from
+                       or (cur is not None and cur.epoch < epoch))
+            if swapped:
+                self._entries[key] = handle
+                self._entries.move_to_end(key)
+            if kind == "refresh":
+                self.refreshes += 1
+                listeners = list(self._refresh_listeners)
+            else:
+                self.retentions += 1
+                listeners = list(self._retention_listeners)
+        return swapped, cur, listeners
+
+    # -- retention (prefix expiry) ----------------------------------------
+    def retain(self, name: str,
+               t_cut: int) -> dict[tuple[str, int], "Future[IndexHandle]"]:
+        """Expire every edge of workload ``name`` with timestamp
+        ``< t_cut`` and shrink every resident ``(name, k)`` index to the
+        shifted retained epoch in the background (DESIGN.md §10).
+
+        Mirrors :meth:`extend_graph`: the graph rebind and epoch bump are
+        immediate (new cold builds see the trimmed epoch), each resident
+        handle keeps serving until its shrunk replacement is atomically
+        swapped in, and one future per affected key resolves with the
+        swapped handle (``None`` if the key was evicted before its trim
+        ran). Trims share the single FIFO refresh worker with suffix
+        refreshes, so a ``extend_graph`` + ``retain`` chain lands in
+        order: the shrink always runs against the fully caught-up
+        resident handle. ``t_cut <= 1`` trims nothing and returns ``{}``.
+        """
+        with self._lock:
+            g = self._graphs.get(name)
+        if g is None:
+            g = self.resolve_graph(name)
+        g2 = g.expire_before(t_cut)
+        futures: dict = {}
+        with self._lock:
+            if self._graphs.get(name) is not g:
+                raise RuntimeError(
+                    f"concurrent extend/retain on {name!r}; serialize "
+                    "epoch mutations")
+            if g2 is g:                      # nothing expires: no-op
+                return {}
+            self._graphs[name] = g2
+            epoch = self._epochs.get(name, 0) + 1
+            self._epochs[name] = epoch
+            stale = [key for key in self._entries if key[0] == name]
+            if stale and self._refresh_pool is None:
+                self._refresh_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="index-refresh")
+            for key in stale:
+                fut: Future = Future()
+                futures[key] = fut
+                self._refresh_pool.submit(
+                    self._run_shrink, key, g, g2, int(t_cut), epoch, fut)
+        return futures
+
+    def _run_shrink(self, key, g_old: TemporalGraph, g2: TemporalGraph,
+                    t_cut: int, epoch: int, fut: Future) -> None:
+        """FIFO-worker body of one (key, trim). Unlike ``_run_refresh``
+        (which grows from the handle captured at schedule time — valid
+        because extending from *any* older suffix epoch works), the shrink
+        re-reads the resident handle here: the FIFO worker guarantees
+        every previously scheduled refresh has landed, so the resident
+        handle describes exactly the pre-cut binding ``g_old``."""
+        try:
+            with self._lock:
+                cur = self._entries.get(key)
+            if cur is None:
+                fut.set_result(None)     # evicted mid-queue: next cold
+                return                   # build sees the trimmed epoch
+            if cur.epoch >= epoch or cur.graph is g2:
+                fut.set_result(cur)      # a cold build already caught up
+                return
+            workload, k = key
+            stages = {}
+            t0 = time.perf_counter()
+            if cur.graph is g_old and cur.tab is not None:
+                t1 = time.perf_counter()
+                tab2 = shrink_core_times(g2, k, cur.tab)
+                stages["core_times"] = time.perf_counter() - t1
+                t1 = time.perf_counter()
+                idx2 = shrink_pecb_index(g2, k, tab2, cur.pecb)
+                stages["forest"] = time.perf_counter() - t1
+            else:
+                # resident handle does not describe the pre-cut epoch (a
+                # cold-build race stored an intermediate snapshot): fall
+                # back to an exact cold build of the trimmed graph
+                t1 = time.perf_counter()
+                tab2 = edge_core_times(g2, k)
+                stages["core_times"] = time.perf_counter() - t1
+                t1 = time.perf_counter()
+                idx2 = pack_index(g2, k, IncrementalBuilder(g2, tab2).run())
+                stages["forest"] = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            dev2, upload = refresh_device(cur.pecb, cur.device, idx2)
+            stages["device"] = time.perf_counter() - t1
+            total = time.perf_counter() - t0
+            handle = IndexHandle(key, g2, idx2, dev2, total, stages,
+                                 epoch=epoch, tab=tab2)
+        except BaseException as exc:
+            if self._metrics is not None:
+                self._metrics.count("index_retention_failures")
+            fut.set_exception(exc)
+            return
+        swapped, replaced, listeners = self._swap_epoch_handle(
+            key, cur, handle, epoch, kind="retention")
+        if self._metrics is not None:
+            self._metrics.count("index_retentions")
+            self._metrics.observe("index_retention", total)
+            for stage, seconds in stages.items():
+                self._metrics.observe(f"index_retention_{stage}", seconds)
+            self._metrics.count("retention_freed_bytes",
+                                upload["freed_bytes"])
+        if swapped:
+            for cb in listeners:
+                cb(key, replaced, handle, t_cut)
         fut.set_result(handle)
 
     # -- handle lookup ---------------------------------------------------
@@ -422,6 +582,7 @@ class IndexRegistry:
                 "builds": self.builds,
                 "evictions": self.evictions,
                 "refreshes": self.refreshes,
+                "retentions": self.retentions,
                 "epochs": dict(self._epochs),
                 "pending": list(self._pending),
                 "resident_bytes": sum(h.nbytes for h in self._entries.values()),

@@ -118,7 +118,7 @@ def test_batched_tccs_queries_shardable():
         # spot-check against the host index
         mask = np.asarray(out)
         for i in range(0, B, 7):
-            want = idx.query(int(u[i]), int(ts[i]), int(te[i]))
+            want = idx._component_vertices(int(u[i]), int(ts[i]), int(te[i]))
             got = set(np.nonzero(mask[i])[0].tolist())
             assert got == want
         print("sharded batch query ok")

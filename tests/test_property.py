@@ -42,7 +42,7 @@ def test_pecb_equals_oracle(g, k, data):
         u = data.draw(st.integers(0, g.n - 1))
         ts = data.draw(st.integers(1, t_max))
         te = data.draw(st.integers(ts, t_max))
-        assert idx.query(u, ts, te) == tccs_oracle(g, k, u, ts, te)
+        assert idx._component_vertices(u, ts, te) == tccs_oracle(g, k, u, ts, te)
 
 
 @given(g=temporal_graphs(), k=st.integers(2, 3))
@@ -280,3 +280,62 @@ def test_streaming_refresh_equals_cold_rebuild(g, k, cut, data):
         for inc, cold in backends:
             assert inc.answer(q).vertices == frozenset(want)
             assert cold.answer(q).vertices == frozenset(want)
+
+
+@given(g=temporal_graphs(max_t=10), k=st.integers(2, 3),
+       cut_at=st.floats(0.1, 0.8), cut_frac=st.floats(0.1, 0.95),
+       data=st.data())
+@settings(**SETTINGS)
+def test_retention_shrink_equals_cold_rebuild(g, k, cut_at, cut_frac, data):
+    """Retention plane: ``extend()`` ∘ ``expire_before()`` — grow the
+    epoch with a suffix, then expire a prefix — produces a core-time
+    table, a PECB index and answers field-for-field identical to a cold
+    build on the equivalent (truncated, shifted) edge list, on all three
+    backends (DESIGN.md §10)."""
+    from repro.core.core_time import extend_core_times, shrink_core_times
+    from repro.core.ctmsf_index import CTMSFIndex
+    from repro.core.ef_index import EFIndex
+    from repro.core.query_api import TCCSQuery
+    from repro.core.streaming import extend_pecb_index, shrink_pecb_index
+
+    t_old = max(1, int(g.t_max * cut_at))
+    g0, suffix = g.split_at(t_old)
+    if g0.m == 0:
+        return
+    tab = edge_core_times(g0, k)
+    idx = build_pecb_index(g0, k, tab)
+    g1 = g0
+    if suffix.shape[0]:
+        g1 = g0.extend(map(tuple, suffix.tolist()))
+        tab = extend_core_times(g1, k, tab)
+        idx = extend_pecb_index(g1, k, tab, idx)
+    t_cut = max(2, int(g1.t_max * cut_frac))
+    g2 = g1.expire_before(t_cut)
+    tab2 = shrink_core_times(g2, k, tab)
+    idx2 = shrink_pecb_index(g2, k, tab2, idx)
+
+    tab_cold = edge_core_times(g2, k)
+    for f in ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct"):
+        assert np.array_equal(getattr(tab2, f), getattr(tab_cold, f)), f
+    idx_cold = build_pecb_index(g2, k, tab_cold)
+    for f in ("node_u", "node_v", "node_ct", "node_edge", "node_live_from",
+              "node_live_to", "row_ptr", "ent_ts", "ent_left", "ent_right",
+              "ent_parent", "vrow_ptr", "vent_ts", "vent_node"):
+        assert np.array_equal(getattr(idx2, f), getattr(idx_cold, f)), f
+    assert idx2.versions == idx_cold.versions
+
+    # EF/CTMSF fed the shrunk table must answer exactly like their cold
+    # builds — and like the oracle on the truncated graph
+    backends = [(idx2, idx_cold),
+                (EFIndex(g2, k, tab2), EFIndex(g2, k, tab_cold)),
+                (CTMSFIndex(g2, k, tab2), CTMSFIndex(g2, k, tab_cold))]
+    t_max = max(g2.t_max, 1)
+    for _ in range(6):
+        u = data.draw(st.integers(0, g2.n - 1))
+        ts = data.draw(st.integers(1, t_max))
+        te = data.draw(st.integers(ts, t_max))
+        q = TCCSQuery(u, ts, te, k)
+        want = frozenset(tccs_oracle(g2, k, u, ts, te)) if g2.m else frozenset()
+        for shr, cold in backends:
+            assert shr.answer(q).vertices == want
+            assert cold.answer(q).vertices == want

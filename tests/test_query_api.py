@@ -119,8 +119,10 @@ class TestBackendProtocol:
         rng = np.random.default_rng(1)
         for (u, ts, te) in random_windows(g, 10, rng):
             for backend in (pecb, ef, cm):
-                assert (backend.query(u, ts, te)
-                        == set(backend.answer(TCCSQuery(u, ts, te, k)).vertices))
+                with pytest.warns(DeprecationWarning, match="deprecated"):
+                    legacy = backend.query(u, ts, te)
+                assert legacy == set(
+                    backend.answer(TCCSQuery(u, ts, te, k)).vertices)
 
 
 class TestDeviceModes:
@@ -247,7 +249,8 @@ class TestWindowSweep:
             got = eng.sweep("g", WindowSweep(u, k, windows))
             assert eng.metrics.counter("sweep_launches") >= 1
             for (ts, te), r in zip(windows, got):
-                assert r.vertices == frozenset(pecb.query(u, ts, te)), (ts, te)
+                assert r.vertices == frozenset(
+                    pecb._component_vertices(u, ts, te)), (ts, te)
                 assert r.provenance.route == "sweep"
             # the sweep filled the cache: a re-sweep is all hits
             misses0 = eng.metrics.counter("cache_misses")
@@ -290,7 +293,8 @@ class TestWindowSweep:
         te = jnp.asarray([w[1] for w in wins], jnp.int32)
         mask = np.asarray(window_sweep(dix, jnp.int32(u), ts, te))
         for (a, b), row in zip(wins, mask):
-            assert set(np.nonzero(row)[0].tolist()) == pecb.query(u, a, b)
+            assert set(np.nonzero(row)[0].tolist()) == \
+                pecb._component_vertices(u, a, b)
 
 
 class TestCachePurge:
@@ -304,10 +308,10 @@ class TestCachePurge:
         with ServingEngine(cfg) as eng:
             eng.register_graph("g1", g1)
             eng.register_graph("g2", g2)
-            eng.query("g1", 2, 0, 1, 6)
-            eng.query("g1", 2, 1, 1, 6)
+            eng.answer("g1", TCCSQuery(0, 1, 6, 2))
+            eng.answer("g1", TCCSQuery(1, 1, 6, 2))
             assert len(eng.cache) == 2
-            eng.query("g2", 2, 0, 1, 6)     # evicts ("g1", 2)
+            eng.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts ("g1", 2)
             assert eng.registry.evictions == 1
             # the dead handle's entries are gone; only g2's remains
             assert len(eng.cache) == 1
@@ -321,10 +325,14 @@ class TestLegacyEngineShims:
         with ServingEngine(EngineConfig(flush_ms=200.0)) as eng:
             eng.register_graph("g", g)
             # malformed windows answer empty, pre-v2 style (no raise)
-            assert eng.query("g", k, 0, 9, 3) == frozenset()
-            got = eng.query("g", k, 5, 2, 9)
-            assert got == frozenset(pecb.query(5, 2, 9))
-            futs = eng.submit_many("g", k, [(1, 1, 8), (2, 3, 7)])
+            with pytest.warns(DeprecationWarning, match="deprecated"):
+                assert eng.query("g", k, 0, 9, 3) == frozenset()
+            with pytest.warns(DeprecationWarning, match="deprecated"):
+                got = eng.query("g", k, 5, 2, 9)
+            assert got == frozenset(pecb._component_vertices(5, 2, 9))
+            with pytest.warns(DeprecationWarning, match="deprecated"):
+                futs = eng.submit_many("g", k, [(1, 1, 8), (2, 3, 7)])
             eng.flush()
             for (u, ts, te), f in zip([(1, 1, 8), (2, 3, 7)], futs):
-                assert f.result(timeout=30) == frozenset(pecb.query(u, ts, te))
+                assert f.result(timeout=30) == frozenset(
+                    pecb._component_vertices(u, ts, te))

@@ -1,0 +1,572 @@
+"""Sliding-window retention plane (DESIGN.md §10): prefix expiry, shrink
+refresh bit-identity, registry/engine trim integration, cache
+purge/rehome semantics, and the serving-stats bugfix-sweep regressions
+that rode along (cache eviction counter, batcher drain deadline race)."""
+
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.batch_query import refresh_device, to_device
+from repro.core.core_time import (edge_core_times, extend_core_times,
+                                  shrink_core_times)
+from repro.core.kcore import tccs_oracle
+from repro.core.pecb_index import build_pecb_index
+from repro.core.query_api import ResultMode, TCCSQuery
+from repro.core.streaming import extend_pecb_index, shrink_pecb_index
+from repro.core.temporal_graph import TemporalGraph, gen_temporal_graph
+from repro.serving import (EngineConfig, IndexRegistry, ResultCache,
+                           RetentionPolicy, ServingEngine)
+from repro.serving.batcher import MicroBatcher, Request
+
+PECB_FIELDS = ("node_u", "node_v", "node_ct", "node_edge", "node_live_from",
+               "node_live_to", "row_ptr", "ent_ts", "ent_left", "ent_right",
+               "ent_parent", "vrow_ptr", "vent_ts", "vent_node")
+TAB_FIELDS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+
+
+def assert_pecb_identical(a, b):
+    for f in PECB_FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert (a.n, a.m, a.t_max, a.k) == (b.n, b.m, b.t_max, b.k)
+    assert a.versions == b.versions
+
+
+def assert_tab_identical(a, b):
+    for f in TAB_FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+# ----------------------------------------------------------------------
+# TemporalGraph.expire_before / retain_last
+# ----------------------------------------------------------------------
+
+class TestExpire:
+    def test_prefix_expiry_shifts_and_renumbers(self):
+        g = gen_temporal_graph(n=30, m=240, t_max=16, seed=1)
+        t_cut = 7
+        g2 = g.expire_before(t_cut)
+        cut = int(np.searchsorted(g.t, t_cut, side="left"))
+        assert g2.m == g.m - cut
+        assert g2.t_max == g.t_max - (t_cut - 1)
+        assert int(g2.t.min()) == 1 or g2.m == 0
+        assert np.array_equal(g2.src, g.src[cut:])
+        assert np.array_equal(g2.dst, g.dst[cut:])
+        assert np.array_equal(g2.t, g.t[cut:] - (t_cut - 1))
+
+    def test_noop_and_all_expired(self):
+        g = gen_temporal_graph(n=20, m=100, t_max=10, seed=2)
+        assert g.expire_before(1) is g
+        assert g.expire_before(0) is g
+        assert g.retain_last(g.t_max) is g
+        assert g.retain_last(g.t_max + 3) is g
+        ge = g.expire_before(g.t_max + 1)
+        assert ge.m == 0 and ge.t_max == 0 and ge.n == g.n
+        with pytest.raises(ValueError, match="positive"):
+            g.retain_last(0)
+
+    def test_retain_last_is_expire_before(self):
+        g = gen_temporal_graph(n=20, m=150, t_max=12, seed=3)
+        w = 5
+        g2 = g.retain_last(w)
+        g3 = g.expire_before(g.t_max - w + 1)
+        assert np.array_equal(g2.t, g3.t) and g2.t_max == w
+
+    def test_shift_applies_even_below_min_timestamp(self):
+        # a cut below the smallest timestamp still contracts the timeline
+        g = TemporalGraph.from_edges(5, [(0, 1, 5), (1, 2, 6), (2, 3, 6)])
+        g2 = g.expire_before(3)
+        assert g2.m == g.m and g2.t_max == 4
+        assert np.array_equal(g2.t, g.t - 2)
+
+    def test_extend_roundtrip_after_expiry(self):
+        g = gen_temporal_graph(n=25, m=200, t_max=14, seed=4)
+        g2 = g.expire_before(6)
+        g3 = g2.extend([(0, 1, g2.t_max + 1), (2, 3, g2.t_max + 2)])
+        assert g3.t_max == g2.t_max + 2 and g3.m == g2.m + 2
+
+
+# ----------------------------------------------------------------------
+# shrink == cold rebuild on the truncated edge list, bit-identically
+# ----------------------------------------------------------------------
+
+class TestShrink:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    @pytest.mark.parametrize("k", [2, 3])
+    @pytest.mark.parametrize("frac", [0.25, 0.6, 0.9])
+    def test_bit_identical_to_cold(self, seed, k, frac):
+        g = gen_temporal_graph(n=30, m=260, t_max=15, seed=seed)
+        t_cut = max(2, int(g.t_max * frac))
+        tab0 = edge_core_times(g, k)
+        idx0 = build_pecb_index(g, k, tab0)
+        g2 = g.expire_before(t_cut)
+        tab2 = shrink_core_times(g2, k, tab0)
+        tab_cold = edge_core_times(g2, k)
+        assert_tab_identical(tab2, tab_cold)
+        assert_pecb_identical(shrink_pecb_index(g2, k, tab2, idx0),
+                              build_pecb_index(g2, k, tab_cold))
+
+    def test_all_expired_yields_empty_index(self):
+        g = gen_temporal_graph(n=20, m=150, t_max=10, seed=11)
+        tab0 = edge_core_times(g, 2)
+        idx0 = build_pecb_index(g, 2, tab0)
+        ge = g.expire_before(g.t_max + 1)
+        tab2 = shrink_core_times(ge, 2, tab0)
+        assert tab2.num_versions == 0
+        idx2 = shrink_pecb_index(ge, 2, tab2, idx0)
+        assert idx2.num_nodes == 0
+        assert_pecb_identical(idx2, build_pecb_index(ge, 2))
+
+    def test_interleaved_extend_and_shrink_epochs(self):
+        """The full epoch lifecycle: grow, trim, grow, trim — every hop
+        bit-identical to a cold build of the current retained window."""
+        full = gen_temporal_graph(n=35, m=700, t_max=40, seed=7)
+        k, window = 3, 12
+        cur, _ = full.split_at(window)
+        tab = edge_core_times(cur, k)
+        idx = build_pecb_index(cur, k, tab)
+        offset, t_abs = 0, window
+        hops = 0
+        while t_abs < full.t_max:
+            t_hi = min(t_abs + 9, full.t_max)
+            lo = int(np.searchsorted(full.t, t_abs, side="right"))
+            hi = int(np.searchsorted(full.t, t_hi, side="right"))
+            chunk = [(int(u), int(v), int(t) - offset) for u, v, t in
+                     zip(full.src[lo:hi], full.dst[lo:hi], full.t[lo:hi])]
+            cur = cur.extend(chunk)
+            tab = extend_core_times(cur, k, tab)
+            idx = extend_pecb_index(cur, k, tab, idx)
+            t_abs = t_hi
+            g2 = cur.retain_last(window)
+            if g2 is not cur:
+                tab = shrink_core_times(g2, k, tab)
+                idx = shrink_pecb_index(g2, k, tab, idx)
+                offset += cur.t_max - g2.t_max
+                cur = g2
+                hops += 1
+        assert hops >= 2
+        tab_cold = edge_core_times(cur, k)
+        assert_tab_identical(tab, tab_cold)
+        assert_pecb_identical(idx, build_pecb_index(cur, k, tab_cold))
+
+    def test_mismatched_inputs_raise(self):
+        g = gen_temporal_graph(n=30, m=220, t_max=12, seed=12)
+        tab0 = edge_core_times(g, 2)
+        idx0 = build_pecb_index(g, 2, tab0)
+        g2 = g.expire_before(5)
+        tab2 = shrink_core_times(g2, 2, tab0)
+        with pytest.raises(ValueError, match="k="):
+            shrink_pecb_index(g2, 3, tab2, idx0)
+        with pytest.raises(ValueError, match="core-time table"):
+            shrink_pecb_index(g2, 2, tab0, idx0)
+        with pytest.raises(ValueError, match="supergraph"):
+            shrink_core_times(g, 2, tab2)   # shrink cannot go backwards
+        # a table of a *different* graph must be refused, not absorbed
+        g_other = gen_temporal_graph(n=30, m=220, t_max=12, seed=99)
+        tab_other = edge_core_times(g_other, 2)
+        idx_other = build_pecb_index(g_other, 2, tab_other)
+        with pytest.raises(ValueError):
+            shrink_pecb_index(g2, 2, tab2, idx_other)
+
+    def test_shrunk_answers_match_oracle(self):
+        g = gen_temporal_graph(n=30, m=300, t_max=14, seed=13)
+        k, t_cut = 2, 6
+        tab0 = edge_core_times(g, k)
+        idx0 = build_pecb_index(g, k, tab0)
+        g2 = g.expire_before(t_cut)
+        idx2 = shrink_pecb_index(g2, k, shrink_core_times(g2, k, tab0), idx0)
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            u = int(rng.integers(0, g2.n))
+            ts = int(rng.integers(1, g2.t_max + 1))
+            te = int(rng.integers(ts, g2.t_max + 1))
+            got = idx2.answer(TCCSQuery(u, ts, te, k)).vertices
+            assert got == frozenset(tccs_oracle(g2, k, u, ts, te))
+
+    def test_device_mirror_shrink_is_exact_and_frees_bytes(self):
+        from repro.core.batch_query import _ARRAY_FIELDS, _META_FIELDS
+        g = gen_temporal_graph(n=30, m=260, t_max=14, seed=21)
+        tab0 = edge_core_times(g, 2)
+        idx0 = build_pecb_index(g, 2, tab0)
+        dix0 = to_device(idx0)
+        g2 = g.expire_before(8)
+        idx2 = shrink_pecb_index(g2, 2, shrink_core_times(g2, 2, tab0), idx0)
+        dix2, stats = refresh_device(idx0, dix0, idx2)
+        fresh = to_device(idx2)
+        for f in _ARRAY_FIELDS:
+            assert np.array_equal(np.asarray(getattr(dix2, f)),
+                                  np.asarray(getattr(fresh, f))), f
+        for f in _META_FIELDS:
+            assert getattr(dix2, f) == getattr(fresh, f), f
+        assert stats["freed_bytes"] > 0
+
+
+# ----------------------------------------------------------------------
+# registry retain + engine retention
+# ----------------------------------------------------------------------
+
+class TestRegistryRetain:
+    def _graph(self, seed=31):
+        return gen_temporal_graph(n=40, m=420, t_max=18, seed=seed)
+
+    def test_retain_shrinks_and_swaps_atomically(self):
+        g = self._graph()
+        reg = IndexRegistry()
+        try:
+            reg.register_graph("feed", g)
+            h0 = reg.get("feed", 2)
+            assert h0.epoch == 0
+            futs = reg.retain("feed", 7)
+            assert set(futs) == {("feed", 2)}
+            h1 = futs[("feed", 2)].result(timeout=60)
+            g2 = g.expire_before(7)
+            assert h1.epoch == 1 and h1.graph.t_max == g2.t_max
+            assert reg.get_nowait("feed", 2, start_build=False) is h1
+            assert_pecb_identical(h1.pecb, build_pecb_index(g2, 2))
+            assert reg.stats()["retentions"] == 1
+            assert reg.stats()["epochs"] == {"feed": 1}
+            # old handle still answers (old epoch pinned for in-flight use)
+            q = TCCSQuery(3, 8, g.t_max, 2)
+            assert h0.pecb.answer(q).vertices == h1.pecb.answer(
+                TCCSQuery(3, 2, g2.t_max, 2)).vertices
+        finally:
+            reg.close()
+
+    def test_retain_noop_and_without_resident_index(self):
+        g = self._graph(32)
+        reg = IndexRegistry()
+        try:
+            reg.register_graph("feed", g)
+            assert reg.retain("feed", 1) == {}      # nothing expires
+            assert reg.retain("feed", 5) == {}      # nothing resident
+            h = reg.get("feed", 2)                  # cold build: new epoch
+            assert h.epoch == 1
+            assert h.graph.t_max == g.expire_before(5).t_max
+        finally:
+            reg.close()
+
+    def test_retain_then_ingest_chain_grows_from_trimmed_handle(self):
+        """retain + extend scheduled back-to-back without waiting: the
+        refresh job captures the pre-trim handle at schedule time, but by
+        run time the FIFO shrink has swapped in the trimmed handle — the
+        refresh must grow from *that* (regression: it extended the
+        captured pre-trim graph and raised)."""
+        g = self._graph(34)
+        reg = IndexRegistry()
+        try:
+            reg.register_graph("feed", g)
+            reg.get("feed", 2)
+            g2 = g.expire_before(9)
+            f1 = reg.retain("feed", 9)
+            f2 = reg.extend_graph("feed", [(0, 1, g2.t_max + 1)])
+            for f in list(f1.values()) + list(f2.values()):
+                f.result(timeout=120)
+            h = reg.get_nowait("feed", 2, start_build=False)
+            expected = g2.extend([(0, 1, g2.t_max + 1)])
+            assert h is not None and h.epoch == 2
+            assert h.graph.t_max == expected.t_max
+            assert_pecb_identical(h.pecb, build_pecb_index(expected, 2))
+        finally:
+            reg.close()
+
+    def test_ingest_then_retain_chain_lands_in_order(self):
+        """extend + retain scheduled back-to-back: the FIFO worker must run
+        the suffix refresh first, then shrink the *refreshed* handle."""
+        g = self._graph(33)
+        g0, suffix = g.split_at(12)
+        suffix = [tuple(e) for e in suffix.tolist()]
+        reg = IndexRegistry()
+        try:
+            reg.register_graph("feed", g0)
+            reg.get("feed", 2)
+            f1 = reg.extend_graph("feed", suffix)
+            f2 = reg.retain("feed", 9)
+            for f in list(f1.values()) + list(f2.values()):
+                f.result(timeout=120)
+            h = reg.get_nowait("feed", 2, start_build=False)
+            assert h is not None and h.epoch == 2
+            g2 = g.expire_before(9)
+            assert h.graph.t_max == g2.t_max
+            assert_pecb_identical(h.pecb, build_pecb_index(g2, 2))
+        finally:
+            reg.close()
+
+
+class TestEngineRetention:
+    def _graph(self, seed=41):
+        return gen_temporal_graph(n=40, m=420, t_max=18, seed=seed)
+
+    def test_cache_purge_and_rehome_on_trim(self):
+        g = self._graph()
+        t_cut = 7
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("feed", g)
+            eng.registry.get("feed", 2)
+            q_dead = TCCSQuery(3, 1, 5, 2)            # touches the prefix
+            q_live = TCCSQuery(3, 9, 14, 2)           # survives, rehomes
+            q_edge = TCCSQuery(3, 9, 14, 2, ResultMode.EDGES)  # dropped
+            eng.answer("feed", q_dead)
+            r_live = eng.answer("feed", q_live)
+            eng.answer("feed", q_edge)
+            eng.retain("feed", t_cut, wait=True)
+            shift = t_cut - 1
+            hit = eng.answer("feed", TCCSQuery(3, 9 - shift, 14 - shift, 2))
+            assert hit.provenance.route == "cache"
+            assert hit.vertices == r_live.vertices
+            # the rehomed result's canonical spec is in the new timeline
+            assert (hit.query.ts, hit.query.te) == (9 - shift, 14 - shift)
+            # expired-prefix window: gone from the cache, recomputed exact
+            g2 = g.expire_before(t_cut)
+            res = eng.answer("feed", TCCSQuery(3, 1, 2, 2))
+            assert res.provenance.route != "cache"
+            assert res.vertices == frozenset(tccs_oracle(g2, 2, 3, 1, 2))
+            # EDGES payload embeds old timestamps: dropped, not rehomed
+            re2 = eng.answer(
+                "feed", TCCSQuery(3, 9 - shift, 14 - shift, 2,
+                                  ResultMode.EDGES))
+            assert re2.provenance.route != "cache"
+            st = eng.cache.stats()
+            assert st["rehomes"] >= 1 and st["purges"] >= 2
+
+    def test_post_trim_queries_match_oracle(self):
+        g = self._graph(42)
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("feed", g)
+            eng.registry.get("feed", 2)
+            eng.retain("feed", 8, wait=True)
+            g2 = g.expire_before(8)
+            rng = np.random.default_rng(3)
+            for _ in range(20):
+                u = int(rng.integers(0, g2.n))
+                ts = int(rng.integers(1, g2.t_max + 1))
+                te = int(rng.integers(ts, g2.t_max + 1))
+                res = eng.answer("feed", TCCSQuery(u, ts, te, 2))
+                assert res.vertices == frozenset(
+                    tccs_oracle(g2, 2, u, ts, te)), (u, ts, te)
+
+    def test_queries_answer_throughout_trim(self):
+        g = self._graph(43)
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("feed", g)
+            eng.registry.get("feed", 2)
+            futs = eng.retain("feed", 9)
+            trim_fut = futs[("feed", 2)]
+            answered = 0
+            while not trim_fut.done() or answered < 32:
+                res = eng.answer("feed", TCCSQuery(answered % g.n, 1, 5, 2))
+                assert res is not None
+                answered += 1
+                if answered >= 256:
+                    break
+            trim_fut.result(timeout=60)
+            assert answered >= 32
+
+    def test_retention_policy_auto_trims_on_ingest(self):
+        g = self._graph(44)
+        g0, suffix = g.split_at(12)
+        suffix = [tuple(e) for e in suffix.tolist()]
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("feed", g0)
+            eng.registry.get("feed", 2)
+            eng.set_retention("feed", RetentionPolicy(window=10, slack=2))
+            assert eng.retention_policy("feed").window == 10
+            eng.ingest("feed", suffix, wait=True)    # 18 > 12: trims to 10
+            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            assert h.graph.t_max == 10
+            assert h.epoch == 2                      # extend then retain
+            gt = g.expire_before(g.t_max - 10 + 1)
+            assert_pecb_identical(h.pecb, build_pecb_index(gt, 2))
+            assert eng.stats()["engine"]["counters"]["auto_trims"] == 1
+            # within slack: the next tiny ingest must NOT trim again
+            eng.ingest("feed", [(0, 1, h.graph.t_max + 1)], wait=True)
+            h2 = eng.registry.get_nowait("feed", 2, start_build=False)
+            assert h2.graph.t_max == 11              # grew, under 10 + 2
+            assert eng.stats()["engine"]["counters"]["auto_trims"] == 1
+
+    def test_policy_every_and_unset(self):
+        g = self._graph(45)
+        g0, _ = g.split_at(6)
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("feed", g0)
+            eng.registry.get("feed", 2)
+            eng.set_retention("feed", RetentionPolicy(window=6, every=2))
+            # first ingest: tick 1 of 2 -> no trim despite overflow
+            eng.ingest("feed", [(0, 1, 7)], wait=True)
+            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            assert h.graph.t_max == 7
+            # second ingest: tick 2 -> trims back to the window
+            eng.ingest("feed", [(1, 2, 8)], wait=True)
+            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            assert h.graph.t_max == 6
+            eng.set_retention("feed", None)
+            assert eng.retention_policy("feed") is None
+            eng.ingest("feed", [(2, 3, h.graph.t_max + 4)], wait=True)
+            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            assert h.graph.t_max == 10               # no policy: no trim
+        with pytest.raises(ValueError, match="window"):
+            RetentionPolicy(window=0)
+
+    def test_rolling_cycles_keep_memory_bounded(self):
+        """>=5 append+expire cycles: the retained timeline and the dense
+        table stay bounded and each swapped index is bit-identical to a
+        cold build of its retained window."""
+        full = gen_temporal_graph(n=35, m=900, t_max=45, seed=46)
+        window, k = 10, 2
+        g0, _ = full.split_at(window)
+        with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
+            eng.register_graph("roll", g0)
+            eng.registry.get("roll", k)
+            eng.set_retention("roll", RetentionPolicy(window=window))
+            offset, t_abs, cycles = 0, window, 0
+            while t_abs < full.t_max:
+                t_hi = min(t_abs + 7, full.t_max)
+                lo = int(np.searchsorted(full.t, t_abs, side="right"))
+                hi = int(np.searchsorted(full.t, t_hi, side="right"))
+                chunk = [(int(u), int(v), int(t) - offset) for u, v, t in
+                         zip(full.src[lo:hi], full.dst[lo:hi],
+                             full.t[lo:hi])]
+                eng.ingest("roll", chunk, wait=True)
+                t_abs = t_hi
+                h = eng.registry.get_nowait("roll", k, start_build=False)
+                assert h.graph.t_max <= window
+                assert h.tab.vertex_ct.nbytes <= 4 * full.n * (window + 1)
+                offset = t_abs - h.graph.t_max
+                cycles += 1
+            assert cycles >= 5
+            expected = full.retain_last(window)
+            assert_pecb_identical(h.pecb, build_pecb_index(expected, k))
+
+
+# ----------------------------------------------------------------------
+# satellite regressions: cache + batcher
+# ----------------------------------------------------------------------
+
+class TestCacheStats:
+    def test_capacity_evictions_increment_counter(self):
+        """Regression: filling past capacity must report every LRU
+        eviction in stats() — an under-reporting counter makes the hit
+        rate and working-set sizing look healthier than they are."""
+        c = ResultCache(capacity=3)
+        for i in range(8):
+            c.put((("w", 2), (i, 1, 2, 2, "vertices")), frozenset([i]))
+        assert len(c) == 3
+        assert c.evictions == 5
+        assert c.stats()["evictions"] == 5
+        # updating an existing key neither evicts nor double-counts
+        c.put((("w", 2), (7, 1, 2, 2, "vertices")), frozenset())
+        assert c.evictions == 5 and len(c) == 3
+
+    def test_purge_window_suffix_semantics_unchanged(self):
+        c = ResultCache()
+        c.put((("w", 2), (0, 1, 4, 2, "vertices")), "old")
+        c.put((("w", 2), (0, 5, 9, 2, "vertices")), "touch")
+        c.put((("x", 2), (0, 5, 9, 2, "vertices")), "foreign")
+        assert c.purge_window(("w", 2), 5, 10) == 1
+        assert c.get((("w", 2), (0, 1, 4, 2, "vertices"))) == "old"
+        assert c.get((("x", 2), (0, 5, 9, 2, "vertices"))) == "foreign"
+        assert c.rehomes == 0
+
+    def test_purge_window_shift_rehomes_survivors(self):
+        c = ResultCache()
+        key = ("w", 2)
+        c.put((key, (0, 1, 4, 2, "vertices")), "dead")      # touches prefix
+        c.put((key, (0, 7, 9, 2, "vertices")), frozenset([1]))
+        c.put((key, (0, 7, 9, 2, "edges")), "payload")      # dropped
+        c.put((key, (0, 1, 0, 2, "vertices")), "empty")     # marker: as-is
+        c.put((("x", 3), (0, 7, 9, 3, "vertices")), "foreign")
+        purged = c.purge_window(key, 1, 5, shift=5)
+        assert purged == 2                                  # dead + edges
+        assert c.get((key, (0, 1, 4, 2, "vertices"))) is None   # purged
+        assert c.get((key, (0, 7, 9, 2, "vertices"))) is None   # rehomed away
+        assert c.get((key, (0, 2, 4, 2, "edges"))) is None      # dropped
+        assert c.get((key, (0, 1, 0, 2, "vertices"))) == "empty"
+        assert c.get((key, (0, 7 - 5, 9 - 5, 2, "vertices"))) == frozenset([1])
+        assert c.get((("x", 3), (0, 7, 9, 3, "vertices"))) == "foreign"
+        assert c.rehomes == 1
+
+    def test_epoch_floor_gates_pre_trim_fills(self):
+        """A fill carrying an epoch below the index key's retention floor
+        is dropped atomically inside the put lock — the close-out for a
+        batch/sweep bound to a pre-trim handle finishing after the trim's
+        purge+rehome (DESIGN.md §10.3)."""
+        c = ResultCache()
+        key = ("w", 2)
+        c.put((key, (0, 1, 4, 2, "vertices")), "pre", epoch=0)   # no floor
+        c.raise_floor(key, 2)
+        c.put((key, (0, 2, 5, 2, "vertices")), "stale", epoch=1)
+        assert c.get((key, (0, 2, 5, 2, "vertices"))) is None
+        assert c.gated == 1 and c.stats()["gated"] == 1
+        c.put((key, (0, 2, 5, 2, "vertices")), "fresh", epoch=2)
+        assert c.get((key, (0, 2, 5, 2, "vertices"))) == "fresh"
+        # floors only rise; other index keys and epoch-less puts unaffected
+        c.raise_floor(key, 1)
+        c.put((key, (0, 3, 6, 2, "vertices")), "still-stale", epoch=1)
+        assert c.get((key, (0, 3, 6, 2, "vertices"))) is None
+        c.put((("x", 3), (0, 2, 5, 3, "vertices")), "other", epoch=0)
+        assert c.get((("x", 3), (0, 2, 5, 3, "vertices"))) == "other"
+        c.put("plain-key", "no-epoch")
+        assert c.get("plain-key") == "no-epoch"
+
+    def test_purge_window_shift_rewrites_result_query(self):
+        import dataclasses as dc
+        from repro.core.query_api import Provenance, TCCSResult
+        c = ResultCache()
+        key = ("w", 2)
+        q = TCCSQuery(0, 6, 9, 2)
+        res = TCCSResult(q, frozenset([1, 2]), 2,
+                         provenance=Provenance(route="host"))
+        c.put((key, q.cache_key()), res)
+        c.purge_window(key, 1, 5, shift=5)
+        hit = c.get((key, (0, 1, 4, 2, "vertices")))
+        assert hit is not None
+        assert (hit.query.ts, hit.query.te) == (1, 4)
+        assert hit.vertices == res.vertices
+
+
+class TestBatcherDrainDeadline:
+    def test_drain_completes_when_work_finishes_before_deadline(self):
+        done = []
+        b = MicroBatcher(lambda reqs: [done.append(1) or None
+                                       for _ in reqs],
+                        max_batch=8, flush_ms=1.0)
+        try:
+            b.submit(Request(0, 1, 1, Future(), t_submit=time.perf_counter()))
+            b.drain(timeout=10.0)
+            assert done
+        finally:
+            b.close()
+
+    def test_drain_deadline_race_returns_instead_of_raising(self):
+        """Regression: a deadline expiring in the same iteration the queue
+        empties must drain cleanly — the predicate is re-checked before
+        TimeoutError. Driven by an execute_fn that finishes right as the
+        drain deadline lands."""
+        release = []
+
+        def execute(reqs):
+            while not release:
+                time.sleep(0.005)
+            return [None] * len(reqs)
+
+        b = MicroBatcher(execute, max_batch=8, flush_ms=0.5)
+        try:
+            fut = b.submit(Request(0, 1, 1, Future(),
+                                   t_submit=time.perf_counter()))
+            # expire the deadline while the batch is genuinely in flight:
+            # a true timeout must still raise
+            with pytest.raises(TimeoutError):
+                b.drain(timeout=0.05)
+            release.append(1)
+            fut.result(timeout=5)
+            # after a TimeoutError the batcher must stay fully usable and
+            # an already-elapsed deadline with an idle queue must not raise
+            b.drain(timeout=0.0)
+            b.drain(timeout=-1.0)
+            fut2 = b.submit(Request(0, 1, 1, Future(),
+                                    t_submit=time.perf_counter()))
+            b.drain(timeout=10.0)
+            assert fut2.done()
+        finally:
+            b.close()

@@ -15,8 +15,24 @@ import pytest
 from repro.core.temporal_graph import gen_temporal_graph
 from repro.serving import (
     EngineConfig, IndexRegistry, LatencyHistogram, MicroBatcher, Request,
-    ServingEngine, ShardedExecutor, bucket_size, pad_queries,
+    ServingEngine, ShardedExecutor, TCCSQuery, bucket_size, pad_queries,
 )
+from repro.core.query_api import EMPTY_WINDOW
+
+
+def lenient_spec(u, ts, te, k):
+    """v2 spec with the legacy streams' lenient window semantics: a
+    malformed window (ts > te) folds onto the canonical empty marker
+    instead of raising at validation."""
+    if ts > te:
+        ts, te = EMPTY_WINDOW
+    return TCCSQuery(u, ts, te, k)
+
+
+def alg1(pecb, u, ts, te):
+    """Algorithm-1 reference through the non-deprecated component
+    routine (the deprecated .query shim wrapped exactly this)."""
+    return frozenset(pecb._component_vertices(u, ts, te))
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -40,9 +56,11 @@ def random_stream(g, n_q, rng, oob_frac=0.2):
 def run_engine(eng, workload, k, queries, chunk=64):
     futs = []
     for i in range(0, len(queries), chunk):
-        futs += eng.submit_many(workload, k, queries[i:i + chunk])
+        futs += eng.submit_specs(
+            workload,
+            [lenient_spec(u, ts, te, k) for (u, ts, te) in queries[i:i + chunk]])
     eng.flush()
-    return [f.result(timeout=60) for f in futs]
+    return [f.result(timeout=60).vertices for f in futs]
 
 
 class TestEngineExactness:
@@ -60,7 +78,7 @@ class TestEngineExactness:
             assert eng.metrics.counter("device_batches") > 0
             assert eng.metrics.counter("host_batches") == 0
         for (u, ts, te), res in zip(qs, got):
-            assert res == frozenset(h.pecb.query(u, ts, te)), (u, ts, te)
+            assert res == alg1(h.pecb, u, ts, te), (u, ts, te)
 
     def test_host_route_matches_alg1(self):
         rng = np.random.default_rng(3)
@@ -75,7 +93,7 @@ class TestEngineExactness:
             assert eng.metrics.counter("host_batches") > 0
             assert eng.metrics.counter("device_batches") == 0
         for (u, ts, te), res in zip(qs, got):
-            assert res == frozenset(h.pecb.query(u, ts, te))
+            assert res == alg1(h.pecb, u, ts, te)
 
     def test_empty_forest_returns_empty(self):
         g = gen_temporal_graph(n=20, m=60, t_max=8, seed=9)
@@ -101,7 +119,7 @@ class TestEngineExactness:
                 got = run_engine(eng, "g", k, qs)
                 h = eng.registry.get("g", k)
                 for (u, ts, te), res in zip(qs, got):
-                    assert res == frozenset(h.pecb.query(u, ts, te)), (k, u, ts, te)
+                    assert res == alg1(h.pecb, u, ts, te), (k, u, ts, te)
 
 
 class TestCache:
@@ -114,13 +132,14 @@ class TestCache:
             qs = [(u, 2, 9) for u in range(10)]
             first = run_engine(eng, "g", 2, qs)
             assert eng.metrics.counter("cache_hits") == 0
-            futs = eng.submit_many("g", 2, qs)   # all hits
+            futs = eng.submit_specs(
+                "g", [TCCSQuery(u, ts, te, 2) for (u, ts, te) in qs])  # all hits
             assert all(f.done() for f in futs)   # resolved on submit path
-            second = [f.result() for f in futs]
+            second = [f.result().vertices for f in futs]
             assert first == second
             assert eng.metrics.counter("cache_hits") == len(qs)
             for (u, ts, te), res in zip(qs, second):
-                assert res == frozenset(h.pecb.query(u, ts, te))
+                assert res == alg1(h.pecb, u, ts, te)
 
     def test_cache_lru_eviction(self):
         from repro.serving import ResultCache
@@ -170,7 +189,8 @@ class TestBucketing:
 
             def wave(n_q):
                 qs = random_stream(g, n_q, rng, oob_frac=0.0)
-                futs = eng.submit_many("g", 2, qs)
+                futs = eng.submit_specs(
+                    "g", [TCCSQuery(u, ts, te, 2) for (u, ts, te) in qs])
                 eng.flush()
                 [f.result(timeout=60) for f in futs]
                 eng.drain()
@@ -193,7 +213,7 @@ class TestBucketing:
             eng.warmup("g", 2)                   # must not assert on 128 > 100
             got = run_engine(eng, "g", 2, [(0, 1, 9), (1, 2, 8)])
             h = eng.registry.get("g", 2)
-            assert got[0] == frozenset(h.pecb.query(0, 1, 9))
+            assert got[0] == alg1(h.pecb, 0, 1, 9)
 
     def test_warmup_precompiles_all_buckets(self):
         g = gen_temporal_graph(n=30, m=200, t_max=12, seed=34)
@@ -205,7 +225,9 @@ class TestBucketing:
             c0 = ShardedExecutor.compile_count()
             rng = np.random.default_rng(1)
             for n_q in (2, 7, 12, 20, 32):
-                futs = eng.submit_many("g", 2, random_stream(g, n_q, rng, 0.0))
+                futs = eng.submit_specs(
+                    "g", [TCCSQuery(u, ts, te, 2)
+                          for (u, ts, te) in random_stream(g, n_q, rng, 0.0)])
                 eng.flush()
                 [f.result(timeout=60) for f in futs]
                 eng.drain()
@@ -222,19 +244,21 @@ class TestPlannerRouting:
             eng.register_graph("g", g)
             h = eng.registry.get("g", 2)
             small = random_stream(g, 3, rng, 0.0)
-            futs = eng.submit_many("g", 2, small)
-            eng.flush(); res_small = [f.result(timeout=60) for f in futs]
+            futs = eng.submit_specs(
+                "g", [TCCSQuery(u, ts, te, 2) for (u, ts, te) in small])
+            eng.flush(); res_small = [f.result(timeout=60).vertices for f in futs]
             eng.drain()
             assert eng.metrics.counter("host_batches") == 1
             assert eng.metrics.counter("device_batches") == 0
             big = random_stream(g, 40, rng, 0.0)
-            futs = eng.submit_many("g", 2, big)
-            eng.flush(); res_big = [f.result(timeout=60) for f in futs]
+            futs = eng.submit_specs(
+                "g", [TCCSQuery(u, ts, te, 2) for (u, ts, te) in big])
+            eng.flush(); res_big = [f.result(timeout=60).vertices for f in futs]
             eng.drain()
             assert eng.metrics.counter("device_batches") == 1
             # both routes exact
             for (u, ts, te), r in zip(small + big, res_small + res_big):
-                assert r == frozenset(h.pecb.query(u, ts, te))
+                assert r == alg1(h.pecb, u, ts, te)
 
 
 class TestRegistry:
@@ -281,14 +305,15 @@ class TestRegistry:
         with ServingEngine(cfg) as eng:
             eng.register_graph("g1", g1)
             eng.register_graph("g2", g2)
-            eng.query("g1", 2, 0, 1, 6)
+            eng.answer("g1", TCCSQuery(0, 1, 6, 2))
             assert ("g1", 2) in eng._batchers
-            eng.query("g2", 2, 0, 1, 6)          # evicts ("g1", 2)
+            eng.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts ("g1", 2)
             assert ("g1", 2) not in eng._batchers
             assert ("g2", 2) in eng._batchers
             # re-query after eviction: rebuild + fresh batcher, exact answer
             h1 = eng.registry.get("g1", 2)
-            assert eng.query("g1", 2, 3, 1, 6) == frozenset(h1.pecb.query(3, 1, 6))
+            assert eng.answer("g1", TCCSQuery(3, 1, 6, 2)).vertices == \
+                alg1(h1.pecb, 3, 1, 6)
 
     def test_shared_registry_retires_batchers_in_every_engine(self):
         g1 = gen_temporal_graph(n=20, m=100, t_max=8, seed=1)
@@ -298,10 +323,10 @@ class TestRegistry:
         cfg = EngineConfig(flush_ms=100.0, cache_capacity=0)
         with ServingEngine(cfg, registry=reg) as a, \
              ServingEngine(cfg, registry=reg) as b:
-            a.query("g1", 2, 0, 1, 6)
-            b.query("g1", 2, 1, 1, 6)
+            a.answer("g1", TCCSQuery(0, 1, 6, 2))
+            b.answer("g1", TCCSQuery(1, 1, 6, 2))
             assert ("g1", 2) in a._batchers and ("g1", 2) in b._batchers
-            a.query("g2", 2, 0, 1, 6)        # evicts ("g1", 2)
+            a.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts ("g1", 2)
             assert ("g1", 2) not in a._batchers
             assert ("g1", 2) not in b._batchers   # B's listener fired too
 
@@ -387,7 +412,7 @@ class TestMetrics:
                                         cache_capacity=8)) as eng:
             eng.register_graph("g", g)
             run_engine(eng, "g", 2, [(1, 1, 5), (2, 1, 5)])
-            eng.submit("g", 2, 1, 1, 5).result(timeout=10)  # cache hit
+            eng.submit_spec("g", TCCSQuery(1, 1, 5, 2)).result(timeout=10)  # cache hit
             snap = eng.stats()
             lat = snap["engine"]["latency"]
             assert lat["e2e"]["count"] == 3
@@ -421,11 +446,14 @@ def test_engine_multi_device_sharded():
             rng = np.random.default_rng(0)
             qs = [(int(rng.integers(0, g.n)), int(rng.integers(1, g.t_max)),
                    int(rng.integers(1, g.t_max + 1))) for _ in range(48)]
-            futs = eng.submit_many("g", 2, qs)
+            from repro.serving import TCCSQuery
+            futs = eng.submit_specs(
+                "g", [TCCSQuery(u, ts, te, 2) if ts <= te
+                      else TCCSQuery(u, 1, 0, 2) for (u, ts, te) in qs])
             eng.flush()
-            got = [f.result(timeout=120) for f in futs]
+            got = [f.result(timeout=120).vertices for f in futs]
             for (u, ts, te), res in zip(qs, got):
-                assert res == frozenset(h.pecb.query(u, ts, te))
+                assert res == frozenset(h.pecb._component_vertices(u, ts, te))
         print("sharded engine ok")
     """)
     env = dict(os.environ)
@@ -531,13 +559,13 @@ class TestAsyncRegistry:
         cfg = EngineConfig(flush_ms=5.0)
         with ServingEngine(cfg, registry=reg) as eng:
             t0 = time.perf_counter()
-            fut = eng.submit("g", 2, 0, 1, 6)
+            fut = eng.submit_spec("g", TCCSQuery(0, 1, 6, 2))
             submitted_in = time.perf_counter() - t0
             assert submitted_in < 30            # returned while build blocked
             assert not fut.done()
             release.set()
-            want = frozenset(reg.get("g", 2).pecb.query(0, 1, 6))
-            assert fut.result(timeout=60) == want
+            want = alg1(reg.get("g", 2).pecb, 0, 1, 6)
+            assert fut.result(timeout=60).vertices == want
         reg.close()
 
     def test_engine_prefetch_warms_registry(self):

@@ -58,7 +58,7 @@ class TestPaperExamples:
     def test_example_4_14_query(self):
         g = paper_graph()
         idx = build_pecb_index(g, 2)
-        assert idx.query(1, 3, 5) == {0, 1, 2}       # v2, [3,5] -> {v1,v2,v3}
+        assert idx._component_vertices(1, 3, 5) == {0, 1, 2}  # v2, [3,5] -> {v1,v2,v3}
 
 
 class TestCoreTimes:
@@ -151,9 +151,9 @@ class TestQueries:
             ts = int(rng.integers(1, g.t_max + 1))
             te = int(rng.integers(ts, g.t_max + 1))
             want = tccs_oracle(g, k, u, ts, te)
-            assert pecb.query(u, ts, te) == want
-            assert ef.query(u, ts, te) == want
-            assert cm.query(u, ts, te) == want
+            assert pecb._component_vertices(u, ts, te) == want
+            assert ef._component_vertices(u, ts, te) == want
+            assert cm._component_vertices(u, ts, te) == want
 
     def test_batched_engine_matches_host(self):
         rng = np.random.default_rng(11)
@@ -163,7 +163,7 @@ class TestQueries:
               for _ in range(96)]
         got = batch_query_np(idx, qs)
         for (u, ts, te), res in zip(qs, got):
-            assert res == idx.query(u, ts, te)
+            assert res == idx._component_vertices(u, ts, te)
 
     def test_kmax_positive(self):
         g = gen_temporal_graph(n=60, m=600, t_max=30, seed=5)
@@ -260,7 +260,7 @@ class TestConstructionEngines:
         u = int(idx.node_u[0])
         with pytest.raises(ForestInvariantError):
             for ts in range(1, g.t_max + 1):
-                idx.query(u, ts, g.t_max)
+                idx._component_vertices(u, ts, g.t_max)
 
     def test_t_max_cached(self):
         g = gen_temporal_graph(n=10, m=40, t_max=6, seed=0)
