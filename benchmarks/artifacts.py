@@ -1,0 +1,213 @@
+"""Perf-trajectory artifacts: ``BENCH_<area>.json`` (DESIGN.md §11.7).
+
+Every ``benchmarks.run`` invocation distills each bench area's raw rows
+into one small, schema-stable JSON document that is committed alongside
+the code it measured. The point is the *trajectory*: two checkouts'
+``BENCH_engine.json`` diff cleanly, and a regression shows up in review
+as a changed number, not a vanished stdout line.
+
+Raw wall times are machine-dependent, so every document embeds a
+calibration factor: the best-of-N wall time of a fixed, seeded numpy
+workload (``calibrate``). Time metrics also carry
+``normalized = seconds / calib_s`` and throughput metrics
+``normalized = qps * calib_s`` — dimensionless "how many calibration
+units does this cost/deliver" numbers that are comparable across hosts
+to first order (same caveats as any single-number machine score).
+
+Schema (``SCHEMA_VERSION = 1``)::
+
+    {
+      "schema_version": 1,
+      "area": "engine",                  # one of AREAS
+      "fast": false,                     # --fast (CI smoke) run?
+      "machine": {"platform": ..., "cpu_count": ..., "python": ...,
+                  "jax": ..., "numpy": ..., "calib_s": ...},
+      "metrics": {name: {"value": v, "unit": u, "normalized": n|null}},
+      "tables":  {title: {"header": [...], "rows": [[...], ...]}}
+    }
+
+``validate_bench_artifact`` is the gate the test suite and the CI bench
+smoke run over every produced file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+AREAS = ("construction", "engine", "streaming", "retention", "sweep")
+
+#: units carrying a time dimension (normalized by dividing by calib_s)
+#: and their scale to seconds
+_TIME_UNITS = {"s": 1.0, "ms": 1e-3, "us": 1e-6}
+
+
+def calibrate(reps: int = 3) -> float:
+    """Best-of-``reps`` seconds for a fixed, seeded numpy workload —
+    the document's machine-speed yardstick. Deliberately mixed (matmul +
+    norm + reduction) so it tracks general FP throughput rather than one
+    BLAS corner; small enough to cost ~100ms on a laptop."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((384, 384))
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        b = a
+        for _ in range(8):
+            b = b @ a
+            b = b / np.linalg.norm(b)
+        float(b.sum())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def machine_info(calib_s: float | None = None) -> dict:
+    import jax
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count() or 1,
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "jax_devices": len(jax.devices()),
+        "calib_s": round(calibrate() if calib_s is None else calib_s, 6),
+    }
+
+
+def normalized(value: float, unit: str, calib_s: float):
+    """Machine-normalized form of a metric, or None for units that carry
+    no time dimension (bytes, counts, dimensionless ratios)."""
+    if unit in _TIME_UNITS:
+        return round(value * _TIME_UNITS[unit] / calib_s, 6)
+    if unit == "qps":
+        return round(value * calib_s, 6)
+    return None
+
+
+def bench_artifact(area: str, metrics: dict, tables: dict | None = None,
+                   machine: dict | None = None, fast: bool = False) -> dict:
+    """Build one area's document. ``metrics`` maps name -> (value, unit);
+    ``tables`` maps title -> (header, rows) for the raw bench rows."""
+    assert area in AREAS, area
+    machine = machine if machine is not None else machine_info()
+    calib_s = machine["calib_s"]
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "area": area,
+        "fast": bool(fast),
+        "machine": machine,
+        "metrics": {
+            name: {"value": _num(value), "unit": unit,
+                   "normalized": normalized(float(value), unit, calib_s)}
+            for name, (value, unit) in metrics.items()
+        },
+        "tables": {
+            title: {"header": list(header),
+                    "rows": [[_num(x) for x in row] for row in rows]}
+            for title, (header, rows) in (tables or {}).items()
+        },
+    }
+    validate_bench_artifact(doc)
+    return doc
+
+
+def _num(x):
+    """Scalars only — numpy collapses to python, floats round for diff
+    stability, everything else must already be str/int/bool."""
+    item = getattr(x, "item", None)
+    if callable(item):
+        x = x.item()
+    if isinstance(x, float):
+        return round(x, 6)
+    if isinstance(x, (int, str, bool)) or x is None:
+        return x
+    raise TypeError(f"non-scalar bench value {x!r}")
+
+
+def write_bench_json(out_dir: str, area: str, metrics: dict,
+                     tables: dict | None = None, machine: dict | None = None,
+                     fast: bool = False) -> str:
+    doc = bench_artifact(area, metrics, tables, machine, fast)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{area}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    return path
+
+
+def validate_bench_artifact(doc) -> None:
+    """Schema gate; raises ``ValueError`` on the first violation."""
+    if not isinstance(doc, dict):
+        raise ValueError("bench artifact must be a JSON object")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(f"schema_version must be {SCHEMA_VERSION}, "
+                         f"got {doc.get('schema_version')!r}")
+    if doc.get("area") not in AREAS:
+        raise ValueError(f"area must be one of {AREAS}, got {doc.get('area')!r}")
+    if not isinstance(doc.get("fast"), bool):
+        raise ValueError("'fast' must be a bool")
+    machine = doc.get("machine")
+    if not isinstance(machine, dict):
+        raise ValueError("'machine' must be an object")
+    calib = machine.get("calib_s")
+    if not isinstance(calib, (int, float)) or calib <= 0:
+        raise ValueError("machine.calib_s must be a positive number")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        raise ValueError("'metrics' must be a non-empty object")
+    for name, m in metrics.items():
+        if not isinstance(m, dict):
+            raise ValueError(f"metric {name!r} is not an object")
+        if not isinstance(m.get("value"), (int, float, str, bool)):
+            raise ValueError(f"metric {name!r} missing scalar 'value'")
+        if not isinstance(m.get("unit"), str):
+            raise ValueError(f"metric {name!r} missing string 'unit'")
+        norm = m.get("normalized")
+        if norm is not None and not isinstance(norm, (int, float)):
+            raise ValueError(f"metric {name!r} 'normalized' must be a "
+                             "number or null")
+    tables = doc.get("tables", {})
+    if not isinstance(tables, dict):
+        raise ValueError("'tables' must be an object")
+    for title, t in tables.items():
+        if (not isinstance(t, dict) or not isinstance(t.get("header"), list)
+                or not isinstance(t.get("rows"), list)):
+            raise ValueError(f"table {title!r} needs 'header' and 'rows' lists")
+        width = len(t["header"])
+        for row in t["rows"]:
+            if not isinstance(row, list) or len(row) != width:
+                raise ValueError(f"table {title!r} has a row not matching "
+                                 f"its {width}-column header")
+    # round-trippable end to end (numpy scalars would die here, not in CI)
+    json.loads(json.dumps(doc, allow_nan=False))
+
+
+def load_bench_json(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_bench_artifact(doc)
+    return doc
+
+
+def validate_bench_files(dirpath: str,
+                         require: tuple = AREAS) -> dict:
+    """Load + validate every ``BENCH_<area>.json`` under ``dirpath``;
+    raises if a required area's file is missing or invalid. Returns
+    {area: document}."""
+    docs = {}
+    for area in AREAS:
+        path = os.path.join(dirpath, f"BENCH_{area}.json")
+        if not os.path.exists(path):
+            if area in require:
+                raise FileNotFoundError(f"missing bench artifact {path}")
+            continue
+        docs[area] = load_bench_json(path)
+    return docs

@@ -186,6 +186,96 @@ def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
     return rows
 
 
+def bench_trace_overhead(name: str = "fb_like", n_q: int = 512,
+                         seed: int = 13, reps: int = 2,
+                         assert_overhead: bool = True):
+    """Tracing-overhead A/B (DESIGN.md §11 acceptance): replay the same
+    open-loop query stream through an untraced and a traced engine
+    sharing one warm registry (cache off so every query pays its real
+    path), best-of-``reps`` per arm.
+
+    Asserts on every run that >= 95% of completed queries carry the full
+    span chain (query -> queue -> route -> execute) and that the traced
+    arm's Chrome trace export validates; on full runs additionally
+    asserts traced p99 <= 1.05x untraced p99. Rows: one per arm,
+    ``[workload, k, arm, queries, qps, p99_ms, chain_coverage, spans,
+    dropped]``; the traced arm's export lands in
+    ``results/bench/trace_engine.json``.
+    """
+    from collections import defaultdict
+
+    from repro.obs.export import validate_chrome_trace
+    from .common import RESULTS_DIR
+
+    g = workload(name)
+    k = default_k(name)
+    registry = IndexRegistry(capacity=4)
+    registry.register_graph(name, g)
+    queries = random_queries(g, n_q, seed=seed)
+
+    def run_arm(trace: bool):
+        best = None
+        for _ in range(max(1, reps)):
+            cfg = EngineConfig(max_batch=256, flush_ms=2.0,
+                               cache_capacity=0, trace=trace)
+            with ServingEngine(cfg, registry=registry) as eng:
+                eng.warmup(name, k)
+                t0 = time.perf_counter()
+                futures = []
+                for i in range(0, len(queries), cfg.max_batch):
+                    futures += eng.submit_specs(
+                        name, [TCCSQuery(u, ts, te, k) for (u, ts, te)
+                               in queries[i:i + cfg.max_batch]])
+                eng.flush()
+                results = [f.result(timeout=300) for f in futures]
+                dt = time.perf_counter() - t0
+                p99 = eng.stats()["engine"]["latency"]["e2e"]["p99_ms"]
+                coverage, spans, dropped, doc = 0.0, 0, 0, None
+                if trace:
+                    by_trace = defaultdict(set)
+                    for s in eng.tracer.spans():
+                        by_trace[s.trace_id].add(s.name)
+                    full = sum(
+                        1 for r in results
+                        if {"query", "queue", "route", "execute"}
+                        <= by_trace.get(r.provenance.trace_id, set()))
+                    coverage = full / len(results)
+                    spans = len(eng.tracer)
+                    dropped = eng.tracer.dropped
+                    import os
+                    os.makedirs(RESULTS_DIR, exist_ok=True)
+                    doc = eng.export_trace(
+                        os.path.join(RESULTS_DIR, "trace_engine.json"),
+                        extra={"bench": "trace_overhead", "workload": name})
+                arm = (dt, p99, coverage, spans, dropped, doc)
+                if best is None or arm[1] < best[1]:
+                    best = arm
+        return best
+
+    dt_off, p99_off, _, _, _, _ = run_arm(False)
+    dt_on, p99_on, coverage, spans, dropped, doc = run_arm(True)
+    validate_chrome_trace(doc)
+    assert coverage >= 0.95, f"span chain coverage {coverage:.3f} < 0.95"
+    ratio = p99_on / p99_off if p99_off > 0 else 1.0
+    if assert_overhead:
+        assert ratio <= 1.05, (
+            f"tracing p99 overhead {ratio:.3f}x exceeds 1.05x "
+            f"(off={p99_off:.3f}ms on={p99_on:.3f}ms)")
+    print(f"[trace-overhead] {name} k={k}: p99 off={p99_off:.3f}ms "
+          f"on={p99_on:.3f}ms ({ratio:.3f}x), chain coverage "
+          f"{coverage:.1%}, {spans} spans ({dropped} dropped)")
+    rows = [
+        [name, k, "untraced", n_q, round(n_q / dt_off, 1),
+         round(p99_off, 3), "", 0, 0],
+        [name, k, "traced", n_q, round(n_q / dt_on, 1),
+         round(p99_on, 3), round(coverage, 4), spans, dropped],
+    ]
+    write_csv("trace_overhead.csv",
+              ["workload", "k", "arm", "queries", "qps", "p99_ms",
+               "chain_coverage", "spans", "dropped"], rows)
+    return rows
+
+
 def bench_kernels():
     """Per-kernel micro: interpret-mode Pallas vs jnp reference (CPU)."""
     from repro.kernels import ops, ref

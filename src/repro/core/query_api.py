@@ -205,7 +205,13 @@ class EdgeSet:
 
 @dataclasses.dataclass(frozen=True)
 class Provenance:
-    """Where and how a result was computed (per-query observability)."""
+    """Where and how a result was computed (per-query observability).
+
+    ``trace_id``/``span_id`` link the result back to its query-lifecycle
+    span tree in the engine's tracer (DESIGN.md §11.3): any
+    :class:`TCCSResult` can be joined against the exported Chrome trace.
+    Excluded from equality — two runs of the same query are the *same
+    answer* with different traces."""
 
     route: str                       # host | device | sweep | cache | trivial
     backend: str = ""                # pecb | ef | ctmsf | pecb-device | ...
@@ -213,6 +219,8 @@ class Provenance:
     batch_size: int = 1
     bucket: int | None = None        # padded device batch shape, if any
     timings: dict = dataclasses.field(default_factory=dict, compare=False)
+    trace_id: str | None = dataclasses.field(default=None, compare=False)
+    span_id: str | None = dataclasses.field(default=None, compare=False)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

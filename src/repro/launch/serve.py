@@ -36,6 +36,12 @@ def main(argv=None):
     ap.add_argument("--mode", default="vertices",
                     choices=[m.value for m in ResultMode])
     ap.add_argument("--verify", type=int, default=32)
+    ap.add_argument("--trace-export", metavar="PATH", default=None,
+                    help="write the run's query-lifecycle spans as Chrome "
+                         "trace-event JSON (Perfetto / chrome://tracing)")
+    ap.add_argument("--slow-query-ms", type=float, default=None,
+                    help="log queries slower than this threshold with "
+                         "their full span tree")
     args = ap.parse_args(argv)
 
     if args.batch < 1:
@@ -44,7 +50,8 @@ def main(argv=None):
     k = args.k or max(2, int(0.7 * k_max(g)))
     cfg = EngineConfig(max_batch=args.batch, flush_ms=args.flush_ms,
                        cache_capacity=args.cache,
-                       min_bucket=min(8, args.batch))
+                       min_bucket=min(8, args.batch),
+                       slow_query_ms=args.slow_query_ms)
     print(f"[engine] workload={args.workload} n={g.n} m={g.m} "
           f"t_max={g.t_max} k={k} config={cfg}")
 
@@ -95,6 +102,17 @@ def main(argv=None):
         bad = sum(not matches(i) for i in range(min(args.verify, total)))
         print(f"[verify] {min(args.verify, total)} queries checked, {bad} mismatches")
         assert bad == 0
+
+        if args.slow_query_ms is not None:
+            print(f"[slow-queries] threshold={args.slow_query_ms}ms "
+                  f"logged={len(eng.slow_queries)}")
+            print(eng.slow_queries.format())
+        if args.trace_export:
+            doc = eng.export_trace(args.trace_export,
+                                   extra={"workload": args.workload, "k": k})
+            print(f"[trace] {len(doc['traceEvents'])} events -> "
+                  f"{args.trace_export} (dropped="
+                  f"{doc['otherData']['dropped_spans']})")
         return total / dt
 
 

@@ -1,0 +1,31 @@
+"""Serving-plane observability (DESIGN.md §11): query-lifecycle tracing,
+unified metrics, and export surfaces.
+
+Three modules, deliberately dependency-free (stdlib + numpy only) so every
+layer — core, serving, launch, benchmarks — can import them without cycles:
+
+* :mod:`repro.obs.trace` — spans with explicit parent/child context that
+  propagate across thread boundaries (submit -> batcher worker -> device
+  launch; ingest -> FIFO refresh worker), recorded into a bounded
+  lock-protected ring buffer, plus the slow-query log.
+* :mod:`repro.obs.registry` — :class:`MetricsRegistry`: counters, gauges,
+  latency histograms and pluggable stat *sources* (cache/registry stats)
+  behind one snapshot-and-export surface. The serving engine's
+  ``EngineMetrics`` is a thin subclass.
+* :mod:`repro.obs.export` — Chrome trace-event JSON (loadable in Perfetto /
+  ``chrome://tracing``) with a schema validator, and the metrics snapshot
+  JSON round-trip.
+"""
+
+from .trace import (NULL_SPAN, SlowQueryLog, Span, SpanContext, Tracer)
+from .registry import LatencyHistogram, MetricsRegistry
+from .export import (chrome_trace_events, metrics_from_json,
+                     metrics_to_json, validate_chrome_trace,
+                     write_chrome_trace)
+
+__all__ = [
+    "Tracer", "Span", "SpanContext", "SlowQueryLog", "NULL_SPAN",
+    "MetricsRegistry", "LatencyHistogram",
+    "chrome_trace_events", "write_chrome_trace", "validate_chrome_trace",
+    "metrics_to_json", "metrics_from_json",
+]

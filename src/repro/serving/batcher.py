@@ -42,6 +42,11 @@ class Request:
     t_submit: float          # engine submit time (e2e latency anchor)
     t_enqueue: float = 0.0   # batcher enqueue time (queue-wait anchor)
     spec: object | None = None  # canonical TCCSQuery (query API v2)
+    # open root query span (repro.obs.trace.Span) riding across the thread
+    # boundary: the engine opens it on the caller thread, the planner hangs
+    # queue/route/execute children off it on the worker thread (explicit
+    # context propagation, DESIGN.md §11.2). None for bare legacy requests.
+    span: object | None = None
 
 
 class MicroBatcher:

@@ -67,6 +67,8 @@ from typing import Iterable, Sequence
 
 from repro.core.query_api import (InvalidQueryError, Provenance, TCCSQuery,
                                   TCCSResult, WindowSweep, empty_result)
+from repro.obs.export import write_chrome_trace
+from repro.obs.trace import SlowQueryLog, Tracer
 
 from .batcher import MicroBatcher, Request
 from .cache import ResultCache
@@ -124,6 +126,9 @@ class EngineConfig:
     host_threshold: int = 8      # batches below this run host Algorithm 1
     cache_capacity: int = 4096   # LRU result-cache entries (<=0 disables)
     registry_capacity: int = 8   # resident (workload, k) index pairs
+    trace: bool = True           # record query-lifecycle spans (§11)
+    trace_buffer: int = 16384    # finished-span ring capacity
+    slow_query_ms: float | None = None  # slow-query log threshold (off=None)
 
 
 class ServingEngine:
@@ -136,11 +141,18 @@ class ServingEngine:
                 f"need 1 <= min_bucket <= max_batch, got min_bucket="
                 f"{cfg.min_bucket} max_batch={cfg.max_batch}")
         self.metrics = EngineMetrics()
+        # one tracer per engine (DESIGN.md §11.1): queries, background
+        # builds/refreshes and compile events all record into this ring
+        self.tracer = Tracer(cfg.trace_buffer, enabled=cfg.trace)
+        self.slow_queries = SlowQueryLog(cfg.slow_query_ms,
+                                         tracer=self.tracer)
         self.cache = ResultCache(cfg.cache_capacity)
         self._owns_registry = registry is None
         self.registry = registry if registry is not None else IndexRegistry(
-            cfg.registry_capacity, metrics=self.metrics)
-        self.executor = ShardedExecutor(devices)
+            cfg.registry_capacity, metrics=self.metrics,
+            tracer=self.tracer)
+        self.executor = ShardedExecutor(devices, metrics=self.metrics,
+                                        tracer=self.tracer)
         self.planner = QueryPlanner(
             self.executor, self.cache, self.metrics,
             host_threshold=cfg.host_threshold, min_bucket=cfg.min_bucket,
@@ -161,6 +173,11 @@ class ServingEngine:
         self.registry.add_evict_listener(self._on_index_evicted)
         self.registry.add_refresh_listener(self._on_index_refreshed)
         self.registry.add_retention_listener(self._on_index_retained)
+        # unified metrics surface (DESIGN.md §11.4): one snapshot covers
+        # the engine's counters/latency plus the cache and registry stat
+        # planes, exportable as JSON via repro.obs.export.metrics_to_json
+        self.metrics.register_source("cache", self.cache.stats)
+        self.metrics.register_source("registry", self.registry.stats)
 
     # -- graph/index management -----------------------------------------
     def register_graph(self, name: str, g) -> None:
@@ -211,16 +228,29 @@ class ServingEngine:
         if self._closed:
             raise RuntimeError("engine is closed")
         self.metrics.count("ingests")
-        futures = self.registry.extend_graph(workload, edges)
-        trims = self._auto_trim(workload)
-        # a trim future supersedes the same key's refresh future: the FIFO
-        # refresh worker runs the suffix refresh first, so the trim future
-        # resolving implies both steps landed
-        futures = {**futures, **trims}
-        if wait:
-            for f in futures.values():
-                f.result(timeout=timeout)
-        return futures
+        # the ingest span parents every background index_refresh (and any
+        # auto-trim's index_retention) scheduled here: the span *context*
+        # crosses into the FIFO worker explicitly (DESIGN.md §11.2)
+        span = self.tracer.start_span("ingest", parent=None, cat="epoch",
+                                      workload=workload)
+        try:
+            futures = self.registry.extend_graph(workload, edges,
+                                                 parent=span.ctx)
+            trims = self._auto_trim(workload, parent=span.ctx)
+            # a trim future supersedes the same key's refresh future: the
+            # FIFO refresh worker runs the suffix refresh first, so the trim
+            # future resolving implies both steps landed
+            futures = {**futures, **trims}
+            span.set("refreshes", len(futures))
+            if wait:
+                for f in futures.values():
+                    f.result(timeout=timeout)
+            return futures
+        except BaseException as exc:
+            span.set("error", repr(exc))
+            raise
+        finally:
+            span.end()
 
     # -- sliding-window retention -----------------------------------------
     def set_retention(self, workload: str,
@@ -258,27 +288,37 @@ class ServingEngine:
         if self._closed:
             raise RuntimeError("engine is closed")
         self.metrics.count("retentions")
-        futures = self._begin_trim(workload, t_cut)
-        if wait:
-            for f in futures.values():
-                f.result(timeout=timeout)
-        return futures
+        span = self.tracer.start_span("retain", parent=None, cat="epoch",
+                                      workload=workload, t_cut=int(t_cut))
+        try:
+            futures = self._begin_trim(workload, t_cut, parent=span.ctx)
+            span.set("trims", len(futures))
+            if wait:
+                for f in futures.values():
+                    f.result(timeout=timeout)
+            return futures
+        except BaseException as exc:
+            span.set("error", repr(exc))
+            raise
+        finally:
+            span.end()
 
-    def _begin_trim(self, workload: str, t_cut: int) -> dict:
+    def _begin_trim(self, workload: str, t_cut: int, parent=None) -> dict:
         """Schedule a registry trim and raise the cache floor for every
         affected key *at initiation* (to the epoch the trim just bumped
         to), not only at swap time: if the trim never swaps — the key is
         evicted mid-queue, or a racing cold build catches up first — the
         retention listener never fires, yet pre-trim handles must still
         be barred from filling the cache with pre-shift windows."""
-        futures = self.registry.retain(workload, t_cut)
+        futures = self.registry.retain(workload, t_cut, parent=parent)
         if futures:
             epoch = self.registry.stats()["epochs"].get(workload, 0)
             for key in futures:
                 self.cache.raise_floor(key, epoch)
         return futures
 
-    def _auto_trim(self, workload: str, tick: bool = True) -> dict:
+    def _auto_trim(self, workload: str, tick: bool = True,
+                   parent=None) -> dict:
         """Evaluate the workload's retention policy; trim when ``t_max``
         overflows ``window + slack`` (cutting back to exactly ``window``)."""
         with self._lock:
@@ -297,7 +337,8 @@ class ServingEngine:
         if g.t_max <= pol.window + pol.slack:
             return {}
         self.metrics.count("auto_trims")
-        return self._begin_trim(workload, g.t_max - pol.window + 1)
+        return self._begin_trim(workload, g.t_max - pol.window + 1,
+                                parent=parent)
 
     # -- query paths: v2 typed surface -----------------------------------
     def submit_spec(self, workload: str, spec: TCCSQuery) -> Future:
@@ -418,23 +459,36 @@ class ServingEngine:
             fut: Future = Future()
             futures.append(fut)
             self.metrics.count("queries")
+            # one root span per query (DESIGN.md §11.2): trivial and cache
+            # paths close it here; misses carry the *open* span across the
+            # batcher thread boundary and close it from the future's done
+            # callback (covering error resolutions too)
+            span = self.tracer.start_span(
+                "query", parent=None, cat="query", t0=t0,
+                workload=workload, k=int(k), u=cq.u, ts=cq.ts, te=cq.te)
+            tr, sp = span.ids
             if trivial:
                 # an empty window (or lenient out-of-range vertex) needs no
                 # index at all — not even a cache slot
                 self.metrics.count("trivial_queries")
+                span.set("route", "trivial").end()
                 fut.set_result(empty_result(
-                    cq, g.n, Provenance(route="trivial", index_key=key)))
+                    cq, g.n, Provenance(route="trivial", index_key=key,
+                                        trace_id=tr, span_id=sp)))
                 self.metrics.observe("e2e", time.perf_counter() - t0)
                 continue
             hit = self.cache.get((key, cq.cache_key()))
             if hit is not None:
                 self.metrics.count("cache_hits")
-                fut.set_result(self._stamp_cache_hit(hit))
+                span.child("cache", t0=t0).end()
+                span.set("route", "cache").end()
+                fut.set_result(self._stamp_cache_hit(hit, span))
                 self.metrics.observe("e2e", time.perf_counter() - t0)
             else:
                 self.metrics.count("cache_misses")
+                fut.add_done_callback(self._finish_root_span(span, cq))
                 misses.append(Request(cq.u, cq.ts, cq.te, fut, t_submit=t0,
-                                      spec=cq))
+                                      spec=cq, span=span))
         if misses:
             if handle is not None:
                 self._dispatch_misses(workload, k, handle, misses)
@@ -477,18 +531,37 @@ class ServingEngine:
         raise RuntimeError(
             f"batcher for {key} kept closing under submit")
 
+    def _finish_root_span(self, span, cq: TCCSQuery):
+        """Done callback closing a miss's root query span. Attached at
+        Request creation so *every* resolution path — planner result, batch
+        execute_fn failure, build failure, engine close — ends the span and
+        feeds the slow-query log exactly once (``Span.end`` is idempotent
+        anyway)."""
+        def _done(f: Future) -> None:
+            exc = f.exception()
+            if exc is not None:
+                span.set("error", repr(exc))
+            span.end()
+            self.slow_queries.observe(span, cq)
+        return _done
+
     @staticmethod
-    def _stamp_cache_hit(res: TCCSResult) -> TCCSResult:
-        """Re-stamp a cached result with ``route="cache"`` — on a *copy*.
+    def _stamp_cache_hit(res: TCCSResult, span=None) -> TCCSResult:
+        """Re-stamp a cached result with ``route="cache"`` (and, when a
+        root query span is passed, that span's trace identity) — on a
+        *copy*.
 
         ``dataclasses.replace`` shallow-copies, which would share the
         mutable ``timings`` dict between the stored result and every hit
         handed to callers (threads mutating one would corrupt the other,
         and the stored provenance itself); the dict is copied explicitly so
         the cached original stays pristine."""
+        tr, sp = span.ids if span is not None else (None, None)
         if res.provenance is None:
-            return dataclasses.replace(res, provenance=Provenance(route="cache"))
+            return dataclasses.replace(res, provenance=Provenance(
+                route="cache", trace_id=tr, span_id=sp))
         prov = dataclasses.replace(res.provenance, route="cache",
+                                   trace_id=tr, span_id=sp,
                                    timings=dict(res.provenance.timings))
         return dataclasses.replace(res, provenance=prov)
 
@@ -509,6 +582,13 @@ class ServingEngine:
             s.validate(n=g.n)
         self.metrics.count("queries", len(specs))
         t0 = time.perf_counter()
+        # one root span for the whole sweep (it is a single logical query);
+        # each device launch / host loop is a child, and every non-cached
+        # window's provenance links back to this root
+        span = self.tracer.start_span(
+            "sweep", parent=None, cat="query", t0=t0,
+            workload=workload, k=int(ws.k), u=int(ws.u), windows=len(specs))
+        tr, sp = span.ids
         results: list = [None] * len(specs)
         misses: list[tuple[int, TCCSQuery]] = []
         for i, s in enumerate(specs):
@@ -516,25 +596,28 @@ class ServingEngine:
             if cq.is_empty_window:
                 self.metrics.count("trivial_queries")
                 results[i] = empty_result(
-                    cq, g.n, Provenance(route="trivial", index_key=key))
+                    cq, g.n, Provenance(route="trivial", index_key=key,
+                                        trace_id=tr, span_id=sp))
                 continue
             hit = self.cache.get((key, cq.cache_key()))
             if hit is not None:
                 self.metrics.count("cache_hits")
-                results[i] = self._stamp_cache_hit(hit)
+                results[i] = self._stamp_cache_hit(hit, span)
             else:
                 self.metrics.count("cache_misses")
                 misses.append((i, cq))
         cfg = self.config
         if misses and (handle.pecb.num_nodes == 0
                        or len(misses) < cfg.host_threshold):
+            es = span.child("execute", route="host")
             for i, cq in misses:
                 res = handle.pecb.answer(cq)
                 res = dataclasses.replace(res, provenance=dataclasses.replace(
-                    res.provenance, index_key=key))
+                    res.provenance, index_key=key, trace_id=tr, span_id=sp))
                 results[i] = res
                 self.cache.put((key, cq.cache_key()), res,
                                epoch=handle.epoch)
+            es.end()
             self.metrics.count("host_batches")
             self.metrics.count("host_queries", len(misses))
         elif misses:
@@ -549,9 +632,12 @@ class ServingEngine:
                 vmask = self.executor.run_sweep(handle.device, ws.u, ts, te,
                                                 bucket)
                 dt = time.perf_counter() - t1
+                span.child("execute", route="sweep", bucket=bucket,
+                           t0=t1).end()
                 prov = Provenance(route="sweep", backend="pecb-device-sweep",
                                   index_key=key, batch_size=len(chunk),
-                                  bucket=bucket, timings={"exec_s": dt})
+                                  bucket=bucket, timings={"exec_s": dt},
+                                  trace_id=tr, span_id=sp)
                 chunk_res = assemble_device_results(
                     store, [cq for _, cq in chunk], vmask, None, prov)
                 for (i, cq), res in zip(chunk, chunk_res):
@@ -562,6 +648,7 @@ class ServingEngine:
                 self.metrics.count("sweep_windows", len(chunk))
                 self.metrics.count("sweep_padded_slots", bucket - len(chunk))
                 self.metrics.observe("sweep_exec", dt)
+        span.end()
         self.metrics.observe("sweep_e2e", time.perf_counter() - t0)
         return results
 
@@ -698,13 +785,22 @@ class ServingEngine:
         self.close()
 
     # -- observability ---------------------------------------------------
+    def export_trace(self, path: str, extra: dict | None = None) -> dict:
+        """Write the tracer's finished-span ring as Chrome trace-event JSON
+        (loadable in Perfetto / ``chrome://tracing``); returns the
+        validated document. Works on a live engine — the export is a
+        snapshot of whatever has finished so far."""
+        return write_chrome_trace(path, self.tracer, extra=extra)
+
     def stats(self) -> dict:
         return {
-            "engine": self.metrics.snapshot(),
+            "engine": self.metrics.snapshot(include_sources=False),
             "cache": self.cache.stats(),
             "registry": self.registry.stats(),
             "devices": self.executor.num_devices,
             "compiled_programs": self.executor.compile_count(),
+            "trace": self.tracer.stats(),
+            "slow_queries": len(self.slow_queries),
         }
 
     def format_stats(self) -> str:

@@ -23,6 +23,8 @@ semantics identical, tested by the sharded subprocess suite
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 import jax
@@ -69,15 +71,44 @@ class ShardedExecutor:
     dispatch is thread-safe).
     """
 
-    def __init__(self, devices=None):
+    def __init__(self, devices=None, *, metrics=None, tracer=None):
         self.devices = list(devices) if devices is not None else jax.devices()
         self.num_devices = len(self.devices)
+        # observability sinks (DESIGN.md §11.4): compile events from the
+        # jit caches are *recorded*, not inferred — a compile storm shows
+        # up as jit_compile_* counters and "compile"-category trace spans
+        self.metrics = metrics
+        self.tracer = tracer
         if self.num_devices > 1:
             self.mesh = Mesh(np.asarray(self.devices), ("batch",))
             self.batch_sharding = NamedSharding(self.mesh, P("batch"))
         else:
             self.mesh = None
             self.batch_sharding = None
+
+    def _track_compile(self, fn, program: str, bucket: int, t0: float):
+        """Called after a jit dispatch: if the program's cache grew, this
+        launch paid a compile — count it and record a trace span covering
+        the dispatch (on CPU the compile completes synchronously inside
+        it, so the span duration is a faithful compile cost)."""
+        t1 = time.perf_counter()
+        if self.metrics is not None:
+            self.metrics.count("jit_compiles")
+            self.metrics.count(f"jit_compile_{program}")
+            self.metrics.observe("jit_compile", t1 - t0)
+        if self.tracer is not None:
+            self.tracer.start_span(
+                "jit_compile", parent=None, cat="compile", t0=t0,
+                program=program, bucket=bucket,
+                cache_size=fn._cache_size()).end(t1)
+
+    def _dispatch(self, fn, program: str, bucket: int, args):
+        c0 = fn._cache_size()
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if fn._cache_size() > c0:
+            self._track_compile(fn, program, bucket, t0)
+        return out
 
     def align(self, bucket: int) -> int:
         """Round a bucket up to a multiple of the device count (no-op for
@@ -105,7 +136,8 @@ class ShardedExecutor:
         b = len(u)
         assert self.align(bucket) == bucket, bucket
         qu, qts, qte = self._place(*pad_queries(u, ts, te, bucket), bucket)
-        mask = batch_query(dix, qu, qts, qte)
+        mask = self._dispatch(batch_query, "batch_query", bucket,
+                              (dix, qu, qts, qte))
         return np.asarray(jax.device_get(mask))[:b]
 
     def run_full(self, dix: DeviceIndex, u, ts, te,
@@ -115,7 +147,8 @@ class ShardedExecutor:
         b = len(u)
         assert self.align(bucket) == bucket, bucket
         qu, qts, qte = self._place(*pad_queries(u, ts, te, bucket), bucket)
-        vmask, vermask = batch_query_full(dix, qu, qts, qte)
+        vmask, vermask = self._dispatch(batch_query_full, "batch_query_full",
+                                        bucket, (dix, qu, qts, qte))
         return (np.asarray(jax.device_get(vmask))[:b],
                 np.asarray(jax.device_get(vermask))[:b, :dix.num_versions])
 
@@ -128,7 +161,8 @@ class ShardedExecutor:
         assert self.align(bucket) == bucket, bucket
         _, tsp, tep = pad_queries([u] * w, ts, te, bucket)
         _, qts, qte = self._place(np.zeros(bucket, np.int32), tsp, tep, bucket)
-        mask = window_sweep(dix, jnp.int32(u), qts, qte)
+        mask = self._dispatch(window_sweep, "window_sweep", bucket,
+                              (dix, jnp.int32(u), qts, qte))
         return np.asarray(jax.device_get(mask))[:w]
 
     @staticmethod

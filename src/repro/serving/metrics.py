@@ -1,116 +1,35 @@
-"""Per-stage serving metrics (DESIGN.md §7.5).
+"""Per-stage serving metrics (DESIGN.md §7.5, §11.4).
 
 The engine is instrumented at every pipeline stage: queue wait inside the
 micro-batcher, planner routing, host/device execution, end-to-end request
-latency. Latencies go into :class:`LatencyHistogram` (exact samples up to a
-cap, then uniform reservoir replacement) and are summarized as
-p50/p95/p99/mean; everything countable (cache hits, routed queries, padded
-slots, flushes by cause) goes into monotonically increasing counters.
+latency. Latencies go into :class:`repro.obs.LatencyHistogram` (exact
+samples up to a cap, then uniform reservoir replacement) and are
+summarized as p50/p95/p99/mean with linear interpolation; everything
+countable (cache hits, routed queries, padded slots, flushes by cause,
+jit compiles) goes into monotonically increasing counters.
 
-All methods are thread-safe: the batcher worker threads, the caller threads
-resolving cache hits, and the stats reader all touch the same object.
+Since the §11 observability refactor, :class:`EngineMetrics` is a thin
+subclass of :class:`repro.obs.MetricsRegistry` — the unified registry
+that also carries gauges (device count, compiled programs) and pluggable
+stat sources (the result cache's and index registry's ``stats()``), so
+one ``snapshot()`` (and one ``repro.obs.export.metrics_to_json``) covers
+the whole serving plane. Every pre-§11 call site (``count``, ``observe``,
+``counter``, ``snapshot()["counters"|"latency"]``) is unchanged.
+
+All methods are thread-safe: the batcher worker threads, the caller
+threads resolving cache hits, and the stats reader all touch the same
+object — and the histograms carry their own lock, so direct
+``LatencyHistogram.add`` calls are safe too.
 """
 
 from __future__ import annotations
 
-import random
-import threading
+from repro.obs.registry import LatencyHistogram, MetricsRegistry
+
+__all__ = ["EngineMetrics", "LatencyHistogram"]
 
 
-class LatencyHistogram:
-    """Latency samples (seconds) with percentile summaries.
-
-    Keeps exact samples up to ``cap``; beyond that, new samples replace a
-    uniformly random slot (classic reservoir), so long benches keep an
-    unbiased view without unbounded memory. ``count``/``total`` stay exact.
-    """
-
-    def __init__(self, cap: int = 65536, seed: int = 0):
-        self._cap = cap
-        self._rng = random.Random(seed)
-        self._samples: list[float] = []
-        self.count = 0
-        self.total = 0.0
-
-    def add(self, seconds: float) -> None:
-        self.count += 1
-        self.total += seconds
-        if len(self._samples) < self._cap:
-            self._samples.append(seconds)
-        else:
-            j = self._rng.randrange(self.count)
-            if j < self._cap:
-                self._samples[j] = seconds
-
-    @staticmethod
-    def _pct(sorted_samples: list[float], q: float) -> float:
-        if not sorted_samples:
-            return 0.0
-        n = len(sorted_samples)
-        i = min(n - 1, max(0, int(round(q / 100.0 * (n - 1)))))
-        return sorted_samples[i]
-
-    def percentile(self, q: float) -> float:
-        return self._pct(sorted(self._samples), q)
-
-    def summary(self) -> dict:
-        ms = 1e3
-        s = sorted(self._samples)    # one sort feeds every percentile
-        return {
-            "count": self.count,
-            "mean_ms": (self.total / self.count * ms) if self.count else 0.0,
-            "p50_ms": self._pct(s, 50) * ms,
-            "p95_ms": self._pct(s, 95) * ms,
-            "p99_ms": self._pct(s, 99) * ms,
-            "max_ms": (s[-1] * ms) if s else 0.0,
-        }
-
-
-class EngineMetrics:
-    """Thread-safe registry of counters + per-stage latency histograms."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._counters: dict[str, int] = {}
-        self._hists: dict[str, LatencyHistogram] = {}
-
-    def count(self, name: str, inc: int = 1) -> None:
-        with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + inc
-
-    def observe(self, stage: str, seconds: float) -> None:
-        with self._lock:
-            h = self._hists.get(stage)
-            if h is None:
-                h = self._hists[stage] = LatencyHistogram()
-            h.add(seconds)
-
-    def counter(self, name: str) -> int:
-        with self._lock:
-            return self._counters.get(name, 0)
-
-    def snapshot(self) -> dict:
-        with self._lock:
-            return {
-                "counters": dict(self._counters),
-                "latency": {k: h.summary() for k, h in self._hists.items()},
-            }
-
-    def reset(self) -> None:
-        with self._lock:
-            self._counters.clear()
-            self._hists.clear()
-
-    def format(self) -> str:
-        snap = self.snapshot()
-        lines = []
-        for name in sorted(snap["counters"]):
-            lines.append(f"  {name:<24} {snap['counters'][name]}")
-        for stage in sorted(snap["latency"]):
-            s = snap["latency"][stage]
-            lines.append(
-                f"  {stage:<24} n={s['count']:<7} mean={s['mean_ms']:.3f}ms "
-                f"p50={s['p50_ms']:.3f}ms p95={s['p95_ms']:.3f}ms "
-                f"p99={s['p99_ms']:.3f}ms"
-            )
-        return "\n".join(lines)
+class EngineMetrics(MetricsRegistry):
+    """The serving engine's metrics sink: a :class:`MetricsRegistry` kept
+    under its historical name so engine/batcher/planner/registry call
+    sites (and tests) read naturally."""

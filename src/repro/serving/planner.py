@@ -84,6 +84,22 @@ class QueryPlanner:
         # bare requests (tests, legacy callers) carry no spec: VERTICES mode
         return r.spec if r.spec is not None else TCCSQuery(r.u, r.ts, r.te, k)
 
+    @staticmethod
+    def _trace_pre_exec(batch: list[Request], route: str,
+                        t_exec: float) -> None:
+        """Hang the retrospective ``queue`` span and the ``route`` decision
+        span off each request's root span (the engine attached it on the
+        caller thread; bare legacy requests carry none). The queue span is
+        backdated to the batcher enqueue — by the time the worker runs a
+        batch, the wait is already history."""
+        for r in batch:
+            if r.span is None:
+                continue
+            t_enq = r.t_enqueue or r.t_submit
+            r.span.child("queue", t0=t_enq).end(t_exec)
+            r.span.child("route", t0=t_exec, route=route).end(t_exec)
+            r.span.set("route", route)
+
     def execute(self, handle, batch: list[Request]) -> list:
         b = len(batch)
         k = handle.key[1]
@@ -91,13 +107,22 @@ class QueryPlanner:
         store = handle.pecb.versions
         route = self.route(handle, b)
         t0 = time.perf_counter()
+        self._trace_pre_exec(batch, route, t0)
         if route == "host":
             results = []
-            for s in specs:
+            for r, s in zip(batch, specs):
+                es = (r.span.child("execute", route="host")
+                      if r.span is not None else None)
                 res = handle.pecb.answer(s)
+                if es is not None:
+                    es.end()
+                # provenance links to the ROOT query span: the whole tree
+                # is recoverable from the trace id
+                tr, sp = r.span.ids if r.span is not None else (None, None)
                 results.append(dataclasses.replace(
                     res, provenance=dataclasses.replace(
-                        res.provenance, index_key=handle.key, batch_size=b)))
+                        res.provenance, index_key=handle.key, batch_size=b,
+                        trace_id=tr, span_id=sp)))
             self.metrics.observe("host_exec", time.perf_counter() - t0)
             self.metrics.count("host_batches")
             self.metrics.count("host_queries", b)
@@ -109,6 +134,10 @@ class QueryPlanner:
             te = [s.te for s in specs]
             need_edges = (store is not None
                           and any(s.mode in _EDGE_MODES for s in specs))
+            t_exec = time.perf_counter()
+            exec_spans = [r.span.child("execute", route="device",
+                                       bucket=bucket, t0=t_exec)
+                          if r.span is not None else None for r in batch]
             if need_edges:
                 vmask, vermask = self.executor.run_full(
                     handle.device, u, ts, te, bucket)
@@ -116,12 +145,24 @@ class QueryPlanner:
                 vmask = self.executor.run(handle.device, u, ts, te, bucket)
                 vermask = None
             dt = time.perf_counter() - t0
+            t_end = time.perf_counter()
+            for es in exec_spans:
+                if es is not None:
+                    es.end(t_end)
             prov = Provenance(route="device",
                               backend="pecb-device" + ("-full" if need_edges else ""),
                               index_key=handle.key, batch_size=b,
                               bucket=bucket, timings={"exec_s": dt})
             results = assemble_device_results(store, specs, vmask, vermask,
                                               prov)
+            # per-result provenance copies link each answer to its root
+            # query span (one launch, many traces)
+            results = [
+                dataclasses.replace(res, provenance=dataclasses.replace(
+                    res.provenance, trace_id=r.span.ids[0],
+                    span_id=r.span.ids[1]))
+                if r.span is not None else res
+                for r, res in zip(batch, results)]
             self.metrics.observe("device_exec", dt)
             self.metrics.count("device_batches")
             self.metrics.count("device_queries", b)

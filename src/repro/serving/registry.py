@@ -56,6 +56,7 @@ import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
+from repro.obs.trace import NULL_SPAN
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
 from repro.core.core_time import (CoreTimeTable, edge_core_times,
                                   extend_core_times, shrink_core_times)
@@ -101,10 +102,17 @@ class IndexHandle:
 
 class IndexRegistry:
     def __init__(self, capacity: int = 8, metrics=None, on_evict=None,
-                 build_workers: int = 2):
+                 build_workers: int = 2, tracer=None):
         assert capacity >= 1
         self.capacity = capacity
         self._metrics = metrics
+        # optional repro.obs.trace.Tracer: background builds / refreshes /
+        # retention trims record spans (the engine passes its tracer when
+        # it owns the registry). Epoch mutations accept an explicit parent
+        # SpanContext so refresh spans nest under the ingest/retain span
+        # that scheduled them — across the FIFO worker thread boundary
+        # (DESIGN.md §11.2).
+        self.tracer = tracer
         # evict listeners: called as cb(key, handle) after an entry leaves
         # the registry (outside the registry lock). A list, not a slot:
         # several engines may share one registry (the bench does), and each
@@ -161,6 +169,13 @@ class IndexRegistry:
             if cb in self._retention_listeners:
                 self._retention_listeners.remove(cb)
 
+    def _span(self, name: str, parent=None, **attrs):
+        """Background-plane span, or the inert NULL_SPAN when untraced."""
+        if self.tracer is None:
+            return NULL_SPAN
+        return self.tracer.start_span(name, parent=parent, cat="index",
+                                      **attrs)
+
     # -- graph sources --------------------------------------------------
     def register_graph(self, name: str, g: TemporalGraph) -> None:
         """Bind ``name`` to a graph, immutably: indexes, cached results and
@@ -195,8 +210,8 @@ class IndexRegistry:
         )
 
     # -- streaming epochs -------------------------------------------------
-    def extend_graph(self, name: str,
-                     edges) -> dict[tuple[str, int], "Future[IndexHandle]"]:
+    def extend_graph(self, name: str, edges,
+                     parent=None) -> dict[tuple[str, int], "Future[IndexHandle]"]:
         """Append suffix ``edges`` to workload ``name`` and refresh every
         resident ``(name, k)`` index incrementally in the background.
 
@@ -205,7 +220,9 @@ class IndexRegistry:
         refreshed replacement is atomically swapped in. Returns one future
         per affected key, resolving with the refreshed handle. Suffix
         violations (historical timestamps, unknown vertices) raise here,
-        before anything is mutated.
+        before anything is mutated. ``parent`` (a span or SpanContext)
+        parents each key's background ``index_refresh`` span under the
+        caller's trace (DESIGN.md §11.2).
         """
         with self._lock:
             g = self._graphs.get(name)
@@ -231,11 +248,13 @@ class IndexRegistry:
                 fut: Future = Future()
                 futures[key] = fut
                 self._refresh_pool.submit(
-                    self._run_refresh, key, handle, g2, epoch, fut)
+                    self._run_refresh, key, handle, g2, epoch, fut, parent)
         return futures
 
     def _run_refresh(self, key, old: IndexHandle, g2: TemporalGraph,
-                     epoch: int, fut: Future) -> None:
+                     epoch: int, fut: Future, parent=None) -> None:
+        span = self._span("index_refresh", parent=parent,
+                          workload=key[0], k=key[1], epoch=epoch)
         try:
             workload, k = key
             # re-read the resident handle: the FIFO worker guarantees every
@@ -248,6 +267,7 @@ class IndexRegistry:
             with self._lock:
                 cur = self._entries.get(key)
             if cur is not None and cur.epoch >= epoch:
+                span.set("outcome", "superseded").end()
                 fut.set_result(cur)      # a newer epoch already landed
                 return
             if cur is not None and cur.epoch > old.epoch:
@@ -261,12 +281,15 @@ class IndexRegistry:
             t1 = time.perf_counter()
             tab2 = extend_core_times(g2, k, old.tab)
             stages["core_times"] = time.perf_counter() - t1
+            span.child("core_times", t0=t1).end()
             t1 = time.perf_counter()
             idx2 = extend_pecb_index(g2, k, tab2, old.pecb)
             stages["forest"] = time.perf_counter() - t1
+            span.child("forest", t0=t1).end()
             t1 = time.perf_counter()
             dev2, upload = refresh_device(old.pecb, old.device, idx2)
             stages["device"] = time.perf_counter() - t1
+            span.child("device", t0=t1).end()
             total = time.perf_counter() - t0
             handle = IndexHandle(key, g2, idx2, dev2, total, stages,
                                  epoch=epoch, tab=tab2)
@@ -276,6 +299,7 @@ class IndexRegistry:
             # leaves the registry silently serving the pre-ingest epoch
             if self._metrics is not None:
                 self._metrics.count("index_refresh_failures")
+            span.set("error", repr(exc)).end()
             fut.set_exception(exc)
             return
         swapped, replaced, listeners = self._swap_epoch_handle(
@@ -289,6 +313,7 @@ class IndexRegistry:
                                 upload["uploaded_bytes"])
             self._metrics.count("refresh_reused_bytes",
                                 upload["reused_bytes"])
+        span.set("swapped", swapped).end()
         if swapped:
             for cb in listeners:
                 cb(key, replaced, handle)
@@ -321,8 +346,8 @@ class IndexRegistry:
         return swapped, cur, listeners
 
     # -- retention (prefix expiry) ----------------------------------------
-    def retain(self, name: str,
-               t_cut: int) -> dict[tuple[str, int], "Future[IndexHandle]"]:
+    def retain(self, name: str, t_cut: int,
+               parent=None) -> dict[tuple[str, int], "Future[IndexHandle]"]:
         """Expire every edge of workload ``name`` with timestamp
         ``< t_cut`` and shrink every resident ``(name, k)`` index to the
         shifted retained epoch in the background (DESIGN.md §10).
@@ -361,24 +386,31 @@ class IndexRegistry:
                 fut: Future = Future()
                 futures[key] = fut
                 self._refresh_pool.submit(
-                    self._run_shrink, key, g, g2, int(t_cut), epoch, fut)
+                    self._run_shrink, key, g, g2, int(t_cut), epoch, fut,
+                    parent)
         return futures
 
     def _run_shrink(self, key, g_old: TemporalGraph, g2: TemporalGraph,
-                    t_cut: int, epoch: int, fut: Future) -> None:
+                    t_cut: int, epoch: int, fut: Future,
+                    parent=None) -> None:
         """FIFO-worker body of one (key, trim). Unlike ``_run_refresh``
         (which grows from the handle captured at schedule time — valid
         because extending from *any* older suffix epoch works), the shrink
         re-reads the resident handle here: the FIFO worker guarantees
         every previously scheduled refresh has landed, so the resident
         handle describes exactly the pre-cut binding ``g_old``."""
+        span = self._span("index_retention", parent=parent,
+                          workload=key[0], k=key[1], epoch=epoch,
+                          t_cut=t_cut)
         try:
             with self._lock:
                 cur = self._entries.get(key)
             if cur is None:
+                span.set("outcome", "evicted").end()
                 fut.set_result(None)     # evicted mid-queue: next cold
                 return                   # build sees the trimmed epoch
             if cur.epoch >= epoch or cur.graph is g2:
+                span.set("outcome", "superseded").end()
                 fut.set_result(cur)      # a cold build already caught up
                 return
             workload, k = key
@@ -388,9 +420,11 @@ class IndexRegistry:
                 t1 = time.perf_counter()
                 tab2 = shrink_core_times(g2, k, cur.tab)
                 stages["core_times"] = time.perf_counter() - t1
+                span.child("core_times", t0=t1).end()
                 t1 = time.perf_counter()
                 idx2 = shrink_pecb_index(g2, k, tab2, cur.pecb)
                 stages["forest"] = time.perf_counter() - t1
+                span.child("forest", t0=t1).end()
             else:
                 # resident handle does not describe the pre-cut epoch (a
                 # cold-build race stored an intermediate snapshot): fall
@@ -398,18 +432,22 @@ class IndexRegistry:
                 t1 = time.perf_counter()
                 tab2 = edge_core_times(g2, k)
                 stages["core_times"] = time.perf_counter() - t1
+                span.child("core_times", t0=t1, cold=True).end()
                 t1 = time.perf_counter()
                 idx2 = pack_index(g2, k, IncrementalBuilder(g2, tab2).run())
                 stages["forest"] = time.perf_counter() - t1
+                span.child("forest", t0=t1, cold=True).end()
             t1 = time.perf_counter()
             dev2, upload = refresh_device(cur.pecb, cur.device, idx2)
             stages["device"] = time.perf_counter() - t1
+            span.child("device", t0=t1).end()
             total = time.perf_counter() - t0
             handle = IndexHandle(key, g2, idx2, dev2, total, stages,
                                  epoch=epoch, tab=tab2)
         except BaseException as exc:
             if self._metrics is not None:
                 self._metrics.count("index_retention_failures")
+            span.set("error", repr(exc)).end()
             fut.set_exception(exc)
             return
         swapped, replaced, listeners = self._swap_epoch_handle(
@@ -421,6 +459,7 @@ class IndexRegistry:
                 self._metrics.observe(f"index_retention_{stage}", seconds)
             self._metrics.count("retention_freed_bytes",
                                 upload["freed_bytes"])
+        span.set("swapped", swapped).end()
         if swapped:
             for cb in listeners:
                 cb(key, replaced, handle, t_cut)
@@ -532,20 +571,30 @@ class IndexRegistry:
             # an old graph (or vice versa)
             g = self._graphs.get(workload, g)
             epoch = self._epochs.get(workload, 0)
+        span = self._span("index_build", workload=workload, k=k, epoch=epoch)
         stages = {}
-        t0 = time.perf_counter()
-        tab = edge_core_times(g, k)
-        stages["core_times"] = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        builder = IncrementalBuilder(g, tab).run()
-        stages["forest"] = time.perf_counter() - t1
-        t1 = time.perf_counter()
-        idx = pack_index(g, k, builder)
-        stages["pack"] = time.perf_counter() - t1
-        t1 = time.perf_counter()
-        dev = to_device(idx)
-        stages["device"] = time.perf_counter() - t1
-        total = time.perf_counter() - t0
+        try:
+            t0 = time.perf_counter()
+            tab = edge_core_times(g, k)
+            stages["core_times"] = time.perf_counter() - t0
+            span.child("core_times", t0=t0).end()
+            t1 = time.perf_counter()
+            builder = IncrementalBuilder(g, tab).run()
+            stages["forest"] = time.perf_counter() - t1
+            span.child("forest", t0=t1).end()
+            t1 = time.perf_counter()
+            idx = pack_index(g, k, builder)
+            stages["pack"] = time.perf_counter() - t1
+            span.child("pack", t0=t1).end()
+            t1 = time.perf_counter()
+            dev = to_device(idx)
+            stages["device"] = time.perf_counter() - t1
+            span.child("device", t0=t1).end()
+            total = time.perf_counter() - t0
+        except BaseException as exc:
+            span.set("error", repr(exc)).end()
+            raise
+        span.end()
         handle = IndexHandle(key, g, idx, dev, total, stages,
                              epoch=epoch, tab=tab)
         with self._lock:
