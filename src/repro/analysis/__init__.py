@@ -1,0 +1,40 @@
+"""Repo-specific static-analysis suite (DESIGN.md §12).
+
+``python -m repro.analysis`` runs every registered pass over the include
+roots from ``[tool.repro-analysis]`` in ``pyproject.toml`` and reports
+structured findings; ``--strict`` (the CI gate) exits non-zero on any
+finding not in the committed baseline.
+
+Pass families:
+
+* :mod:`~repro.analysis.passes_locks` — lock-order + blocking-call-under-
+  lock against the hierarchy declared in :mod:`repro.obs.locks` (whose
+  runtime :class:`~repro.obs.locks.LockWitness` covers the dynamic side).
+* :mod:`~repro.analysis.passes_jax` — tracing hygiene for jitted code.
+* :mod:`~repro.analysis.passes_api` — deprecated shims, metrics bypasses,
+  wall-clock misuse, bare asserts.
+
+Adding a pass: write ``(module, config) -> Iterable[Finding]``, register
+it in :data:`PASSES` under its rule-family name, document it in DESIGN.md
+§12.4, and add positive + negative fixtures under
+``tests/fixtures/analysis/``.
+"""
+
+from .core import (AnalysisConfig, Baseline, Finding, Module,
+                   run_analysis)
+from .passes_api import pass_api_discipline
+from .passes_jax import pass_jax_hygiene
+from .passes_locks import pass_lock_discipline
+
+#: name -> pass callable; config ``passes = [...]`` selects a subset.
+PASSES = {
+    "locks": pass_lock_discipline,
+    "jax": pass_jax_hygiene,
+    "api": pass_api_discipline,
+}
+
+__all__ = [
+    "AnalysisConfig", "Baseline", "Finding", "Module", "PASSES",
+    "run_analysis", "pass_lock_discipline", "pass_jax_hygiene",
+    "pass_api_discipline",
+]

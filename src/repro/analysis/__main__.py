@@ -1,0 +1,94 @@
+"""CLI for the static-analysis suite: ``python -m repro.analysis``.
+
+Exit codes: 0 = clean (or every finding baselined), 1 = non-baselined
+findings in ``--strict`` mode, 2 = usage error. Default (non-strict) runs
+always exit 0 — they are for humans iterating; CI runs ``--strict``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import PASSES
+from .core import AnalysisConfig, Baseline, run_analysis
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific concurrency/JAX/API static analysis")
+    p.add_argument("--root", default=".",
+                   help="repo root holding pyproject.toml (default: cwd)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any finding not in the baseline")
+    p.add_argument("--json", dest="json_out", metavar="PATH",
+                   help="write findings JSON (CI artifact); '-' = stdout")
+    p.add_argument("--baseline", metavar="PATH",
+                   help="override the baseline path from pyproject")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="accept current findings into the baseline file")
+    p.add_argument("--passes", metavar="NAMES",
+                   help="comma-separated pass subset "
+                        f"(available: {', '.join(sorted(PASSES))})")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    root = os.path.abspath(args.root)
+    config = AnalysisConfig.from_pyproject(root)
+    if args.passes:
+        names = tuple(n.strip() for n in args.passes.split(",") if n.strip())
+        unknown = [n for n in names if n not in PASSES]
+        if unknown:
+            print(f"unknown passes: {', '.join(unknown)} "
+                  f"(available: {', '.join(sorted(PASSES))})",
+                  file=sys.stderr)
+            return 2
+        config.passes = names
+
+    findings = run_analysis(root, config, PASSES)
+
+    baseline_path = os.path.join(
+        root, args.baseline if args.baseline else config.baseline)
+    baseline = Baseline.load(baseline_path)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+
+    if args.write_baseline:
+        Baseline.from_findings(
+            findings,
+            comment="accepted at baseline write; justify or fix").save(
+                baseline_path)
+        print(f"baseline: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}")
+
+    payload = {
+        "findings": [f.to_dict() for f in findings],
+        "baselined": sum(1 for f in findings
+                         if f.fingerprint in baseline),
+        "fresh": len(fresh),
+        "passes": sorted(config.passes or PASSES),
+    }
+    if args.json_out == "-":
+        json.dump(payload, sys.stdout, indent=2)
+        print()
+    elif args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
+    for f in findings:
+        marker = "" if f.fingerprint not in baseline else " (baselined)"
+        print(f.format() + marker)
+    print(f"{len(findings)} finding(s), {len(fresh)} not baselined")
+
+    if args.strict and fresh:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""API-discipline passes (DESIGN.md §12.3c).
+
+* ``deprecated-shim`` — calls into the PR-3 legacy positional surfaces
+  (``index.query(u, ts, te)``, ``engine.submit(workload, k, u, ts, te)``,
+  ``engine.submit_many(...)``): the v2 ``TCCSQuery`` surface validates,
+  canonicalizes and records provenance; the shims skip all three. The
+  ``deprecated-calls`` config maps method name -> the *minimum positional
+  arity* that identifies the legacy signature (so ``batcher.submit(req)``
+  and ``executor.submit``-style two-arg calls stay clean). Definition
+  sites and the ``_component_vertices`` internals are not calls and are
+  not flagged; the shim bodies themselves suppress inline.
+* ``metrics-direct`` — writes to counter state (``.hits += 1``,
+  ``._counters[...] = ...``) outside the owning class: every counter
+  mutation must flow through ``MetricsRegistry.count`` so the unified
+  snapshot, export and reset surfaces stay truthful.
+* ``wallclock-in-traced`` — ``time.time()`` in modules on the
+  ``wallclock-modules`` list (the serving + obs planes): span timing and
+  latency math there use ``time.perf_counter()`` (monotonic, high
+  resolution); mixing in wall-clock reads breaks duration arithmetic
+  across NTP steps. Wall-clock metadata (checkpoint ``written_at``) lives
+  outside the listed modules.
+* ``bare-assert`` — ``assert`` statements in library code: they vanish
+  under ``python -O``, so invariants guarding data integrity must raise
+  typed errors. (Tests keep their asserts — the include list only covers
+  ``src/``.)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import AnalysisConfig, Finding, Module, make_finding
+
+#: attribute names that are counter state on metrics-ish objects
+_COUNTER_ATTRS = frozenset({"_counters", "_gauges"})
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def pass_api_discipline(module: Module,
+                        config: AnalysisConfig) -> Iterable[Finding]:
+    findings: list[Finding] = []
+    wallclock = any(module.dotted == m or module.dotted.startswith(m + ".")
+                    for m in config.wallclock_modules)
+
+    for node in ast.walk(module.tree):
+        # -- deprecated-shim ---------------------------------------------
+        if isinstance(node, ast.Call) and isinstance(node.func,
+                                                     ast.Attribute):
+            name = node.func.attr
+            min_arity = config.deprecated_calls.get(name)
+            if (min_arity is not None and len(node.args) >= min_arity
+                    and not _first_arg_is_callable_ref(node)
+                    and not _receiver_is_executor(node)):
+                findings.append(make_finding(
+                    module, "deprecated-shim", node,
+                    f".{name}() with {len(node.args)} positional args "
+                    "matches a PR-3 legacy shim signature; migrate to "
+                    "the TCCSQuery v2 surface (answer/submit_spec)"))
+
+        # -- metrics-direct ----------------------------------------------
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                base = tgt
+                if isinstance(base, ast.Subscript):
+                    base = base.value
+                if (isinstance(base, ast.Attribute)
+                        and base.attr in _COUNTER_ATTRS
+                        and not _is_self_write_in_owner(module, base)):
+                    findings.append(make_finding(
+                        module, "metrics-direct", node,
+                        f"direct write to {base.attr!r} bypasses "
+                        "MetricsRegistry.count/gauge; counters mutated "
+                        "behind the registry's back disappear from "
+                        "snapshots and reset()"))
+
+        # -- wallclock-in-traced -----------------------------------------
+        if (wallclock and isinstance(node, ast.Call)
+                and _dotted(node.func) == "time.time"):
+            findings.append(make_finding(
+                module, "wallclock-in-traced", node,
+                "time.time() in a span-instrumented module; durations "
+                "and deadlines here use time.perf_counter() — wall "
+                "clock steps (NTP) corrupt latency math"))
+
+        # -- bare-assert --------------------------------------------------
+        if isinstance(node, ast.Assert):
+            findings.append(make_finding(
+                module, "bare-assert", node,
+                "assert in library code vanishes under python -O; "
+                "raise a typed error for data-integrity invariants"))
+    return findings
+
+
+def _first_arg_is_callable_ref(call: ast.Call) -> bool:
+    """``pool.submit(self._run_build, key, ...)`` is ThreadPoolExecutor's
+    submit, not the engine shim: its first positional arg is a function
+    reference (attribute chain or lambda), where the shim takes a workload
+    string/name."""
+    if not call.args:
+        return False
+    first = call.args[0]
+    return isinstance(first, (ast.Attribute, ast.Lambda))
+
+
+def _receiver_is_executor(call: ast.Call) -> bool:
+    """``pool.submit(...)`` / ``self._build_pool.submit(...)``: receivers
+    named like thread pools are concurrent.futures executors, never the
+    engine shim."""
+    recv = _dotted(call.func.value) or ""  # type: ignore[union-attr]
+    tail = recv.rsplit(".", 1)[-1].lower()
+    return "pool" in tail or "executor" in tail
+
+
+def _is_self_write_in_owner(module: Module, attr: ast.Attribute) -> bool:
+    """``self._counters[...]`` writes inside the class that owns the
+    counter dict are the implementation, not a bypass."""
+    return (isinstance(attr.value, ast.Name) and attr.value.id == "self")

@@ -31,12 +31,19 @@ import zlib
 import jax
 import numpy as np
 
+from repro.obs.locks import named_lock
+
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # guards the worker slot + last error; the join itself happens
+        # outside the lock so a slow disk write never blocks other callers
+        # on the mutex (DESIGN.md §12.2: "checkpoint" is the innermost
+        # hierarchy level)
+        self._lock = named_lock("checkpoint")
         self._thread: threading.Thread | None = None
         self._last_error: Exception | None = None
 
@@ -89,17 +96,22 @@ class CheckpointManager:
             try:
                 self._serialize(step, host, meta or {})
             except Exception as e:  # surfaced on next wait()
-                self._last_error = e
+                with self._lock:
+                    self._last_error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        t = threading.Thread(target=work, daemon=True, name="checkpoint-save")
+        with self._lock:
+            self._thread = t
+        t.start()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._last_error is not None:
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        with self._lock:
             err, self._last_error = self._last_error, None
+        if err is not None:
             raise err
 
     # -- restore -----------------------------------------------------------

@@ -122,7 +122,10 @@ def boruvka_msf_np(u: np.ndarray, v: np.ndarray, ct: np.ndarray, n: int) -> np.n
     """Convenience host wrapper (casts + device round-trip)."""
     if u.shape[0] == 0:
         return np.zeros(0, bool)
-    assert (int(ct.max()) + 1) * (u.shape[0] + 1) < 2**31, "int32 weight overflow"
+    if (int(ct.max()) + 1) * (u.shape[0] + 1) >= 2**31:
+        raise OverflowError(
+            "int32 weight overflow: (max core time + 1) * (edges + 1) = "
+            f"{(int(ct.max()) + 1) * (u.shape[0] + 1)} >= 2**31")
     fn = jax.jit(boruvka_msf, static_argnums=(3,))
     return np.asarray(fn(jnp.asarray(u), jnp.asarray(v), jnp.asarray(ct), int(n)))
 

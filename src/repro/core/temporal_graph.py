@@ -42,10 +42,19 @@ class TemporalGraph:
         return self._t_max
 
     def __post_init__(self):
-        assert self.src.shape == self.dst.shape == self.t.shape
+        if not (self.src.shape == self.dst.shape == self.t.shape):
+            raise ValueError(
+                f"edge arrays disagree: src{self.src.shape} "
+                f"dst{self.dst.shape} t{self.t.shape}")
         if self.m:
-            assert int(self.src.max()) < self.n and int(self.dst.max()) < self.n
-            assert int(self.t.min()) >= 1
+            if int(self.src.max()) >= self.n or int(self.dst.max()) >= self.n:
+                raise ValueError(
+                    f"endpoint id >= n={self.n} "
+                    f"(max src={int(self.src.max())}, "
+                    f"dst={int(self.dst.max())})")
+            if int(self.t.min()) < 1:
+                raise ValueError(
+                    f"timestamps must be >= 1, got min {int(self.t.min())}")
         object.__setattr__(self, "_t_max", int(self.t.max()) if self.m else 0)
 
     # ------------------------------------------------------------------

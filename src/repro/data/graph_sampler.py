@@ -60,7 +60,10 @@ def sample_subgraph_batch(g: CSRGraph, feats: np.ndarray, labels: np.ndarray,
     e_sub = src.shape[0]
     pad_nodes = pad_nodes or n_sub
     pad_edges = pad_edges or int(np.ceil(max(e_sub, 1) / 512)) * 512
-    assert pad_nodes >= n_sub and pad_edges >= e_sub, "pad budget too small"
+    if pad_nodes < n_sub or pad_edges < e_sub:
+        raise ValueError(
+            f"pad budget too small: need >= ({n_sub} nodes, {e_sub} "
+            f"edges), got ({pad_nodes}, {pad_edges})")
 
     node_feat = np.zeros((pad_nodes, feats.shape[1]), np.float32)
     node_feat[:n_sub] = feats[all_nodes]

@@ -42,7 +42,8 @@ def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
     """f32[M, N] = a @ b with (bm, bn, bk) VMEM tiles; pads to multiples."""
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"inner dims disagree: a is (?, {K}), b is ({K2}, ?)")
     Mp, Kp, Np = (int(np.ceil(M / bm)) * bm, int(np.ceil(K / bk)) * bk,
                   int(np.ceil(N / bn)) * bn)
     a_p = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))

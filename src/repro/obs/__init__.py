@@ -15,8 +15,14 @@ layer — core, serving, launch, benchmarks — can import them without cycles:
 * :mod:`repro.obs.export` — Chrome trace-event JSON (loadable in Perfetto /
   ``chrome://tracing``) with a schema validator, and the metrics snapshot
   JSON round-trip.
+* :mod:`repro.obs.locks` — the declared lock hierarchy, ``named_lock`` /
+  ``named_condition`` factories every subsystem uses, and the runtime
+  :class:`LockWitness` that records acquisition edges during tests and
+  cross-checks them against the hierarchy (DESIGN.md §12.2).
 """
 
+from .locks import (LOCK_HIERARCHY, WITNESS, LockWitness, named_condition,
+                    named_lock, witness_enabled)
 from .trace import (NULL_SPAN, SlowQueryLog, Span, SpanContext, Tracer)
 from .registry import LatencyHistogram, MetricsRegistry
 from .export import (chrome_trace_events, metrics_from_json,
@@ -26,6 +32,8 @@ from .export import (chrome_trace_events, metrics_from_json,
 __all__ = [
     "Tracer", "Span", "SpanContext", "SlowQueryLog", "NULL_SPAN",
     "MetricsRegistry", "LatencyHistogram",
+    "LOCK_HIERARCHY", "LockWitness", "WITNESS",
+    "named_lock", "named_condition", "witness_enabled",
     "chrome_trace_events", "write_chrome_trace", "validate_chrome_trace",
     "metrics_to_json", "metrics_from_json",
 ]

@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import math
 import random
-import threading
 from typing import Callable
+
+from .locks import named_lock
 
 
 class LatencyHistogram:
@@ -50,7 +51,7 @@ class LatencyHistogram:
     def __init__(self, cap: int = 65536, seed: int = 0):
         self._cap = cap
         self._rng = random.Random(seed)
-        self._lock = threading.Lock()
+        self._lock = named_lock("histogram")
         self._samples: list[float] = []
         self.count = 0
         self.total = 0.0
@@ -106,7 +107,7 @@ class MetricsRegistry:
     histograms + external stat sources, behind one snapshot surface."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = named_lock("metrics")
         self._counters: dict[str, int] = {}
         self._gauges: dict[str, object] = {}          # value or callable
         self._hists: dict[str, LatencyHistogram] = {}

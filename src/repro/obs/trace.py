@@ -38,6 +38,8 @@ import time
 from collections import deque
 from typing import NamedTuple
 
+from .locks import named_lock
+
 
 class SpanContext(NamedTuple):
     """The portable identity of a span: what crosses a thread boundary."""
@@ -192,10 +194,11 @@ class Tracer:
     """
 
     def __init__(self, capacity: int = 16384, enabled: bool = True):
-        assert capacity >= 1
+        if capacity < 1:
+            raise ValueError(f"tracer capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.enabled = enabled
-        self._lock = threading.Lock()
+        self._lock = named_lock("tracer")
         self._spans: deque[Span] = deque()
         self.dropped = 0
         self._local = threading.local()
@@ -305,7 +308,7 @@ class SlowQueryLog:
         self.threshold_ms = threshold_ms
         self.tracer = tracer
         self.cap = cap
-        self._lock = threading.Lock()
+        self._lock = named_lock("slowlog")
         self._entries: deque[dict] = deque(maxlen=cap)
         self.observed = 0
 

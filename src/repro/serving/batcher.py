@@ -24,6 +24,8 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Callable, Sequence
 
+from repro.obs.locks import named_condition
+
 
 @dataclasses.dataclass
 class Request:
@@ -61,13 +63,14 @@ class MicroBatcher:
     def __init__(self, execute_fn: Callable[[list[Request]], list],
                  *, max_batch: int = 256, flush_ms: float = 2.0,
                  name: str = "batcher", metrics=None):
-        assert max_batch >= 1
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self._execute = execute_fn
         self.max_batch = max_batch
         self.flush_s = flush_ms / 1e3
         self._metrics = metrics
         self._pending: deque[Request] = deque()
-        self._cond = threading.Condition()
+        self._cond = named_condition("batcher")
         self._stop = False
         self._force_flush = False
         self._inflight = 0
@@ -186,7 +189,10 @@ class MicroBatcher:
                 self._metrics.observe("queue_wait", t0 - r.t_enqueue)
         try:
             results = self._execute(batch)
-            assert len(results) == len(batch)
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"execute_fn returned {len(results)} results for a "
+                    f"batch of {len(batch)}")
         except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
             for r in batch:
                 if not r.future.done():

@@ -26,8 +26,9 @@ fills it from batcher worker threads.
 from __future__ import annotations
 
 import dataclasses
-import threading
 from collections import OrderedDict
+
+from repro.obs.locks import named_lock
 
 #: spec-key mode values whose results embed absolute timestamps / edge ids
 #: (EdgeSet.t / edge_id, subgraph timestamps) — never rehomed across a
@@ -43,7 +44,7 @@ class ResultCache:
 
     def __init__(self, capacity: int = 4096):
         self.capacity = capacity
-        self._lock = threading.Lock()
+        self._lock = named_lock("cache")
         self._data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0

@@ -62,12 +62,12 @@ import dataclasses
 import time
 import warnings
 from concurrent.futures import Future
-from threading import Lock
 from typing import Iterable, Sequence
 
 from repro.core.query_api import (InvalidQueryError, Provenance, TCCSQuery,
                                   TCCSResult, WindowSweep, empty_result)
 from repro.obs.export import write_chrome_trace
+from repro.obs.locks import named_lock
 from repro.obs.trace import SlowQueryLog, Tracer
 
 from .batcher import MicroBatcher, Request
@@ -159,7 +159,7 @@ class ServingEngine:
             max_batch=cfg.max_batch)
         # key -> (handle the batcher's execute_fn is bound to, batcher)
         self._batchers: dict[tuple[str, int], tuple[IndexHandle, MicroBatcher]] = {}
-        self._lock = Lock()
+        self._lock = named_lock("engine")
         self._closed = False
         # retention state: per-workload policy + ingest tick. The epoch
         # floor gating cache fills (a handle older than the last retention
@@ -694,7 +694,7 @@ class ServingEngine:
             b = MicroBatcher(
                 self.planner.bind(handle),
                 max_batch=cfg.max_batch, flush_ms=cfg.flush_ms,
-                name=f"batcher-{handle.key[0]}-k{handle.key[1]}",
+                name=f"batcher-dispatch-{handle.key[0]}-k{handle.key[1]}",
                 metrics=self.metrics)
             self._batchers[handle.key] = (handle, b)
         if stale is not None:

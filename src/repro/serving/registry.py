@@ -51,11 +51,11 @@ and rehome the survivors into the shifted timeline.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
+from repro.obs.locks import named_lock
 from repro.obs.trace import NULL_SPAN
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
 from repro.core.core_time import (CoreTimeTable, edge_core_times,
@@ -103,7 +103,8 @@ class IndexHandle:
 class IndexRegistry:
     def __init__(self, capacity: int = 8, metrics=None, on_evict=None,
                  build_workers: int = 2, tracer=None):
-        assert capacity >= 1
+        if capacity < 1:
+            raise ValueError(f"registry capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._metrics = metrics
         # optional repro.obs.trace.Tracer: background builds / refreshes /
@@ -130,7 +131,7 @@ class IndexRegistry:
         self._graphs: dict[str, TemporalGraph] = {}
         self._epochs: dict[str, int] = {}
         self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = named_lock("registry")
         self._pending: dict[tuple[str, int], Future] = {}
         self._build_workers = max(1, int(build_workers))
         self._pool: ThreadPoolExecutor | None = None
@@ -243,7 +244,7 @@ class IndexRegistry:
                      if key[0] == name]
             if stale and self._refresh_pool is None:
                 self._refresh_pool = ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix="index-refresh")
+                    max_workers=1, thread_name_prefix="registry-refresh")
             for key, handle in stale:
                 fut: Future = Future()
                 futures[key] = fut
@@ -381,7 +382,7 @@ class IndexRegistry:
             stale = [key for key in self._entries if key[0] == name]
             if stale and self._refresh_pool is None:
                 self._refresh_pool = ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix="index-refresh")
+                    max_workers=1, thread_name_prefix="registry-refresh")
             for key in stale:
                 fut: Future = Future()
                 futures[key] = fut
@@ -505,7 +506,7 @@ class IndexRegistry:
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(
                     max_workers=self._build_workers,
-                    thread_name_prefix="index-build")
+                    thread_name_prefix="build-pool")
             # submit under the lock: close() also takes it, so the pool
             # cannot shut down between registering the pending future and
             # scheduling its build
@@ -545,7 +546,7 @@ class IndexRegistry:
                     and self._entries.get(key) is handle):
                 if self._refresh_pool is None:
                     self._refresh_pool = ThreadPoolExecutor(
-                        max_workers=1, thread_name_prefix="index-refresh")
+                        max_workers=1, thread_name_prefix="registry-refresh")
                 # capture the pool under the lock: close() nulls the
                 # attribute, and the build future must resolve regardless
                 catchup = (self._refresh_pool, handle, cur_g,

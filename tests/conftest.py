@@ -1,0 +1,40 @@
+"""Suite-wide hooks: the dynamic lock-witness gate (DESIGN.md §12.2).
+
+With ``REPRO_LOCK_WITNESS=1`` (the CI analysis job sets it around the fast
+suite) every ``named_lock``/``named_condition`` in the serving plane is an
+instrumented wrapper reporting acquisition edges into the process-wide
+:data:`repro.obs.locks.WITNESS`. After the last test, the session-scoped
+teardown below cross-checks the observed edges against the declared
+hierarchy, writes the JSON report (CI artifact), and fails the run on any
+rank inversion, undeclared lock, or cycle. Without the env var the
+fixture is inert and the suite pays nothing.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.obs.locks import WITNESS, witness_enabled
+
+
+class LockHierarchyViolation(Exception):
+    pass
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_witness_gate():
+    yield
+    if not witness_enabled():
+        return
+    report = WITNESS.report()
+    out = os.environ.get("REPRO_LOCK_WITNESS_REPORT",
+                         "lock_witness_report.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if report["problems"]:
+        raise LockHierarchyViolation(
+            "observed lock acquisitions violate the declared hierarchy "
+            f"({len(report['problems'])} problem(s); report: {out}):\n"
+            + json.dumps(report["problems"], indent=2))

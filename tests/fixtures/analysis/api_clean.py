@@ -1,0 +1,33 @@
+"""Clean API usage — the negatives: none of this may be flagged."""
+
+import time
+
+
+def uses_v2_surface(engine, spec, pool, fn):
+    r = engine.answer("wl", spec)
+    f = engine.submit_spec("wl", spec)
+    # ThreadPoolExecutor.submit: first arg is a callable reference, not a
+    # workload string — arity alone must not flag it
+    job = pool.submit(fn, "wl", 2, 3, 1, 9)
+    return r, f, job
+
+
+def counts_through_registry(metrics):
+    metrics.count("hits")
+    metrics.observe("e2e", 0.001)
+
+
+def times_with_perf_counter():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0
+
+
+def validates_with_typed_errors(x):
+    if x <= 0:
+        raise ValueError(f"x must be positive, got {x}")
+    return x
+
+
+def suppressed_assert(x):
+    assert x > 0  # repro: ignore[bare-assert]
+    return x

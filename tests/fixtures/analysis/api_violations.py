@@ -1,0 +1,25 @@
+"""Seeded API-discipline violations — parsed by tests, never imported."""
+
+import time
+
+
+def uses_legacy_shims(index, engine):
+    a = index.query(3, 1, 9)                 # deprecated-shim (3-arg query)
+    b = engine.submit("wl", 2, 3, 1, 9)      # deprecated-shim (5-arg submit)
+    c = engine.submit_many("wl", 2, [(3, 1, 9)])   # deprecated-shim
+    return a, b, c
+
+
+def mutates_counters(metrics):
+    metrics._counters["hits"] = 7            # metrics-direct
+    metrics._counters["hits"] += 1           # metrics-direct
+
+
+def times_with_wallclock():
+    t0 = time.time()                         # wallclock-in-traced
+    return t0
+
+
+def has_bare_assert(x):
+    assert x > 0                             # bare-assert
+    return x

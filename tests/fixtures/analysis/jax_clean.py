@@ -1,0 +1,37 @@
+"""Clean JAX idiom — the negatives: none of this may be flagged."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCALE = 2.0   # immutable module constant: fine to close over
+
+
+@jax.jit
+def branches_on_static_metadata(dix, q):
+    # num_nodes/t_max are aux_data of a registered pytree: Python ints at
+    # trace time, safe (and idiomatic) to branch on
+    if dix.num_nodes == 0:
+        return jnp.zeros_like(q)
+    if dix.t_max > 1:
+        q = q * 2
+    return q * SCALE
+
+
+@jax.jit
+def lax_control_flow(x):
+    return jax.lax.cond(x.sum() > 0, lambda v: v, lambda v: -v, x)
+
+
+def host_wrapper(fn, u, ts):
+    # host-side materialization OUTSIDE the traced function: fine
+    out = fn(jnp.asarray(u), jnp.asarray(ts))
+    return np.asarray(out)
+
+
+def host_validation(u, ts):
+    # asserts outside traced code are the bare-assert pass's business (and
+    # this file is a fixture, not library code)
+    if len(u) != len(ts):
+        raise ValueError("length mismatch")
+    return u

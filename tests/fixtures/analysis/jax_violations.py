@@ -1,0 +1,45 @@
+"""Seeded JAX-hygiene violations — parsed by tests, never imported."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MUTABLE_TABLE = {}
+
+
+@jax.jit
+def asserts_on_tracer(x):
+    assert x.sum() > 0          # jit-assert
+    return x * 2
+
+
+@jax.jit
+def branches_on_tracer(x):
+    if x[0] > 0:                # jit-python-branch
+        return x
+    return -x
+
+
+@partial(jax.jit, static_argnums=(1,))
+def syncs_in_trace(x, n):
+    y = x.sum()
+    return np.asarray(y)        # jit-host-sync
+
+
+@jax.jit
+def reads_mutable_global(x):
+    return x * MUTABLE_TABLE["scale"]   # jit-mutable-closure
+
+
+def _kernel(x, y, n):
+    return x + y + n
+
+
+jitted = jax.jit(_kernel, static_argnums=(2,))
+
+
+def call_with_unhashable():
+    x = jnp.zeros(4)
+    return jitted(x, x, [1, 2, 3])      # jit-unhashable-static

@@ -1,0 +1,34 @@
+"""Clean lock usage — the negatives: none of this may be flagged."""
+
+from repro.obs.locks import named_condition, named_lock
+
+
+class GoodNesting:
+    def __init__(self, metrics):
+        self._lock = named_lock("registry")
+        self._cond = named_condition("batcher")
+        self._metrics = metrics
+
+    def downward(self):
+        with self._lock:
+            # registry -> metrics is a declared downward edge
+            self._metrics.count("evictions")
+
+    def sequential_not_nested(self, fut):
+        with self._lock:
+            key = "pending"
+        # blocking work AFTER the lock is released: fine
+        result = fut.result(timeout=5)
+        with self._lock:
+            return key, result
+
+    def callback_not_under_lock(self):
+        with self._lock:
+            # defining a function under a lock is fine — it runs later
+            def cb(f):
+                return f.result()
+            return cb
+
+    def joins_strings(self, parts):
+        with self._lock:
+            return ", ".join(parts)   # str.join is not a thread join

@@ -430,7 +430,7 @@ class TestBackgroundTracing:
             eng.registry.get("g", 2)
             (b,) = eng.tracer.spans(name="index_build")
             assert b.cat == "index" and b.parent_id is None
-            assert "index-build" in b.thread_name
+            assert "build-pool" in b.thread_name
             kids = [s for s in eng.tracer.spans()
                     if s.parent_id == b.span_id]
             assert {s.name for s in kids} == \
@@ -455,7 +455,7 @@ class TestBackgroundTracing:
             assert ref.trace_id == ing.trace_id
             assert ref.parent_id == ing.span_id
             assert ref.tid != ing.tid
-            assert "index-refresh" in ref.thread_name
+            assert "registry-refresh" in ref.thread_name
             assert ref.attrs["swapped"] is True and ref.attrs["epoch"] == 1
             stage_names = {s.name for s in eng.tracer.spans()
                            if s.parent_id == ref.span_id}
