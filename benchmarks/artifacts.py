@@ -41,7 +41,7 @@ import time
 import numpy as np
 
 SCHEMA_VERSION = 1
-AREAS = ("construction", "engine", "streaming", "retention", "sweep")
+AREAS = ("construction", "engine", "streaming", "retention", "sweep", "store")
 
 #: units carrying a time dimension (normalized by dividing by calib_s)
 #: and their scale to seconds

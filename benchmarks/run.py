@@ -54,6 +54,7 @@ def main(argv=None):
     from . import bench_paper as bp
     from . import bench_engine as be
     from . import bench_retention as br
+    from . import bench_store as bst
     from . import bench_streaming as bs
 
     workloads = ["fb_like", "cm_like"] if args.fast else bp.WORKLOADS
@@ -137,6 +138,21 @@ def main(argv=None):
         ["workload", "k", "suffix_edges", "queries_during_refresh",
          "refresh_s", "mean_ms", "worst_ms"],
         bs.bench_availability("fb_like" if args.fast else "em_like"))
+    warm_h, warm_r = _emit(
+        "Persistent store: warm restart vs cold build (beyond paper; "
+        "equality asserted before reporting)",
+        ["workload", "k", "stored_bytes", "cold_total_s", "warm_open_s",
+         "warm_device_s", "warm_total_s", "speedup"],
+        # fast job smoke-runs the small workload without the em_like
+        # sub-second / 10x floors (CI machines are noisy); the full run
+        # asserts both
+        bst.bench_warm_restart(("fb_like",) if args.fast else ("em_like",),
+                               assert_speedup=not args.fast))
+    dlt_h, dlt_r = _emit(
+        "Persistent store: delta vs full commit of a suffix epoch",
+        ["workload", "k", "suffix_edges", "full_bytes", "full_s",
+         "delta_bytes", "delta_s", "delta_bytes_ratio"],
+        bst.bench_delta(("fb_like",) if args.fast else ("em_like",)))
     _emit("Pallas kernel micro (interpret mode vs jnp ref)",
           ["kernel", "pallas_interpret_ms", "jnp_ref_ms"],
           be.bench_kernels())
@@ -149,6 +165,7 @@ def main(argv=None):
             "streaming": (strm_h, strm_r, avail_h, avail_r),
             "retention": (shr_h, shr_r, roll_h, roll_r),
             "sweep": (load_h, load_r),
+            "store": (warm_h, warm_r, dlt_h, dlt_r),
         })
     print(f"\n[benchmarks done in {time.time()-t0:.1f}s; CSVs in results/bench/]")
 
@@ -218,6 +235,18 @@ def write_artifacts(out_dir: str, fast: bool, raw: dict) -> None:
         "rolling_index_bytes_max": (max(_col(roll_r, roll_h, "index_bytes")),
                                     "bytes"),
     }, {"shrink": (shr_h, shr_r), "rolling": (roll_h, roll_r)},
+        machine, fast))
+
+    warm_h, warm_r, dlt_h, dlt_r = raw["store"]
+    paths.append(write_bench_json(out_dir, "store", {
+        "warm_restart_s": (_mean(warm_r, warm_h, "warm_total_s"), "s"),
+        "cold_build_s": (_mean(warm_r, warm_h, "cold_total_s"), "s"),
+        "warm_speedup": (_mean(warm_r, warm_h, "speedup"), "x"),
+        "stored_bytes": (_mean(warm_r, warm_h, "stored_bytes"), "bytes"),
+        "delta_commit_bytes_ratio": (_mean(dlt_r, dlt_h, "delta_bytes_ratio"),
+                                     "frac"),
+        "delta_commit_s": (_mean(dlt_r, dlt_h, "delta_s"), "s"),
+    }, {"warm_restart": (warm_h, warm_r), "delta_commit": (dlt_h, dlt_r)},
         machine, fast))
 
     sw_h, sw_r = raw["sweep"]

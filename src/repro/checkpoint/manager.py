@@ -17,21 +17,24 @@ Design for 1000+ node operation:
 * **Versioning / retention** — monotone step numbers; ``keep`` most recent
   checkpoints survive garbage collection.
 * **Integrity** — every array blob carries a crc32; restore verifies.
+
+The atomic tmp-rename write and the crc32 blob envelope are the shared
+:mod:`repro.store.blobio` primitives — one durable-write idiom for both
+checkpoints and the persistent index store (DESIGN.md §13.1).
 """
 
 from __future__ import annotations
 
-import json
 import os
 import pickle
 import threading
 import time
-import zlib
 
 import jax
 import numpy as np
 
 from repro.obs.locks import named_lock
+from repro.store.blobio import array_blob, atomic_write, blob_array
 
 
 class CheckpointManager:
@@ -52,26 +55,18 @@ class CheckpointManager:
         tmp = os.path.join(self.dir, f"step_{step:010d}.tmp-{os.getpid()}")
         final = os.path.join(self.dir, f"step_{step:010d}.ckpt")
         leaves, treedef = jax.tree_util.tree_flatten(host_tree)
-        blobs = []
-        for leaf in leaves:
-            arr = np.asarray(leaf)
-            raw = arr.tobytes()
-            blobs.append({
-                "dtype": str(arr.dtype), "shape": arr.shape,
-                "crc": zlib.crc32(raw), "raw": raw,
-            })
+        blobs = [array_blob(np.asarray(leaf)) for leaf in leaves]
         payload = {"step": step, "treedef": pickle.dumps(treedef),
                    "meta": meta, "blobs": blobs, "written_at": time.time()}
-        with open(tmp, "wb") as f:
-            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-            f.flush()
-            os.fsync(f.fileno())
-        os.rename(tmp, final)
-        # 'latest' pointer, atomically
-        ptr_tmp = os.path.join(self.dir, f".latest.tmp-{os.getpid()}")
-        with open(ptr_tmp, "w") as f:
-            f.write(os.path.basename(final))
-        os.rename(ptr_tmp, os.path.join(self.dir, "latest"))
+        atomic_write(final,
+                     pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL),
+                     tmp=tmp)
+        # 'latest' pointer, atomically; a lost pointer only costs discovery,
+        # so no fsync on it (matching the segment store's pointer policy)
+        atomic_write(os.path.join(self.dir, "latest"),
+                     os.path.basename(final).encode(),
+                     tmp=os.path.join(self.dir, f".latest.tmp-{os.getpid()}"),
+                     fsync=False)
         self._gc()
 
     def _gc(self):
@@ -136,12 +131,8 @@ class CheckpointManager:
         with open(path, "rb") as f:
             payload = pickle.load(f)
         treedef = pickle.loads(payload["treedef"])
-        leaves = []
-        for blob in payload["blobs"]:
-            arr = np.frombuffer(blob["raw"], dtype=blob["dtype"]).reshape(blob["shape"])
-            if zlib.crc32(blob["raw"]) != blob["crc"]:
-                raise IOError(f"checkpoint {path} failed crc32 verification")
-            leaves.append(arr)
+        leaves = [blob_array(blob, label=f"checkpoint {path}")
+                  for blob in payload["blobs"]]
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             tree = jax.tree.map(

@@ -214,6 +214,7 @@ class Provenance:
     answer* with different traces."""
 
     route: str                       # host | device | sweep | cache | trivial
+                                     # | disk (index promoted from the store)
     backend: str = ""                # pecb | ef | ctmsf | pecb-device | ...
     index_key: tuple | None = None   # (workload, k) when served by the engine
     batch_size: int = 1

@@ -69,6 +69,31 @@ from .temporal_graph import TemporalGraph
 # helpers
 # ----------------------------------------------------------------------
 
+def array_delta(prev, new) -> str:
+    """Classify how ``new`` relates to ``prev`` across one epoch step:
+    ``"reuse"`` (identical), ``"suffix"`` (1-D, ``prev`` is a strict
+    prefix — graph edge arrays under a suffix append), ``"prefix"`` (1-D,
+    ``prev`` is a strict *suffix* — the packed node-table arrays: the cold
+    insertion order is ``(live_to desc, rank asc)``, so an epoch's new
+    overlay nodes renumber *in front of* the old nodes, whose relative
+    order is preserved verbatim), else ``"full"``. The persistent store
+    keys its delta commits on this (DESIGN.md §13.2): reuse re-references
+    the on-disk parts, suffix/prefix write only the changed bytes."""
+    if prev is None:
+        return "full"
+    prev, new = np.asarray(prev), np.asarray(new)
+    if prev.dtype != new.dtype:
+        return "full"
+    if prev.shape == new.shape and np.array_equal(prev, new):
+        return "reuse"
+    if prev.ndim == 1 and new.ndim == 1 and new.size > prev.size:
+        if np.array_equal(new[:prev.size], prev):
+            return "suffix"
+        if np.array_equal(new[new.size - prev.size:], prev):
+            return "prefix"
+    return "full"
+
+
 def _flatten_entries(idx: PECBIndex):
     """(node, ts, l, r, p) flat views of the per-node entry CSR."""
     node = np.repeat(np.arange(idx.num_nodes, dtype=np.int64),

@@ -42,7 +42,17 @@ def main(argv=None):
     ap.add_argument("--slow-query-ms", type=float, default=None,
                     help="log queries slower than this threshold with "
                          "their full span tree")
+    ap.add_argument("--store-dir", metavar="DIR", default=None,
+                    help="persistent index store root (DESIGN.md §13): "
+                         "builds write through to it and a restart "
+                         "promotes the stored index instead of rebuilding")
+    ap.add_argument("--expect-warm", action="store_true",
+                    help="fail unless the warmup index was promoted from "
+                         "the store (warm-restart smoke assertion)")
     args = ap.parse_args(argv)
+
+    if args.expect_warm and not args.store_dir:
+        ap.error("--expect-warm requires --store-dir")
 
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -51,7 +61,8 @@ def main(argv=None):
     cfg = EngineConfig(max_batch=args.batch, flush_ms=args.flush_ms,
                        cache_capacity=args.cache,
                        min_bucket=min(8, args.batch),
-                       slow_query_ms=args.slow_query_ms)
+                       slow_query_ms=args.slow_query_ms,
+                       store_dir=args.store_dir)
     print(f"[engine] workload={args.workload} n={g.n} m={g.m} "
           f"t_max={g.t_max} k={k} config={cfg}")
 
@@ -61,9 +72,22 @@ def main(argv=None):
         # inside the timed replay
         handle = eng.warmup(args.workload, k,
                             full=args.mode in ("edges", "subgraph"))
-        print(f"[warmup] index built in {handle.build_seconds:.2f}s "
+        print(f"[warmup] index {'promoted from store' if handle.source == 'disk' else 'built'} "
+              f"in {handle.build_seconds:.2f}s "
               f"(nodes={handle.pecb.num_nodes} size={handle.nbytes/1e6:.2f} MB); "
               f"buckets compiled in {time.perf_counter() - t0 - handle.build_seconds:.2f}s")
+        if args.store_dir:
+            st = eng.store.stats()
+            print(f"[store] root={st['root']} commits={st['commits']} "
+                  f"(full={st['commits_full']} delta={st['commits_delta']} "
+                  f"noop={st['commits_noop']}) loads={st['loads']} "
+                  f"load_bytes={st['load_bytes']} "
+                  f"recovered={st['recovered_commits']}")
+        if args.expect_warm and handle.source != "disk":
+            raise RuntimeError(
+                f"--expect-warm: warmup fell back to a cold build "
+                f"(source={handle.source!r}) — the store at "
+                f"{args.store_dir!r} held no promotable epoch")
 
         queries = random_queries(g, args.queries, seed=0)
         specs = [TCCSQuery(u, ts, te, k, ResultMode(args.mode))

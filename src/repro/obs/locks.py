@@ -3,8 +3,9 @@
 
 The serving plane is a small zoo of locks: the engine's batcher table, the
 index registry's entry map, each micro-batcher's condition, the result
-cache, the metrics registry, every latency histogram, the tracer ring, the
-slow-query log, and the checkpoint manager's worker slot. Nothing used to
+cache, the persistent index store's counter lock, the metrics registry,
+every latency histogram, the tracer ring, the slow-query log, and the
+checkpoint manager's worker slot. Nothing used to
 *declare* how they may nest — PR 5 shipped a latent refresh-worker race and
 PR 6 retrofitted a lock onto ``LatencyHistogram`` after the fact. This
 module makes the discipline explicit and machine-checkable:
@@ -50,6 +51,11 @@ import threading
 #:   batcher   — MicroBatcher._cond (pending queue; workers count flushes
 #:               into metrics while holding it)
 #:   cache     — ResultCache._lock (LRU map, epoch floors)
+#:   store     — IndexStore._lock (commit/load counters *only*: every byte
+#:               of segment file I/O runs outside it; store code counts
+#:               into metrics, so store ranks above metrics, and registry
+#:               workers persist/demote while logically inside the
+#:               registry plane, so it ranks below registry)
 #:   metrics   — MetricsRegistry._lock (counters/gauges/hist table; the
 #:               registry worker counts evictions under its own lock, so
 #:               metrics must rank below registry)
@@ -59,8 +65,8 @@ import threading
 #:               under any of the above, so the tracer ranks below them)
 #:   checkpoint— CheckpointManager._lock (worker slot + last error)
 LOCK_HIERARCHY: tuple[str, ...] = (
-    "engine", "registry", "batcher", "cache", "metrics", "histogram",
-    "slowlog", "tracer", "checkpoint",
+    "engine", "registry", "batcher", "cache", "store", "metrics",
+    "histogram", "slowlog", "tracer", "checkpoint",
 )
 
 _ENV_FLAG = "REPRO_LOCK_WITNESS"

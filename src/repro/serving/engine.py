@@ -129,6 +129,7 @@ class EngineConfig:
     trace: bool = True           # record query-lifecycle spans (§11)
     trace_buffer: int = 16384    # finished-span ring capacity
     slow_query_ms: float | None = None  # slow-query log threshold (off=None)
+    store_dir: str | None = None  # persistent index store root (§13; off=None)
 
 
 class ServingEngine:
@@ -148,9 +149,17 @@ class ServingEngine:
                                          tracer=self.tracer)
         self.cache = ResultCache(cfg.cache_capacity)
         self._owns_registry = registry is None
+        # persistent index store (DESIGN.md §13): only wired when this
+        # engine owns its registry — a shared registry's store is its
+        # owner's call (and its handles may already be backed elsewhere)
+        self.store = None
+        if self._owns_registry and cfg.store_dir is not None:
+            from repro.store import IndexStore
+            self.store = IndexStore(cfg.store_dir, metrics=self.metrics,
+                                    tracer=self.tracer)
         self.registry = registry if registry is not None else IndexRegistry(
             cfg.registry_capacity, metrics=self.metrics,
-            tracer=self.tracer)
+            tracer=self.tracer, store=self.store)
         self.executor = ShardedExecutor(devices, metrics=self.metrics,
                                         tracer=self.tracer)
         self.planner = QueryPlanner(
@@ -178,6 +187,8 @@ class ServingEngine:
         # planes, exportable as JSON via repro.obs.export.metrics_to_json
         self.metrics.register_source("cache", self.cache.stats)
         self.metrics.register_source("registry", self.registry.stats)
+        if self.store is not None:
+            self.metrics.register_source("store", self.store.stats)
 
     # -- graph/index management -----------------------------------------
     def register_graph(self, name: str, g) -> None:
@@ -797,6 +808,7 @@ class ServingEngine:
             "engine": self.metrics.snapshot(include_sources=False),
             "cache": self.cache.stats(),
             "registry": self.registry.stats(),
+            "store": self.store.stats() if self.store is not None else None,
             "devices": self.executor.num_devices,
             "compiled_programs": self.executor.compile_count(),
             "trace": self.tracer.stats(),

@@ -106,6 +106,11 @@ class QueryPlanner:
         specs = [self._spec_of(r, k) for r in batch]
         store = handle.pecb.versions
         route = self.route(handle, b)
+        # a promoted handle (mmap'd from the persistent store, never
+        # rebuilt) stamps route="disk" on its answers' provenance; the
+        # execution plane still follows `route` — provenance records where
+        # the *index* came from, `backend` keeps the execution detail
+        src_disk = getattr(handle, "source", "build") == "disk"
         t0 = time.perf_counter()
         self._trace_pre_exec(batch, route, t0)
         if route == "host":
@@ -119,10 +124,12 @@ class QueryPlanner:
                 # provenance links to the ROOT query span: the whole tree
                 # is recoverable from the trace id
                 tr, sp = r.span.ids if r.span is not None else (None, None)
-                results.append(dataclasses.replace(
-                    res, provenance=dataclasses.replace(
-                        res.provenance, index_key=handle.key, batch_size=b,
-                        trace_id=tr, span_id=sp)))
+                prov = dataclasses.replace(
+                    res.provenance, index_key=handle.key, batch_size=b,
+                    trace_id=tr, span_id=sp)
+                if src_disk:
+                    prov = dataclasses.replace(prov, route="disk")
+                results.append(dataclasses.replace(res, provenance=prov))
             self.metrics.observe("host_exec", time.perf_counter() - t0)
             self.metrics.count("host_batches")
             self.metrics.count("host_queries", b)
@@ -149,7 +156,7 @@ class QueryPlanner:
             for es in exec_spans:
                 if es is not None:
                     es.end(t_end)
-            prov = Provenance(route="device",
+            prov = Provenance(route="disk" if src_disk else "device",
                               backend="pecb-device" + ("-full" if need_edges else ""),
                               index_key=handle.key, batch_size=b,
                               bucket=bucket, timings={"exec_s": dt})

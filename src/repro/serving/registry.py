@@ -36,6 +36,14 @@ old handle stay consistent (its graph, index and device mirror describe
 one snapshot). Refresh listeners (``add_refresh_listener``) let the engine
 retire the old handle's batcher and run the *targeted* result-cache purge.
 
+Disk tier (DESIGN.md §13): with an :class:`~repro.store.IndexStore`
+attached, the registry is durable — cold builds first try *promotion*
+(mmap the stored epoch + device upload, no rebuild), landed builds and
+epoch swaps are written through (suffix epochs as deltas), LRU eviction
+*demotes* instead of discarding, and unregistered workload names resolve
+from the store's persisted graphs, so a restarted process warm-opens in
+well under a second.
+
 Retention (DESIGN.md §10): ``retain(name, t_cut)`` is the epoch
 lifecycle's second leg — prefix expiry. It expires edges below ``t_cut``,
 rebinds the name to the shifted epoch immediately, and *shrinks* every
@@ -54,6 +62,8 @@ import dataclasses
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
 
 from repro.obs.locks import named_lock
 from repro.obs.trace import NULL_SPAN
@@ -82,6 +92,10 @@ class IndexHandle:
     build_stages: dict = dataclasses.field(default_factory=dict, compare=False)
     epoch: int = 0
     tab: CoreTimeTable | None = dataclasses.field(default=None, compare=False)
+    # how the host arrays got here: "build" (cold construction or epoch
+    # refresh) vs "disk" (promoted from the persistent store — mmap + device
+    # upload, no rebuild). The planner stamps this onto result provenance.
+    source: str = dataclasses.field(default="build", compare=False)
 
     @property
     def nbytes(self) -> int:
@@ -102,11 +116,20 @@ class IndexHandle:
 
 class IndexRegistry:
     def __init__(self, capacity: int = 8, metrics=None, on_evict=None,
-                 build_workers: int = 2, tracer=None):
+                 build_workers: int = 2, tracer=None, store=None):
         if capacity < 1:
             raise ValueError(f"registry capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._metrics = metrics
+        # optional repro.store.IndexStore: the disk tier (DESIGN.md §13.4).
+        # With a store attached, cold builds first try *promotion* (mmap the
+        # stored epoch + device upload — no rebuild), every landed build /
+        # refresh / trim is written through (deltas for epoch steps), and
+        # LRU eviction demotes instead of discarding. All store I/O runs on
+        # the background build/refresh workers, never under the registry
+        # lock, and a store failure only costs durability — the build path
+        # proceeds as if no store were attached.
+        self._store = store
         # optional repro.obs.trace.Tracer: background builds / refreshes /
         # retention trims record spans (the engine passes its tracer when
         # it owns the registry). Epoch mutations accept an explicit parent
@@ -142,6 +165,8 @@ class IndexRegistry:
         self.evictions = 0
         self.refreshes = 0
         self.retentions = 0
+        self.promotions = 0      # cold builds answered from the disk tier
+        self.demotions = 0       # evictions preserved into the disk tier
 
     def add_evict_listener(self, cb) -> None:
         with self._lock:
@@ -198,6 +223,22 @@ class IndexRegistry:
         with self._lock:
             if name in self._graphs:
                 return self._graphs[name]
+        # warm-restart adoption: a store holding this workload's persisted
+        # epochs rebinds the name (and its epoch counter) from disk, so a
+        # restarted process can keep serving — and keep ingesting — a graph
+        # the previous process registered, without re-registration
+        if self._store is not None:
+            try:
+                got = self._store.load_graph(name)
+            except Exception:
+                got = None   # adoption is best-effort; fall through
+            if got is not None:
+                g, epoch = got
+                with self._lock:
+                    if name not in self._graphs:
+                        self._graphs[name] = g
+                        self._epochs[name] = epoch
+                    return self._graphs[name]
         if name in BENCH_WORKLOADS:
             g = bench_graph(name)
             # concurrent cold builds of different k race to generate the
@@ -316,6 +357,10 @@ class IndexRegistry:
                                 upload["reused_bytes"])
         span.set("swapped", swapped).end()
         if swapped:
+            # delta commit against the epoch the store already holds (the
+            # replaced handle was written through when it landed); runs on
+            # this FIFO worker, so per-key commits stay strictly ordered
+            self._persist(key, handle, prev=replaced)
             for cb in listeners:
                 cb(key, replaced, handle)
         fut.set_result(handle)
@@ -462,6 +507,9 @@ class IndexRegistry:
                                 upload["freed_bytes"])
         span.set("swapped", swapped).end()
         if swapped:
+            # prefix-expiry epochs rarely delta (arrays shrink and shift),
+            # but put_handle still avoids a rewrite when nothing changed
+            self._persist(key, handle, prev=replaced)
             for cb in listeners:
                 cb(key, replaced, handle, t_cut)
         fut.set_result(handle)
@@ -525,6 +573,10 @@ class IndexRegistry:
                 self._pending.pop(key, None)
             fut.set_exception(exc)
             return
+        # write-through *before* the future resolves: once any caller has
+        # seen the handle, a crash (even kill -9) must find this epoch on
+        # disk — that ordering is what the CI warm-restart smoke kills
+        self._persist(key, handle)
         evicted = []
         catchup = None
         with self._lock:
@@ -552,6 +604,7 @@ class IndexRegistry:
                 catchup = (self._refresh_pool, handle, cur_g,
                            self._epochs.get(key[0], 0))
         for (k2, h2) in evicted:
+            self._demote(k2, h2)
             for cb in listeners:
                 cb(k2, h2)
         fut.set_result(handle)
@@ -572,6 +625,10 @@ class IndexRegistry:
             # an old graph (or vice versa)
             g = self._graphs.get(workload, g)
             epoch = self._epochs.get(workload, 0)
+        if self._store is not None:
+            promoted = self._promote(key, g, epoch)
+            if promoted is not None:
+                return promoted
         span = self._span("index_build", workload=workload, k=k, epoch=epoch)
         stages = {}
         try:
@@ -609,6 +666,94 @@ class IndexRegistry:
                 self._metrics.observe(f"index_build_{stage}", seconds)
         return handle
 
+    # -- disk tier (DESIGN.md §13.4) --------------------------------------
+    def _promote(self, key: tuple[str, int], g: TemporalGraph,
+                 epoch: int) -> IndexHandle | None:
+        """Try to answer a cold build from the store: mmap the stored
+        epoch, check it describes exactly the graph the build would target
+        (same epoch number *and* identical edge arrays — epoch counters
+        reset across processes, so the arrays are authoritative), upload to
+        the device, and mint a ``source="disk"`` handle. ``None`` on any
+        miss or mismatch — the caller falls through to the cold build."""
+        workload, k = key
+        span = self._span("index_promote", workload=workload, k=k,
+                          epoch=epoch)
+        try:
+            stored = self._store.load(key)
+        except Exception as exc:
+            if self._metrics is not None:
+                self._metrics.count("store_load_failures")
+            span.set("error", repr(exc)).end()
+            return None
+        if stored is None:
+            span.set("outcome", "miss").end()
+            return None
+        sg = stored.graph
+        if not (sg.n == g.n and sg.m == g.m
+                and np.array_equal(sg.src, g.src)
+                and np.array_equal(sg.dst, g.dst)
+                and np.array_equal(sg.t, g.t)):
+            span.set("outcome", "stale").end()
+            return None
+        stages = {}
+        t0 = time.perf_counter()
+        try:
+            dev = to_device(stored.pecb)
+        except Exception as exc:
+            if self._metrics is not None:
+                self._metrics.count("store_load_failures")
+            span.set("error", repr(exc)).end()
+            return None
+        stages["device"] = total = time.perf_counter() - t0
+        span.child("device", t0=t0).end()
+        span.set("outcome", "promoted").end()
+        with self._lock:
+            self.promotions += 1
+        if self._metrics is not None:
+            self._metrics.count("promotions")
+            self._metrics.observe("index_promote", total)
+        # the handle binds the *registry's* graph object (identity matters
+        # to the epoch lifecycle), the store's mmap-backed index arrays,
+        # and the fresh device mirror; build_seconds is the promote cost —
+        # that asymmetry vs the cold build is the whole point
+        return IndexHandle(key, g, stored.pecb, dev, total, stages,
+                           epoch=epoch, tab=stored.tab, source="disk")
+
+    def _persist(self, key: tuple[str, int], handle: IndexHandle,
+                 prev: IndexHandle | None = None) -> dict | None:
+        """Write ``handle`` through to the store (delta against ``prev``
+        when given). Best-effort: failures count a metric and return
+        ``None`` — durability degrades, serving does not."""
+        if self._store is None:
+            return None
+        if handle.source == "disk" and prev is None:
+            return None     # just promoted from this store: already current
+        try:
+            return self._store.put_handle(key, handle, prev=prev)
+        except Exception as exc:
+            if self._metrics is not None:
+                self._metrics.count("store_commit_failures")
+            if self.tracer is not None:
+                self._span("store_commit_failed", workload=key[0], k=key[1],
+                           error=repr(exc)).end()
+            return None
+
+    def _demote(self, key: tuple[str, int], handle: IndexHandle) -> None:
+        """Eviction hook: preserve the evicted handle's epoch in the store
+        (write-through usually already has it — then this is a cheap
+        manifest probe, not a rewrite) instead of discarding built work."""
+        if self._store is None:
+            return
+        res = self._persist(key, handle, prev=None)
+        if res is None and handle.source != "disk":
+            return          # commit failed: nothing preserved
+        with self._lock:
+            self.demotions += 1
+        if self._metrics is not None:
+            self._metrics.count("evictions_demoted")
+            if res is not None and res["mode"] != "current":
+                self._metrics.count("demote_bytes", res["bytes_written"])
+
     def close(self, wait: bool = True) -> None:
         """Stop the build and refresh pools. Pending futures still resolve
         when ``wait=True`` (builds run to completion)."""
@@ -633,6 +778,8 @@ class IndexRegistry:
                 "evictions": self.evictions,
                 "refreshes": self.refreshes,
                 "retentions": self.retentions,
+                "promotions": self.promotions,
+                "demotions": self.demotions,
                 "epochs": dict(self._epochs),
                 "pending": list(self._pending),
                 "resident_bytes": sum(h.nbytes for h in self._entries.values()),

@@ -1,0 +1,275 @@
+"""IndexStore: the registry's disk tier (DESIGN.md §13.3).
+
+Maps one ``(workload, k)`` registry key to one segment directory (see
+:mod:`repro.store.segment`) and speaks the registry's language on both
+sides: ``put_handle`` flattens a built
+:class:`~repro.serving.registry.IndexHandle` — graph arrays, the 14
+packed PECB arrays, the version store, the core-time table — into the
+segment format (as a *delta* against the previous epoch's handle when
+one is supplied), and ``load`` mmaps the newest committed epoch back
+into real host index objects, so a warm restart or an LRU promotion
+pays a device upload instead of a multi-second rebuild.
+
+Locking: ``self._lock`` (hierarchy level ``"store"``) guards the
+counters behind :meth:`stats` and nothing else — every byte of file I/O
+runs outside it (the static lock pass bars blocking calls under any
+hierarchy lock). Write serialization per key is inherited from the
+registry: one key's commits only ever originate from its single cold
+build or the single FIFO epoch worker, never both concurrently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import zlib
+
+import numpy as np
+
+from repro.core.core_time import CoreTimeTable
+from repro.core.pecb_index import PECBIndex
+from repro.core.query_api import VersionStore
+from repro.core.temporal_graph import TemporalGraph
+from repro.obs.locks import named_lock
+from repro.obs.trace import NULL_SPAN
+
+from .segment import open_latest, write_commit
+
+#: the 14 packed arrays of a PECBIndex, in constructor order
+PECB_ARRAYS = (
+    "node_u", "node_v", "node_ct", "node_edge",
+    "node_live_from", "node_live_to",
+    "row_ptr", "ent_ts", "ent_left", "ent_right", "ent_parent",
+    "vrow_ptr", "vent_ts", "vent_node",
+)
+VERSION_ARRAYS = ("edge_id", "ts_from", "ts_to", "ct", "src", "dst", "t")
+TAB_ARRAYS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+
+
+@dataclasses.dataclass
+class StoredIndex:
+    """One stored epoch, rehydrated: everything the registry needs to
+    re-mint an :class:`~repro.serving.registry.IndexHandle` minus the
+    device mirror (the promoter uploads). Arrays are read-only views into
+    the mmap'd segments wherever the layout allows (single-part)."""
+
+    key: tuple[str, int]
+    epoch: int
+    build_seconds: float
+    graph: TemporalGraph
+    pecb: PECBIndex
+    tab: CoreTimeTable | None
+    manifest: dict
+    recovered: int = 0     # newer, invalid commits skipped on the way here
+
+    @property
+    def nbytes(self) -> int:
+        return self.pecb.nbytes()
+
+
+def _safe(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]", "_", name)
+
+
+def key_dirname(key: tuple[str, int]) -> str:
+    """Directory name for one (workload, k) key: a sanitized readable stem
+    plus a crc32 of the exact name (collision-proofing the sanitizer) and
+    the k. The authoritative key lives in the manifest meta."""
+    name, k = key
+    return f"{_safe(name)}__{zlib.crc32(name.encode()):08x}__k{int(k)}"
+
+
+class IndexStore:
+    def __init__(self, root: str, metrics=None, tracer=None, *,
+                 max_chain: int = 4, keep_manifests: int = 2,
+                 verify: bool = True):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self._metrics = metrics
+        self.tracer = tracer
+        self._max_chain = int(max_chain)
+        self._keep = int(keep_manifests)
+        self._verify = bool(verify)
+        self._lock = named_lock("store")
+        self._counters = {
+            "commits": 0, "commits_full": 0, "commits_delta": 0,
+            "commits_noop": 0, "bytes_written": 0,
+            "loads": 0, "load_bytes": 0, "recovered_commits": 0,
+        }
+
+    def _span(self, name: str, **attrs):
+        if self.tracer is None:
+            return NULL_SPAN
+        return self.tracer.start_span(name, cat="store", **attrs)
+
+    def _dir(self, key) -> str:
+        return os.path.join(self.root, key_dirname(key))
+
+    # -- write path ------------------------------------------------------
+    def put_handle(self, key, handle, prev=None) -> dict:
+        """Persist ``handle`` as key's next committed epoch. ``prev`` (the
+        handle the epoch lifecycle grew/shrunk ``handle`` from) enables a
+        delta commit when it matches the epoch already on disk. Returns
+        ``{"mode", "epoch", "bytes_written"}``; ``mode="current"`` means
+        the store already holds this epoch and nothing was written (the
+        demote-after-write-through case)."""
+        dirpath = self._dir(key)
+        span = self._span("store_commit", workload=key[0], k=key[1],
+                          epoch=handle.epoch)
+        try:
+            os.makedirs(dirpath, exist_ok=True)
+            probe = open_latest(dirpath, load=False)
+            on_disk = probe[0] if probe is not None else None
+            if on_disk is not None and on_disk["epoch"] == handle.epoch:
+                span.set("mode", "current").end()
+                self._count(commits_noop=1)
+                return {"mode": "current", "epoch": handle.epoch,
+                        "bytes_written": 0}
+            prev_pair = None
+            if (prev is not None and on_disk is not None
+                    and on_disk["epoch"] == prev.epoch):
+                prev_pair = (on_disk, self._handle_arrays(prev))
+            res = write_commit(
+                dirpath, self._handle_meta(key, handle),
+                self._handle_arrays(handle), prev_pair,
+                max_chain=self._max_chain, keep_manifests=self._keep)
+        except BaseException as exc:
+            span.set("error", repr(exc)).end()
+            raise
+        span.set("mode", res["mode"]).set("bytes", res["bytes_written"]).end()
+        self._count(commits=1, bytes_written=res["bytes_written"],
+                    **{f"commits_{res['mode']}": 1})
+        if self._metrics is not None:
+            self._metrics.count("store_commits")
+            self._metrics.count("store_commit_bytes", res["bytes_written"])
+        return {"mode": res["mode"], "epoch": handle.epoch,
+                "bytes_written": res["bytes_written"]}
+
+    @staticmethod
+    def _handle_meta(key, handle) -> dict:
+        g = handle.graph
+        return {
+            "workload": key[0], "k": int(key[1]),
+            "epoch": int(handle.epoch),
+            "n": int(g.n), "m": int(g.m), "t_max": int(g.t_max),
+            "build_seconds": float(handle.build_seconds),
+            "has_versions": handle.pecb.versions is not None,
+            "has_tab": handle.tab is not None,
+        }
+
+    @staticmethod
+    def _handle_arrays(handle) -> dict:
+        g, idx = handle.graph, handle.pecb
+        out = {"graph.src": g.src, "graph.dst": g.dst, "graph.t": g.t}
+        for f in PECB_ARRAYS:
+            out[f"pecb.{f}"] = getattr(idx, f)
+        if idx.versions is not None:
+            for f in VERSION_ARRAYS:
+                out[f"versions.{f}"] = getattr(idx.versions, f)
+        if handle.tab is not None:
+            for f in TAB_ARRAYS:
+                out[f"tab.{f}"] = getattr(handle.tab, f)
+        return out
+
+    # -- read path -------------------------------------------------------
+    def current_epoch(self, key) -> int | None:
+        """Epoch of the newest structurally valid commit, or ``None`` —
+        without loading (or crc-verifying) any array bytes."""
+        probe = open_latest(self._dir(key), load=False)
+        return None if probe is None else int(probe[0]["epoch"])
+
+    def load(self, key) -> StoredIndex | None:
+        """mmap the newest valid commit back into host index objects;
+        ``None`` when the key has no loadable commit."""
+        dirpath = self._dir(key)
+        span = self._span("store_open", workload=key[0], k=key[1])
+        try:
+            got = open_latest(dirpath, verify=self._verify)
+            if got is None:
+                span.set("outcome", "miss").end()
+                return None
+            man, arrays, recovered = got
+            meta = man["meta"]
+            n, m, t_max = meta["n"], meta["m"], meta["t_max"]
+            k = meta["k"]
+            g = TemporalGraph(n, arrays["graph.src"], arrays["graph.dst"],
+                              arrays["graph.t"])
+            versions = None
+            if meta.get("has_versions"):
+                versions = VersionStore(
+                    n, t_max, k,
+                    *(arrays[f"versions.{f}"] for f in VERSION_ARRAYS))
+            idx = PECBIndex(
+                n, m, t_max, k,
+                *(arrays[f"pecb.{f}"] for f in PECB_ARRAYS),
+                versions=versions)
+            tab = None
+            if meta.get("has_tab"):
+                tab = CoreTimeTable(
+                    n, m, t_max,
+                    *(arrays[f"tab.{f}"] for f in TAB_ARRAYS))
+        except BaseException as exc:
+            span.set("error", repr(exc)).end()
+            raise
+        nbytes = sum(int(a.nbytes) for a in arrays.values())
+        span.set("epoch", meta["epoch"]).set("bytes", nbytes)
+        span.set("recovered", recovered).end()
+        self._count(loads=1, load_bytes=nbytes, recovered_commits=recovered)
+        if self._metrics is not None:
+            self._metrics.count("store_loads")
+            self._metrics.count("store_load_bytes", nbytes)
+            if recovered:
+                self._metrics.count("store_recovered_commits", recovered)
+        return StoredIndex(
+            key=(meta["workload"], k), epoch=int(meta["epoch"]),
+            build_seconds=float(meta.get("build_seconds", 0.0)),
+            graph=g, pecb=idx, tab=tab, manifest=man, recovered=recovered)
+
+    def keys(self) -> list[tuple[str, int]]:
+        """Every (workload, k) key with at least one valid commit on disk."""
+        out = []
+        for entry in sorted(os.listdir(self.root)):
+            probe = open_latest(os.path.join(self.root, entry), load=False)
+            if probe is not None:
+                meta = probe[0]["meta"]
+                out.append((meta["workload"], int(meta["k"])))
+        return out
+
+    def load_graph(self, name: str):
+        """``(graph, epoch)`` of workload ``name``'s newest stored epoch
+        across all its k-keys — the warm path for ``resolve_graph`` on an
+        unregistered name — or ``None``. Graph arrays are *copied* out of
+        the mapping: the adopted graph outlives any one commit's files."""
+        best = None
+        for entry in sorted(os.listdir(self.root)):
+            dirpath = os.path.join(self.root, entry)
+            probe = open_latest(dirpath, load=False)
+            if probe is None or probe[0]["meta"]["workload"] != name:
+                continue
+            if best is None or probe[0]["epoch"] > best[0]["epoch"]:
+                best = (probe[0], dirpath)
+        if best is None:
+            return None
+        man, dirpath = best
+        from .segment import load_arrays
+        arrays = load_arrays(dirpath, man,
+                             names={"graph.src", "graph.dst", "graph.t"},
+                             verify=self._verify)
+        g = TemporalGraph(man["meta"]["n"],
+                          arrays["graph.src"].copy(),
+                          arrays["graph.dst"].copy(),
+                          arrays["graph.t"].copy())
+        return g, int(man["epoch"])
+
+    # -- accounting ------------------------------------------------------
+    def _count(self, **deltas) -> None:
+        with self._lock:
+            for name, d in deltas.items():
+                self._counters[name] += int(d)
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self._counters)
+        out["root"] = self.root
+        return out

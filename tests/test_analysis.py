@@ -382,7 +382,7 @@ class TestNamedFactories:
 
     def test_hierarchy_covers_every_subsystem(self):
         assert LOCK_HIERARCHY == (
-            "engine", "registry", "batcher", "cache", "metrics",
+            "engine", "registry", "batcher", "cache", "store", "metrics",
             "histogram", "slowlog", "tracer", "checkpoint")
 
 

@@ -1,7 +1,9 @@
 """Fault tolerance: checkpoint/restart, failure injection, stragglers,
-elastic remesh, gradient compression numerics."""
+elastic remesh, gradient compression numerics, and crash recovery of the
+persistent index store (DESIGN.md §13.5)."""
 
 import os
+import shutil
 
 import numpy as np
 import pytest
@@ -10,10 +12,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core.temporal_graph import gen_temporal_graph
 from repro.runtime.fault_tolerance import (FailureInjector, HeartbeatMonitor,
                                            RecoverableError, RestartingRunner)
 from repro.runtime.elastic import remesh
 from repro.optim import compression, adamw
+from repro.serving.registry import IndexRegistry
+from repro.store import IndexStore
+from repro.store.index_store import key_dirname
+
+from test_streaming import assert_pecb_identical, split_epoch
 
 
 class TestCheckpointManager:
@@ -162,3 +170,139 @@ class TestCompression:
             grads = {"w": 2 * params["w"]}
             params, state, _ = adamw.apply_updates(cfg, params, grads, state)
         assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+class TestStoreCrashRecovery:
+    """Kill-the-writer fault injection on the persistent index store: every
+    crash mode must reopen to the *last committed epoch* and serve an index
+    bit-identical to the one that was live at that commit. The commit point
+    is the manifest rename — everything short of it is ignorable debris."""
+
+    KEY = ("crash", 2)
+
+    @pytest.fixture(scope="class")
+    def committed(self, tmp_path_factory):
+        """Two committed epochs (cold full + suffix-ingest delta) with the
+        live handles that produced them. Tests copy the directory before
+        injecting damage, so the class pays the two builds once."""
+        root = str(tmp_path_factory.mktemp("store-src"))
+        g = gen_temporal_graph(n=40, m=320, t_max=20, seed=13)
+        g0, suffix = split_epoch(g, 0.7)
+        reg = IndexRegistry(store=IndexStore(root))
+        reg.register_graph("crash", g0)
+        h0 = reg.get("crash", 2)
+        h1 = reg.extend_graph("crash", suffix)[self.KEY].result(timeout=60)
+        g1 = reg.resolve_graph("crash")
+        reg.close()
+        return root, h0, h1, g0, g1
+
+    def _wreck(self, committed, tmp_path):
+        """A private, mutable copy of the committed store + its key dir."""
+        root = str(tmp_path / "store")
+        shutil.copytree(committed[0], root)
+        return root, os.path.join(root, key_dirname(self.KEY))
+
+    def _reopen(self, root, graph=None):
+        """Fresh-process reopen: no register_graph unless a specific epoch's
+        graph is forced (resolve_graph otherwise adopts from the store)."""
+        reg = IndexRegistry(store=IndexStore(root))
+        if graph is not None:
+            reg.register_graph("crash", graph)
+        try:
+            return reg, reg.get("crash", 2)
+        finally:
+            reg.close()
+
+    def _manifests(self, d):
+        return sorted(n for n in os.listdir(d) if n.startswith("manifest_"))
+
+    def test_killed_mid_segment_write_is_ignored(self, committed, tmp_path):
+        root, d = self._wreck(committed, tmp_path)
+        # a writer died after staging bytes but before the manifest rename:
+        # a tmp file and an orphaned (unreferenced) renamed segment
+        with open(os.path.join(d, "seg_00000003.bin.tmp-999"), "wb") as f:
+            f.write(b"\x00" * 100)
+        with open(os.path.join(d, "seg_00000003.bin"), "wb") as f:
+            f.write(b"\x00" * 100)
+        reg, h = self._reopen(root)
+        assert h.source == "disk" and h.epoch == 1
+        assert_pecb_identical(h.pecb, committed[2].pecb)
+        # and a recovered writer never reuses the crashed commit's names
+        from repro.store.segment import next_seq
+        assert next_seq(d) >= 4
+
+    def test_truncated_manifest_recovers_prior_epoch(self, committed,
+                                                     tmp_path):
+        root, d = self._wreck(committed, tmp_path)
+        newest = self._manifests(d)[-1]
+        with open(os.path.join(d, newest), "r+b") as f:
+            f.truncate(25)
+        reg, h = self._reopen(root)
+        assert h.source == "disk" and h.epoch == 0
+        assert_pecb_identical(h.pecb, committed[1].pecb)
+
+    def test_corrupted_segment_crc_recovers_prior_epoch(self, committed,
+                                                        tmp_path):
+        import json
+        root, d = self._wreck(committed, tmp_path)
+        mans = self._manifests(d)
+        with open(os.path.join(d, mans[0])) as f:
+            base_segs = set(json.load(f)["segments"])
+        with open(os.path.join(d, mans[-1])) as f:
+            delta_segs = set(json.load(f)["segments"]) - base_segs
+        assert delta_segs, "epoch 1 should have written its own segment"
+        target = os.path.join(d, sorted(delta_segs)[0])
+        with open(target, "r+b") as f:
+            f.seek(7)
+            byte = f.read(1)
+            f.seek(7)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        # the structurally-valid-but-bit-rotted manifest defeats graph
+        # adoption for epoch 1; a caller holding epoch 0's graph (the last
+        # good commit) still promotes it
+        store = IndexStore(root)
+        reg = IndexRegistry(store=store)
+        reg.register_graph("crash", committed[3])
+        h = reg.get("crash", 2)
+        reg.close()
+        assert h.source == "disk" and h.epoch == 0
+        assert_pecb_identical(h.pecb, committed[1].pecb)
+        assert store.stats()["recovered_commits"] == 1
+
+    def test_lost_latest_pointer_is_harmless(self, committed, tmp_path):
+        root, d = self._wreck(committed, tmp_path)
+        os.remove(os.path.join(d, "latest"))
+        reg, h = self._reopen(root)
+        assert h.source == "disk" and h.epoch == 1
+        assert_pecb_identical(h.pecb, committed[2].pecb)
+
+    def test_total_loss_falls_back_to_cold_build(self, committed, tmp_path):
+        root, d = self._wreck(committed, tmp_path)
+        for name in os.listdir(d):
+            if name.startswith("seg_"):
+                os.remove(os.path.join(d, name))
+        reg, h = self._reopen(root, graph=committed[4])
+        assert h.source == "build" and reg.builds == 1
+        assert_pecb_identical(h.pecb, committed[2].pecb)
+
+    def test_recovered_store_keeps_committing(self, committed, tmp_path):
+        """After recovery the writer continues the epoch chain: re-commit
+        the lost epoch, reopen, and the store serves it."""
+        root, d = self._wreck(committed, tmp_path)
+        newest = self._manifests(d)[-1]
+        with open(os.path.join(d, newest), "r+b") as f:
+            f.truncate(10)
+        store = IndexStore(root)
+        reg = IndexRegistry(store=store)
+        reg.register_graph("crash", committed[3])
+        assert reg.get("crash", 2).epoch == 0       # recovered to epoch 0
+        g1 = committed[4]
+        suffix = [(int(u), int(v), int(t)) for u, v, t in
+                  zip(g1.src[committed[3].m:], g1.dst[committed[3].m:],
+                      g1.t[committed[3].m:])]
+        h1b = reg.extend_graph("crash", suffix)[self.KEY].result(timeout=60)
+        reg.close()
+        assert h1b.epoch == 1
+        stored = IndexStore(root).load(self.KEY)
+        assert stored.epoch == 1
+        assert_pecb_identical(stored.pecb, committed[2].pecb)
