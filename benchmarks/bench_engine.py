@@ -81,7 +81,7 @@ def bench_engine_load_sweep(name: str = "fb_like",
     for load in loads:
         cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
         with ServingEngine(cfg, registry=registry) as eng:
-            eng.warmup(name, k)
+            eng.warmup(name)
             t0 = time.perf_counter()
             futures = []
             if load:
@@ -113,6 +113,39 @@ def bench_engine_load_sweep(name: str = "fb_like",
                 counters.get("device_batches", 0),
                 counters.get("host_batches", 0),
             ])
+    # mixed-k offered load (PR-9 tentpole): the same open-loop replay
+    # with k drawn per query from the handle's supported strata — one
+    # stratified handle, one device program per bucket shape, zero
+    # per-k registry entries
+    h = registry.get(name)
+    krng = np.random.default_rng(seed + 1)
+    kq = [int(krng.choice(h.supported_ks)) for _ in queries]
+    cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
+    with ServingEngine(cfg, registry=registry) as eng:
+        eng.warmup(name)
+        t0 = time.perf_counter()
+        futures = []
+        for i in range(0, len(queries), cfg.max_batch):
+            futures += eng.submit_specs(
+                name, [TCCSQuery(u, ts, te, kk)
+                       for (u, ts, te), kk in
+                       zip(queries[i:i + cfg.max_batch],
+                           kq[i:i + cfg.max_batch])])
+        eng.flush()
+        for f in futures:
+            f.result(timeout=300)
+        dt = time.perf_counter() - t0
+        snap = eng.stats()
+        e2e = snap["engine"]["latency"]["e2e"]
+        counters = snap["engine"]["counters"]
+        rows.append([
+            name, "mix", "mixed_k", n_q,
+            round(n_q / dt, 1),
+            round(e2e["p50_ms"], 3), round(e2e["p95_ms"], 3),
+            round(e2e["p99_ms"], 3),
+            counters.get("device_batches", 0),
+            counters.get("host_batches", 0),
+        ])
     write_csv("engine_load_sweep.csv",
               ["workload", "k", "offered_qps", "queries", "achieved_qps",
                "p50_ms", "p95_ms", "p99_ms", "device_batches", "host_batches"],
@@ -147,7 +180,7 @@ def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
     # -- W independent submits (the pre-v2 client loop) -------------------
     cfg = EngineConfig(max_batch=256, flush_ms=2.0, cache_capacity=0)
     with ServingEngine(cfg, registry=registry) as eng:
-        eng.warmup(name, k)
+        eng.warmup(name)
         t0 = time.perf_counter()
         per_win = [eng.submit_spec(name, TCCSQuery(u, ts, te, k))
                       .result(timeout=300).vertices
@@ -164,7 +197,8 @@ def bench_window_sweep(name: str = "fb_like", W: int = 64, seed: int = 11,
 
     # -- one WindowSweep call --------------------------------------------
     with ServingEngine(cfg, registry=registry) as eng:
-        eng.warmup(name, k, sweep=True)   # compile outside the measurement
+        # compile outside the measurement (the swept k's stratum only)
+        eng.warmup(name, sweep=True, sweep_ks=(k,))
         t0 = time.perf_counter()
         swept = eng.sweep(name, WindowSweep(u, k, windows), timeout=300)
         dt_sweep = time.perf_counter() - t0
@@ -219,7 +253,7 @@ def bench_trace_overhead(name: str = "fb_like", n_q: int = 512,
             cfg = EngineConfig(max_batch=256, flush_ms=2.0,
                                cache_capacity=0, trace=trace)
             with ServingEngine(cfg, registry=registry) as eng:
-                eng.warmup(name, k)
+                eng.warmup(name)
                 t0 = time.perf_counter()
                 futures = []
                 for i in range(0, len(queries), cfg.max_batch):

@@ -6,7 +6,8 @@ Two scenarios:
   through the :class:`repro.store.IndexStore`, then time a fresh store
   object (a "restarted process") mmap-loading + crc-verifying + device-
   uploading the stored epoch against the full cold build
-  (``edge_core_times`` + ``build_pecb_index`` + ``to_device``).
+  (``stratified_core_times`` + ``build_stratified_index`` +
+  ``to_device``).
   **Equality is asserted before any number is reported** — every packed
   array, the version store, the core-time table and the graph arrays of
   the promoted index must be bit-identical to the cold build's. On
@@ -29,16 +30,24 @@ import tempfile
 import numpy as np
 
 from repro.core.batch_query import to_device
-from repro.core.core_time import edge_core_times, extend_core_times
-from repro.core.pecb_index import build_pecb_index
-from repro.core.streaming import extend_pecb_index
+from repro.core.core_time import (extend_stratified_core_times,
+                                  stratified_core_times)
+from repro.core.pecb_index import build_stratified_index
+from repro.core.streaming import extend_stratified_index
 from repro.serving.registry import IndexHandle
 from repro.store import IndexStore
 
 from .bench_streaming import PECB_FIELDS, _split
-from .common import default_k, timed, workload, write_csv
+from .common import timed, workload, write_csv
 
-TAB_FIELDS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+#: the stratified table's stored arrays (per-k record blocks + RLE
+#: vertex runs); the pre-PR-9 dense ``vertex_ct`` matrix is gone
+TAB_FIELDS = ("kptr", "edge_id", "ts_from", "ts_to", "ct",
+              "vptr", "v_ts_from", "v_ts_to", "v_ct")
+
+#: k-stratified extras on top of the 14 shared packed arrays
+STRAT_FIELDS = ("knode_ptr", "kent_ptr", "kvent_ptr",
+                "ver_src", "ver_dst", "ver_t")
 
 #: acceptance floors asserted on em_like (the ISSUE's target workload):
 #: a warm restart must be sub-second and an order of magnitude cheaper
@@ -47,14 +56,15 @@ MIN_WARM_SPEEDUP = 10.0
 MAX_WARM_RESTART_S = 1.0
 
 
-def _handle(name, g, k, tab, idx, dev, epoch=0):
-    return IndexHandle((name, k), g, idx, dev, 0.0, epoch=epoch, tab=tab)
+def _handle(name, g, tab, idx, dev, epoch=0):
+    return IndexHandle(name, g, idx, dev, 0.0, epoch=epoch, tab=tab)
 
 
 def _assert_promoted_identical(stored, g, tab, idx):
-    for f in PECB_FIELDS:
+    for f in PECB_FIELDS + STRAT_FIELDS:
         assert np.array_equal(getattr(stored.pecb, f), getattr(idx, f)), \
             f"stored index diverged from cold build on {f}"
+    assert stored.pecb.supported_ks == idx.supported_ks
     assert stored.pecb.versions == idx.versions, "version stores diverged"
     for f in TAB_FIELDS:
         assert np.array_equal(getattr(stored.tab, f), getattr(tab, f)), \
@@ -73,23 +83,23 @@ def bench_warm_restart(workloads=("em_like",), assert_speedup: bool = True,
     rows = []
     for name in workloads:
         g = workload(name)
-        k = default_k(name)
         root = tempfile.mkdtemp(prefix="bench-store-")
         try:
             cold_s = None
             for _ in range(max(1, reps)):
-                tab, t_tab = timed(edge_core_times, g, k)
-                idx, t_idx = timed(build_pecb_index, g, k, tab)
+                tab, t_tab = timed(stratified_core_times, g)
+                idx, t_idx = timed(
+                    lambda: build_stratified_index(g, strata=tab))
                 dev, t_dev = timed(to_device, idx)
                 cold_s = min(cold_s or 1e9, t_tab + t_idx + t_dev)
             res = IndexStore(root).put_handle(
-                (name, k), _handle(name, g, k, tab, idx, dev))
+                name, _handle(name, g, tab, idx, dev))
             assert res["mode"] == "full"
 
             best = None
             for _ in range(max(1, reps)):
                 store = IndexStore(root)          # a restarted process
-                stored, t_open = timed(store.load, (name, k))
+                stored, t_open = timed(store.load, name)
                 _, t_up = timed(to_device, stored.pecb)
                 if best is None or t_open + t_up < best[0] + best[1]:
                     best = (t_open, t_up, stored)
@@ -107,13 +117,14 @@ def bench_warm_restart(workloads=("em_like",), assert_speedup: bool = True,
                 assert speedup >= MIN_WARM_SPEEDUP, (
                     f"em_like warm restart speedup {speedup:.2f}x fell "
                     f"below the {MIN_WARM_SPEEDUP}x acceptance floor")
-            rows.append([name, k, res["bytes_written"], round(cold_s, 4),
+            rows.append([name, len(idx.supported_ks), res["bytes_written"],
+                         round(cold_s, 4),
                          round(t_open, 4), round(t_up, 4), round(warm_s, 4),
                          round(speedup, 2)])
         finally:
             shutil.rmtree(root, ignore_errors=True)
     write_csv("store.csv",
-              ["workload", "k", "stored_bytes", "cold_total_s",
+              ["workload", "n_ks", "stored_bytes", "cold_total_s",
                "warm_open_s", "warm_device_s", "warm_total_s", "speedup"],
               rows)
     return rows
@@ -125,37 +136,36 @@ def bench_delta(workloads=("em_like",), frac: float = 0.98):
     rows = []
     for name in workloads:
         g = workload(name)
-        k = default_k(name)
         g0, suffix = _split(g, frac)
-        tab0 = edge_core_times(g0, k)
-        idx0 = build_pecb_index(g0, k, tab0)
+        tab0 = stratified_core_times(g0)
+        idx0 = build_stratified_index(g0, strata=tab0)
         dev0 = to_device(idx0)
         g1 = g0.extend(suffix)
-        tab1 = extend_core_times(g1, k, tab0)
-        idx1 = extend_pecb_index(g1, k, tab1, idx0)
-        h0 = _handle(name, g0, k, tab0, idx0, dev0)
-        h1 = _handle(name, g1, k, tab1, idx1, dev0, epoch=1)
+        tab1 = extend_stratified_core_times(g1, tab0)
+        idx1 = extend_stratified_index(g1, idx0, strata=tab1)
+        h0 = _handle(name, g0, tab0, idx0, dev0)
+        h1 = _handle(name, g1, tab1, idx1, dev0, epoch=1)
 
         root = tempfile.mkdtemp(prefix="bench-store-")
         try:
             store = IndexStore(root)
-            store.put_handle((name, k), h0)
-            delta, t_delta = timed(store.put_handle, (name, k), h1, prev=h0)
+            store.put_handle(name, h0)
+            delta, t_delta = timed(store.put_handle, name, h1, prev=h0)
             assert delta["mode"] == "delta", delta
         finally:
             shutil.rmtree(root, ignore_errors=True)
         root = tempfile.mkdtemp(prefix="bench-store-")
         try:
-            full, t_full = timed(IndexStore(root).put_handle, (name, k), h1)
+            full, t_full = timed(IndexStore(root).put_handle, name, h1)
             assert full["mode"] == "full"
         finally:
             shutil.rmtree(root, ignore_errors=True)
-        rows.append([name, k, len(suffix),
+        rows.append([name, len(idx1.supported_ks), len(suffix),
                      full["bytes_written"], round(t_full, 4),
                      delta["bytes_written"], round(t_delta, 4),
                      round(delta["bytes_written"] / full["bytes_written"], 3)])
     write_csv("store_delta.csv",
-              ["workload", "k", "suffix_edges", "full_bytes", "full_s",
+              ["workload", "n_ks", "suffix_edges", "full_bytes", "full_s",
                "delta_bytes", "delta_s", "delta_bytes_ratio"],
               rows)
     return rows

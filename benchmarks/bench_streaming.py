@@ -130,13 +130,13 @@ def bench_availability(name: str = "em_like", frac: float = 0.98,
     rows = []
     with ServingEngine(EngineConfig(flush_ms=1.0)) as eng:
         eng.register_graph(name + "@stream", g0)
-        eng.warmup(name + "@stream", k)
+        eng.warmup(name + "@stream")
         qs = random_queries(g0, n_q, seed=7)
         # prime the serving path so in-refresh latencies measure steady
         # state, not the first request's batcher deadline
         eng.answer(name + "@stream", TCCSQuery(*qs[0], k))
         futures = eng.ingest(name + "@stream", suffix)
-        refresh_fut = futures[(name + "@stream", k)]
+        refresh_fut = futures[name + "@stream"]
         lat, during = [], 0
         i = 0
         # always issue at least one query: on tiny smoke workloads the

@@ -65,6 +65,16 @@ def main(argv=None):
         ["workload", "k", "pr1_core_s", "pr1_forest_s", "pr1_total_s",
          "batched_core_s", "batched_forest_s", "batched_total_s", "speedup"],
         bc.bench_construction_plane(workloads))
+    strat_h, strat_r = _emit(
+        "Stratified construction: one |K|-build vs per-k builds "
+        "(equality asserted per stratum before reporting)",
+        ["workload", "n_ks", "ks", "perk_build_s", "strat_build_s",
+         "build_speedup", "perk_mb", "strat_mb", "bytes_ratio"],
+        # the fast job smoke-runs the small workload without the em_like
+        # 3x / 2x floors (CI machines are noisy); the full run asserts both
+        bc.bench_stratified_construction(
+            "fb_like" if args.fast else "em_like",
+            assert_floors=not args.fast))
     _emit("Index space (Fig 4)",
           ["workload", "k", "pecb_bytes", "ctmsf_bytes", "ef_bytes", "ef/pecb"],
           bp.bench_index_size(workloads))
@@ -141,7 +151,7 @@ def main(argv=None):
     warm_h, warm_r = _emit(
         "Persistent store: warm restart vs cold build (beyond paper; "
         "equality asserted before reporting)",
-        ["workload", "k", "stored_bytes", "cold_total_s", "warm_open_s",
+        ["workload", "n_ks", "stored_bytes", "cold_total_s", "warm_open_s",
          "warm_device_s", "warm_total_s", "speedup"],
         # fast job smoke-runs the small workload without the em_like
         # sub-second / 10x floors (CI machines are noisy); the full run
@@ -150,7 +160,7 @@ def main(argv=None):
                                assert_speedup=not args.fast))
     dlt_h, dlt_r = _emit(
         "Persistent store: delta vs full commit of a suffix epoch",
-        ["workload", "k", "suffix_edges", "full_bytes", "full_s",
+        ["workload", "n_ks", "suffix_edges", "full_bytes", "full_s",
          "delta_bytes", "delta_s", "delta_bytes_ratio"],
         bst.bench_delta(("fb_like",) if args.fast else ("em_like",)))
     _emit("Pallas kernel micro (interpret mode vs jnp ref)",
@@ -159,7 +169,8 @@ def main(argv=None):
 
     if args.bench_json:
         write_artifacts(args.bench_json, args.fast, {
-            "construction": (cons_h, cons_r, fig5_h, fig5_r),
+            "construction": (cons_h, cons_r, fig5_h, fig5_r,
+                             strat_h, strat_r),
             "engine": (bq_h, bq_r, load_h, load_r, trace_h, trace_r,
                        fig6_h, fig6_r),
             "streaming": (strm_h, strm_r, avail_h, avail_r),
@@ -178,14 +189,21 @@ def write_artifacts(out_dir: str, fast: bool, raw: dict) -> None:
     machine = machine_info()
     paths = []
 
-    cons_h, cons_r, fig5_h, fig5_r = raw["construction"]
+    cons_h, cons_r, fig5_h, fig5_r, strat_h, strat_r = raw["construction"]
     paths.append(write_bench_json(out_dir, "construction", {
         "batched_total_s": (_mean(cons_r, cons_h, "batched_total_s"), "s"),
         "speedup_vs_pr1": (_mean(cons_r, cons_h, "speedup"), "x"),
         "pecb_build_s": (_mean(fig5_r, fig5_h, "pecb_s"), "s"),
         "ef_build_s": (_mean(fig5_r, fig5_h, "ef_s"), "s"),
+        "stratified_build_s": (_mean(strat_r, strat_h, "strat_build_s"),
+                               "s"),
+        "stratified_build_speedup": (
+            _mean(strat_r, strat_h, "build_speedup"), "x"),
+        "stratified_bytes_ratio": (
+            _mean(strat_r, strat_h, "bytes_ratio"), "x"),
     }, {"construction_plane": (cons_h, cons_r),
-        "construction_fig5": (fig5_h, fig5_r)}, machine, fast))
+        "construction_fig5": (fig5_h, fig5_r),
+        "construction_stratified": (strat_h, strat_r)}, machine, fast))
 
     bq_h, bq_r, load_h, load_r, trace_h, trace_r, fig6_h, fig6_r = raw["engine"]
     # the window-sweep scenario rows share the load-sweep table, labeled
@@ -196,6 +214,8 @@ def write_artifacts(out_dir: str, fast: bool, raw: dict) -> None:
     pure_load = [r for r in load_r if r not in sweep_rows]
     open_rows = [r for r in pure_load if r[oq] == "open"]
     open_row = open_rows[0] if open_rows else pure_load[-1]
+    mixed_rows = [r for r in pure_load if r[oq] == "mixed_k"]
+    mixed_row = mixed_rows[0] if mixed_rows else open_row
     traced = [r for r in trace_r if r[trace_h.index("arm")] == "traced"]
     untraced = [r for r in trace_r if r[trace_h.index("arm")] == "untraced"]
     p99_i, qps_i = trace_h.index("p99_ms"), trace_h.index("qps")
@@ -204,6 +224,9 @@ def write_artifacts(out_dir: str, fast: bool, raw: dict) -> None:
     paths.append(write_bench_json(out_dir, "engine", {
         "open_loop_qps": (float(open_row[load_h.index("achieved_qps")]), "qps"),
         "open_loop_p99_ms": (float(open_row[load_h.index("p99_ms")]), "ms"),
+        "mixed_k_qps": (float(mixed_row[load_h.index("achieved_qps")]),
+                        "qps"),
+        "mixed_k_p99_ms": (float(mixed_row[load_h.index("p99_ms")]), "ms"),
         "batch_query_us_per_q": (min(_col(bq_r, bq_h, "batched_us_per_q")),
                                  "us"),
         "alg1_us_per_q": (_mean(fig6_r, fig6_h, "pecb_us"), "us"),

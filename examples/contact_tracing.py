@@ -35,7 +35,7 @@ print(f"contact network: {n_people} people, {days} days, {g.m} contacts, k={k}")
 with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
     eng.register_graph("contacts", g)
     t0 = time.perf_counter()
-    handle = eng.warmup("contacts", k)
+    handle = eng.warmup("contacts")
     print(f"index built in {time.perf_counter()-t0:.2f}s "
           f"({handle.nbytes/1e3:.0f} KB)")
 

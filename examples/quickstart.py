@@ -5,7 +5,9 @@
 Reproduces the paper's running example (Figure 1 / Example 4.14) through
 the typed query surface — vertices, the member-edge set, and the induced
 temporal subgraph of the component — then a random workload with oracle
-verification on every result mode.
+verification on every result mode, and finally the k-stratified index
+(DESIGN.md §14): ONE build answering *every* supported k, mixed-k
+batches included.
 
 Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the random workload.
 """
@@ -17,7 +19,8 @@ import numpy as np
 
 from repro.core import InvalidQueryError, ResultMode, TCCSQuery
 from repro.core.temporal_graph import TemporalGraph, gen_temporal_graph
-from repro.core.pecb_index import build_pecb_index
+from repro.core.batch_query import batch_query_mixed_np
+from repro.core.pecb_index import build_pecb_index, build_stratified_index
 from repro.core.kcore import tccs_oracle, tccs_oracle_edges
 
 TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
@@ -82,3 +85,35 @@ print(f"random graph: {checked} queries verified against the oracle "
       "(vertices + member edges)")
 print(f"index: {idx2.num_nodes} forest nodes, {idx2.nbytes()/1e3:.1f} KB "
       f"for {g2.m} temporal edges")
+
+# --- one k-stratified build serves EVERY k (DESIGN.md §14) ---------------
+sx = build_stratified_index(g2)          # default policy: ks = 2..k_max
+print(f"stratified index: supported_ks={sx.supported_ks}, "
+      f"{sx.num_nodes} forest nodes, {sx.nbytes()/1e3:.1f} KB — one build")
+
+# point queries pick their k per spec; answers match per-k builds exactly
+u, ts, te = 7, 2, g2.t_max - 2
+for k in sx.supported_ks[:3] + sx.supported_ks[-1:]:
+    r = sx.answer(TCCSQuery(u, ts, te, int(k)))
+    assert r.vertices == tccs_oracle(g2, int(k), u, ts, te)
+assert sx.answer(TCCSQuery(u, ts, te, 4)).vertices == \
+    idx2.answer(TCCSQuery(u, ts, te, 4)).vertices
+
+# cores are nested: the component only shrinks as k rises
+sizes = [len(sx.answer(TCCSQuery(u, 1, g2.t_max, int(k))).vertices)
+         for k in sx.supported_ks]
+assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+print(f"k-monotone components from v{u}: sizes {sizes}")
+
+# a MIXED-k batch on the device plane: one launch, per-query k
+mixed = [(u, ts, te, int(k)) for k in sx.supported_ks[:4]]
+for vs, (qu, qts, qte, qk) in zip(batch_query_mixed_np(sx, mixed), mixed):
+    assert vs == tccs_oracle(g2, qk, qu, qts, qte)
+print(f"mixed-k device batch of {len(mixed)} queries "
+      f"(k={[q[3] for q in mixed]}) verified against the oracle")
+
+# a k above the graph's degeneracy is exactly empty — answered on the
+# host without any stratum (route "trivial")
+big = sx.answer(TCCSQuery(u, ts, te, sx.k_max_graph + 3))
+assert big.vertices == set() and big.provenance.route == "trivial"
+print(f"k={sx.k_max_graph + 3} > k_max={sx.k_max_graph}: trivially empty")

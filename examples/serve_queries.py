@@ -7,14 +7,20 @@ of fresh cases, then follow-up waves where many tracers re-check the same
 hot cases over canonical exposure windows (cache hits), plus sporadic
 single look-ups (straggler batches the planner routes to host Algorithm 1)
 and periodic SUBGRAPH drill-downs on hot cases (full-mode device
-launches). One ServingEngine serves all of it through typed specs:
-per-(workload, k) indexes are built and memoized by the registry; batched
-misses run on the device plane in power-of-two buckets; every result
-carries provenance (route, batch shape, timings).
+launches). One ServingEngine serves all of it through typed specs: the
+registry memoizes ONE k-stratified index per workload that answers every
+supported k (DESIGN.md §14) — so the k=8 and k=10 cohorts share a single
+build AND share device batches (mixed-k lanes, each query carrying its
+own k); batched misses run on the device plane in power-of-two buckets;
+every result carries provenance (route, batch shape, timings).
 
     PYTHONPATH=src python examples/serve_queries.py
+
+Set ``REPRO_EXAMPLE_SCALE=tiny`` (CI smoke) to shrink the traffic volume
+(the network keeps its density so both cohort k's stay non-trivial).
 """
 
+import os
 import time
 
 import numpy as np
@@ -22,6 +28,9 @@ import numpy as np
 from repro.core import ResultMode, TCCSQuery
 from repro.serving import EngineConfig, ServingEngine
 from repro.core.temporal_graph import gen_contact_network
+
+TINY = os.environ.get("REPRO_EXAMPLE_SCALE") == "tiny"
+N_WAVES, N_FRESH = (3, 10) if TINY else (8, 40)
 
 
 def main():
@@ -47,26 +56,30 @@ def main():
 
     with ServingEngine(cfg) as eng:
         eng.register_graph("contacts", g)
-        for k in (8, 10):
-            h = eng.warmup("contacts", k)
-            print(f"[warmup] k={k}: index built in {h.build_seconds:.2f}s "
-                  f"({h.pecb.num_nodes} forest nodes)")
+        # ONE warmup, one stratified build: both cohort densities (and
+        # every other supported k) are served from the same resident handle
+        h = eng.warmup("contacts")
+        print(f"[warmup] stratified index built in {h.build_seconds:.2f}s "
+              f"({h.pecb.num_nodes} forest nodes, "
+              f"supported_ks={h.supported_ks})")
 
         futures = []
         t0 = time.perf_counter()
 
-        # -- phase 1: morning sweep — every hot case once, plus fresh ones
-        for k in (8, 10):
-            specs = [TCCSQuery(int(u), *w, k) for u in hot_cases for w in windows]
-            specs += [fresh_spec(k) for _ in range(40)]
-            futures += eng.submit_specs("contacts", specs)
+        # -- phase 1: morning sweep — every hot case at BOTH densities in a
+        # single submit: the planner forms mixed-k device batches, k=8 and
+        # k=10 specs riding the same launch
+        specs = [TCCSQuery(int(u), *w, k)
+                 for k in (8, 10) for u in hot_cases for w in windows]
+        specs += [fresh_spec(k) for k in (8, 10) for _ in range(N_FRESH)]
+        futures += eng.submit_specs("contacts", specs)
         eng.flush()
         eng.drain()                            # results land, cache fills
 
         # -- phase 2: follow-up waves — tracers re-check hot cases -------
-        for wave in range(8):
+        for wave in range(N_WAVES):
             k = 8 if wave % 3 else 10
-            n_req = int(rng.integers(15, 50))
+            n_req = int(rng.integers(15, 24 if TINY else 50))
             specs = [hot_spec(k) if rng.random() < 0.5 else fresh_spec(k)
                      for _ in range(n_req)]
             if wave % 2:                       # a drill-down on a hot case:
@@ -105,12 +118,16 @@ def main():
         print("[stats]")
         print(eng.format_stats())
 
-        # spot-check exactness against host Algorithm 1
-        h8 = eng.registry.get("contacts", 8)
+        # spot-check exactness against host Algorithm 1 — the SAME resident
+        # handle answers both cohort densities
+        hs = eng.registry.get("contacts")
         u0, (ts0, te0) = int(hot_cases[0]), windows[0]
-        got = eng.answer("contacts", TCCSQuery(u0, ts0, te0, 8))
-        assert got.vertices == h8.pecb.answer(TCCSQuery(u0, ts0, te0, 8)).vertices
-        print("[verify] engine result == Algorithm 1 on spot check")
+        for k in (8, 10):
+            got = eng.answer("contacts", TCCSQuery(u0, ts0, te0, k))
+            assert got.vertices == \
+                hs.pecb.answer(TCCSQuery(u0, ts0, te0, k)).vertices
+        print("[verify] engine results == Algorithm 1 at k=8 and k=10 "
+              "from one index")
 
 
 if __name__ == "__main__":

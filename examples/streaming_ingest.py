@@ -55,7 +55,7 @@ print(f"contact feed: {n_people} people, day 1..{g0.t_max} indexed, "
 with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
     eng.register_graph("feed", g0)
     t0 = time.perf_counter()
-    eng.warmup("feed", k)
+    eng.warmup("feed")
     print(f"epoch-0 index built in {time.perf_counter() - t0:.2f}s")
 
     patient = int(np.argmax(np.bincount(np.concatenate([g0.src, g0.dst]))))
@@ -94,7 +94,7 @@ with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
     # retention policy expires them as new days arrive. Day numbers shift:
     # after a trim, "day 1" is the oldest *retained* day.
     keep_days = days_live + 1
-    bytes_before = eng.registry.get("feed", k).nbytes
+    bytes_before = eng.registry.get("feed").nbytes
     for f in eng.set_retention("feed",
                                RetentionPolicy(window=keep_days)).values():
         f.result(timeout=120)       # wait out the first (catch-up) trim
@@ -109,7 +109,7 @@ with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0)) as eng:
                    [(int(u), int(v), t_now + 1) for u, v in
                     zip(day_edges.src, day_edges.dst)],
                    wait=True)
-        h = eng.registry.get("feed", k)
+        h = eng.registry.get("feed")
         recent = eng.answer("feed", TCCSQuery(patient, 1, h.graph.t_max, k))
         print(f"rolling day +{extra_day}: retained days=1..{h.graph.t_max} "
               f"(window={keep_days}), index {h.nbytes} B "
@@ -131,12 +131,12 @@ store_dir = tempfile.mkdtemp(prefix="contact-feed-store-")
 with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0,
                                 store_dir=store_dir)) as eng:
     eng.register_graph("feed", g0)
-    eng.warmup("feed", k)
+    eng.warmup("feed")
     for f in eng.set_retention("feed",
                                RetentionPolicy(window=keep_days)).values():
         f.result(timeout=120)
     eng.ingest("feed", [tuple(e) for e in backlog.tolist()], wait=True)
-    h = eng.registry.get("feed", k)
+    h = eng.registry.get("feed")
     window_q = TCCSQuery(patient, 1, h.graph.t_max, k)
     cohort_before = eng.answer("feed", window_q)
     st = eng.store.stats()
@@ -146,7 +146,7 @@ with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0,
 
 with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0,
                                 store_dir=store_dir)) as eng:
-    h2 = eng.warmup("feed", k)       # no register_graph: adopted from disk
+    h2 = eng.warmup("feed")       # no register_graph: adopted from disk
     assert h2.source == "disk", "expected a warm promote, got a rebuild"
     cohort_after = eng.answer("feed", window_q)
     assert cohort_after.vertices == cohort_before.vertices
@@ -158,7 +158,7 @@ with ServingEngine(EngineConfig(max_batch=64, flush_ms=2.0,
     t_now = eng.registry.resolve_graph("feed").t_max
     eng.ingest("feed", [(int(u), int(v), t_now + 1) for u, v in
                         zip(day_edges.src, day_edges.dst)], wait=True)
-    h3 = eng.registry.get("feed", k)
+    h3 = eng.registry.get("feed")
     assert h3.epoch == h2.epoch + 1
     print(f"process B keeps ingesting: day {t_now + 1} landed "
           f"(epoch {h3.epoch}, days 1..{h3.graph.t_max})")

@@ -23,6 +23,16 @@
   under ``python -O``, so invariants guarding data integrity must raise
   typed errors. (Tests keep their asserts — the include list only covers
   ``src/``.)
+* ``per-k-key`` — new code constructing the pre-PR-9 ``(workload, k)``
+  registry/store keys: a two-element tuple passed to a key-taking method
+  (``get``/``get_nowait``/``get_async``/``load``/``put_handle``/
+  ``current_epoch``/``delete``), a positional k after the workload on
+  ``get``-family / ``warmup`` / ``prefetch``, or a tuple membership test
+  against a registry. The k axis lives *inside* the handle now
+  (``handle.supported_ks``); the compat shims that still accept these
+  forms suppress inline. Receiver-restricted to registry / store /
+  engine-looking names so result-cache keys (legitimately
+  ``(index_key, spec_key)`` tuples) stay clean.
 """
 
 from __future__ import annotations
@@ -34,6 +44,16 @@ from .core import AnalysisConfig, Finding, Module, make_finding
 
 #: attribute names that are counter state on metrics-ish objects
 _COUNTER_ATTRS = frozenset({"_counters", "_gauges"})
+
+#: key-taking methods of the index plane (registry / disk tier / engine)
+_PERK_KEY_METHODS = frozenset({"get", "get_nowait", "get_async", "load",
+                               "put_handle", "current_epoch", "delete"})
+#: methods where a *positional* second argument is the deprecated k
+_PERK_POSITIONAL_METHODS = frozenset({"get", "get_nowait", "get_async",
+                                      "warmup", "prefetch"})
+#: receiver-name tails that look like the index plane; anything else
+#: (caches keyed by (index_key, spec_key) tuples, dicts, ...) stays clean
+_PERK_RECEIVER_TAILS = ("registry", "reg", "store", "engine", "eng")
 
 
 def _dotted(node: ast.AST) -> str | None:
@@ -67,6 +87,39 @@ def pass_api_discipline(module: Module,
                     f".{name}() with {len(node.args)} positional args "
                     "matches a PR-3 legacy shim signature; migrate to "
                     "the TCCSQuery v2 surface (answer/submit_spec)"))
+
+        # -- per-k-key ---------------------------------------------------
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and _receiver_is_index_plane(node)):
+            name = node.func.attr
+            if (name in _PERK_KEY_METHODS and node.args
+                    and isinstance(node.args[0], ast.Tuple)
+                    and len(node.args[0].elts) == 2):
+                findings.append(make_finding(
+                    module, "per-k-key", node,
+                    f".{name}() with a (workload, k) tuple key: the "
+                    "registry/store key space is workload-only since the "
+                    "k-stratified index plane — pass the workload name "
+                    "and pick k per query (handle.supported_ks)"))
+            elif (name in _PERK_POSITIONAL_METHODS
+                  and len(node.args) >= 2
+                  and _looks_like_k(node.args[1])):
+                findings.append(make_finding(
+                    module, "per-k-key", node,
+                    f".{name}(workload, k) passes a per-k positional "
+                    "key: one k-stratified build serves every k — drop "
+                    "the k (it is deprecated and ignored)"))
+        if (isinstance(node, ast.Compare) and len(node.ops) == 1
+                and isinstance(node.ops[0], (ast.In, ast.NotIn))
+                and isinstance(node.left, ast.Tuple)
+                and len(node.left.elts) == 2
+                and _name_is_index_plane(node.comparators[0])):
+            findings.append(make_finding(
+                module, "per-k-key", node,
+                "(workload, k) membership test against a registry: "
+                "residency is keyed by workload alone — test the name "
+                "and check handle.supported_ks for the k"))
 
         # -- metrics-direct ----------------------------------------------
         if isinstance(node, (ast.Assign, ast.AugAssign)):
@@ -122,6 +175,35 @@ def _receiver_is_executor(call: ast.Call) -> bool:
     recv = _dotted(call.func.value) or ""  # type: ignore[union-attr]
     tail = recv.rsplit(".", 1)[-1].lower()
     return "pool" in tail or "executor" in tail
+
+
+def _receiver_is_index_plane(call: ast.Call) -> bool:
+    """``registry.get(...)`` / ``self._store.load(...)`` / ``eng.warmup``:
+    the per-k-key rule only fires on receivers whose final name component
+    looks like the index plane, so tuple keys of other key spaces (the
+    result cache's ``(index_key, spec_key)``) stay clean."""
+    recv = _dotted(call.func.value) or ""  # type: ignore[union-attr]
+    tail = recv.rsplit(".", 1)[-1].lower().lstrip("_")
+    return any(tail == t or tail.endswith("_" + t) or tail.startswith(t)
+               for t in _PERK_RECEIVER_TAILS)
+
+
+def _name_is_index_plane(node: ast.AST) -> bool:
+    recv = _dotted(node) or ""
+    tail = recv.rsplit(".", 1)[-1].lower().lstrip("_")
+    return any(tail == t or tail.endswith("_" + t) or tail.startswith(t)
+               for t in _PERK_RECEIVER_TAILS)
+
+
+def _looks_like_k(node: ast.AST) -> bool:
+    """An integer literal or a variable literally named ``k``/``k_``-ish
+    in the second positional slot — the deprecated per-k argument. Other
+    second positionals (timeouts as floats, option flags) stay clean."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int) and not isinstance(node.value,
+                                                              bool)
+    return isinstance(node, ast.Name) and (
+        node.id == "k" or node.id.startswith("k_") or node.id.endswith("_k"))
 
 
 def _is_self_write_in_owner(module: Module, attr: ast.Attribute) -> bool:

@@ -57,7 +57,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .pecb_index import PECBIndex
+from .pecb_index import PECBIndex, StratifiedPECB
 
 NONE = -1
 
@@ -87,6 +87,7 @@ class DeviceIndex:
     ver_ts_to: jnp.ndarray
     ver_ct: jnp.ndarray
     ver_src: jnp.ndarray
+    ver_k: jnp.ndarray        # per-version stratum k (constant per-k mirror)
     max_node_entries: int     # static: longest per-node entry list
     max_vert_entries: int     # static: longest per-vertex entry list
     num_versions: int         # static: true version count (pre-padding)
@@ -100,7 +101,7 @@ _ARRAY_FIELDS = (
     "node_u", "node_v", "node_ct", "live_from", "live_to",
     "row_ptr", "ent_ts", "ent_left", "ent_right", "ent_parent",
     "vrow_ptr", "vent_ts", "vent_node",
-    "ver_ts_from", "ver_ts_to", "ver_ct", "ver_src",
+    "ver_ts_from", "ver_ts_to", "ver_ct", "ver_src", "ver_k",
 )
 _META_FIELDS = ("n", "t_max", "max_node_entries", "max_vert_entries",
                 "num_versions")
@@ -114,10 +115,16 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def _host_layout(index: PECBIndex):
+def _host_layout(index):
     """(meta dict, name -> int32 host array) in the device layout — the
     single source of truth for ``to_device`` and ``refresh_device``
-    (including the length->=1 inert padding of optional arrays)."""
+    (including the length->=1 inert padding of optional arrays).
+
+    Accepts a per-k :class:`PECBIndex` or a whole :class:`StratifiedPECB`
+    (routed to :func:`_host_layout_stratified`: all strata in one global
+    id space, servable by the same compiled programs)."""
+    if isinstance(index, StratifiedPECB):
+        return _host_layout_stratified(index)
     i32 = lambda a: np.asarray(a, np.int32)
     seg = np.diff(index.row_ptr)
     vseg = np.diff(index.vrow_ptr)
@@ -143,6 +150,8 @@ def _host_layout(index: PECBIndex):
         "ver_ts_to": i32(store.ts_to) if has_vers else pad0,
         "ver_ct": i32(store.ct) if has_vers else pad0,
         "ver_src": i32(store.src) if has_vers else pad0,
+        "ver_k": (np.full(store.num_versions, index.k, np.int32)
+                  if has_vers else pad0),
     }
     meta = {
         "n": index.n,
@@ -154,7 +163,91 @@ def _host_layout(index: PECBIndex):
     return meta, arrays
 
 
-def to_device(index: PECBIndex) -> DeviceIndex:
+def _host_layout_stratified(sx: StratifiedPECB):
+    """Device layout for a whole k-stratified index.
+
+    The per-stratum blocks are fused into ONE global node/entry id space:
+    node ids shift by ``knode_ptr[ki]``, the per-stratum CSRs re-base onto
+    the concatenated entry arrays, and per-vertex lookup becomes a lookup
+    on the *slot* ``ki * n + u`` (``vrow_ptr`` has ``|K|*n+1`` rows). The
+    strata stay link-disjoint, so :func:`batch_query`'s min-label
+    propagation serves a mixed-k batch unchanged — per-query k enters only
+    as the host-computed entry slot, plus the ``ver_k == kq`` filter of
+    :func:`batch_query_full_mixed` (the version arrays are the one place
+    where records of different strata share an index space).
+    """
+    i32 = lambda a: np.asarray(a, np.int32)
+    K = len(sx.ks)
+    n = sx.n
+    Ntot = sx.num_nodes
+    Etot = int(sx.ent_ts.shape[0])
+    VEtot = int(sx.vent_ts.shape[0])
+
+    row_ptr = np.empty(Ntot + 1, np.int64)
+    vrow_ptr = np.empty(K * n + 1, np.int64)
+    ent_l = sx.ent_left.astype(np.int64)
+    ent_r = sx.ent_right.astype(np.int64)
+    ent_p = sx.ent_parent.astype(np.int64)
+    vent_node = sx.vent_node.astype(np.int64)
+    for ki in range(K):
+        s, e = int(sx.knode_ptr[ki]), int(sx.knode_ptr[ki + 1])
+        row_ptr[s:e] = (sx.row_ptr[s + ki:e + ki].astype(np.int64)
+                        + int(sx.kent_ptr[ki]))
+        vrow_ptr[ki * n:(ki + 1) * n] = (
+            sx.vrow_ptr[ki * (n + 1):ki * (n + 1) + n].astype(np.int64)
+            + int(sx.kvent_ptr[ki]))
+        off = int(sx.knode_ptr[ki])
+        if off:
+            for seg in (ent_l[int(sx.kent_ptr[ki]):int(sx.kent_ptr[ki + 1])],
+                        ent_r[int(sx.kent_ptr[ki]):int(sx.kent_ptr[ki + 1])],
+                        ent_p[int(sx.kent_ptr[ki]):int(sx.kent_ptr[ki + 1])],
+                        vent_node[int(sx.kvent_ptr[ki]):
+                                  int(sx.kvent_ptr[ki + 1])]):
+                seg[seg >= 0] += off
+    row_ptr[Ntot] = Etot
+    vrow_ptr[K * n] = VEtot
+
+    st = sx.strata
+    V = int(st.num_versions) if st is not None else 0
+    seg = np.diff(row_ptr)
+    vseg = np.diff(vrow_ptr)
+    pad0 = np.zeros((1,), np.int32)
+    padn = np.full((1,), NONE, np.int32)
+    arrays = {
+        "node_u": i32(sx.node_u),
+        "node_v": i32(sx.node_v),
+        "node_ct": i32(sx.node_ct),
+        "live_from": i32(sx.node_live_from),
+        "live_to": i32(sx.node_live_to),
+        "row_ptr": i32(row_ptr),
+        "ent_ts": i32(sx.ent_ts) if Etot else pad0,
+        "ent_left": i32(ent_l) if Etot else padn,
+        "ent_right": i32(ent_r) if Etot else padn,
+        "ent_parent": i32(ent_p) if Etot else padn,
+        "vrow_ptr": i32(vrow_ptr),
+        "vent_ts": i32(sx.vent_ts) if VEtot else pad0,
+        "vent_node": i32(vent_node) if VEtot else padn,
+        "ver_ts_from": i32(st.ts_from) if V else np.ones((1,), np.int32),
+        "ver_ts_to": i32(st.ts_to) if V else pad0,
+        "ver_ct": i32(st.ct) if V else pad0,
+        "ver_src": i32(sx.ver_src) if V else pad0,
+        "ver_k": (np.repeat(np.asarray(sx.ks, np.int32),
+                            np.diff(st.kptr)).astype(np.int32)
+                  if V else pad0),
+    }
+    meta = {
+        "n": n,
+        "t_max": sx.t_max,
+        "max_node_entries": int(seg.max()) if seg.size else 0,
+        "max_vert_entries": int(vseg.max()) if vseg.size else 0,
+        "num_versions": V,
+    }
+    return meta, arrays
+
+
+def to_device(index) -> DeviceIndex:
+    """Upload a :class:`PECBIndex` or a whole :class:`StratifiedPECB`
+    (mixed-k servable) to the device."""
     meta, arrays = _host_layout(index)
     return DeviceIndex(**meta,
                        **{k: jnp.asarray(v) for k, v in arrays.items()})
@@ -212,6 +305,69 @@ def refresh_device(prev_host: PECBIndex, prev_dev: DeviceIndex,
             stats["full"] += 1
             stats["uploaded_bytes"] += int(new_np.nbytes)
     return DeviceIndex(**meta, **arrays), stats
+
+
+def stratum_device(dix: DeviceIndex, sx: StratifiedPECB,
+                   k: int) -> DeviceIndex:
+    """Carve ONE stratum's block out of a fused stratified device mirror.
+
+    A single-k program (the window sweep) pays propagation cost on every
+    forest node of the mirror it runs against — on the fused mixed-k
+    mirror, every stratum's nodes, a |K|-fold tax for a launch that can
+    only ever touch one stratum. This slices the ``[knode_ptr[ki],
+    knode_ptr[ki+1])`` node block plus its entry / vertex-entry / version
+    segments into a standalone per-k :class:`DeviceIndex` (a handful of
+    eager device slices, no host round trip), with forest-node links
+    rebased into the block's local id space. Array-for-array equal to
+    ``to_device(sx.slice_k(k))`` (test-asserted); the static
+    ``max_*_entries`` meta keeps the fused mirror's values — a valid
+    upper bound costing at most a few extra binary-search steps.
+    """
+    ki = sx.k_index(k)
+    n = dix.n
+    nlo, nhi = int(sx.knode_ptr[ki]), int(sx.knode_ptr[ki + 1])
+    elo, ehi = int(sx.kent_ptr[ki]), int(sx.kent_ptr[ki + 1])
+    vlo, vhi = int(sx.kvent_ptr[ki]), int(sx.kvent_ptr[ki + 1])
+    st = sx.strata
+    slo, shi = ((int(st.kptr[ki]), int(st.kptr[ki + 1]))
+                if st is not None else (0, 0))
+    pad0 = jnp.zeros((1,), jnp.int32)
+    padn = jnp.full((1,), NONE, jnp.int32)
+
+    def links(a):
+        seg = a[elo:ehi]
+        # node links are global forest ids; -1 stays the no-link sentinel
+        return jnp.where(seg >= 0, seg - nlo, seg) if nlo else seg
+
+    has_ent, has_vent, has_ver = ehi > elo, vhi > vlo, shi > slo
+    vent_node = dix.vent_node[vlo:vhi]
+    if nlo and has_vent:
+        vent_node = jnp.where(vent_node >= 0, vent_node - nlo, vent_node)
+    return DeviceIndex(
+        n=n, t_max=dix.t_max,
+        node_u=dix.node_u[nlo:nhi],
+        node_v=dix.node_v[nlo:nhi],
+        node_ct=dix.node_ct[nlo:nhi],
+        live_from=dix.live_from[nlo:nhi],
+        live_to=dix.live_to[nlo:nhi],
+        row_ptr=dix.row_ptr[nlo:nhi + 1] - elo,
+        ent_ts=dix.ent_ts[elo:ehi] if has_ent else pad0,
+        ent_left=links(dix.ent_left) if has_ent else padn,
+        ent_right=links(dix.ent_right) if has_ent else padn,
+        ent_parent=links(dix.ent_parent) if has_ent else padn,
+        vrow_ptr=dix.vrow_ptr[ki * n:(ki + 1) * n + 1] - vlo,
+        vent_ts=dix.vent_ts[vlo:vhi] if has_vent else pad0,
+        vent_node=vent_node if has_vent else padn,
+        ver_ts_from=(dix.ver_ts_from[slo:shi] if has_ver
+                     else jnp.ones((1,), jnp.int32)),
+        ver_ts_to=dix.ver_ts_to[slo:shi] if has_ver else pad0,
+        ver_ct=dix.ver_ct[slo:shi] if has_ver else pad0,
+        ver_src=dix.ver_src[slo:shi] if has_ver else pad0,
+        ver_k=dix.ver_k[slo:shi] if has_ver else pad0,
+        max_node_entries=dix.max_node_entries,
+        max_vert_entries=dix.max_vert_entries,
+        num_versions=shi - slo,
+    )
 
 
 def _lower_bound(ts_arr: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
@@ -356,6 +512,71 @@ def batch_query_full(dix: DeviceIndex, u: jnp.ndarray, ts: jnp.ndarray,
     e0_ok, e0c = _entry_nodes(dix, dix.vrow_ptr[u], dix.vrow_ptr[u + 1], ts, te)
     vmask = _component_masks(dix, e0_ok, e0c, ts, te)
     return vmask, _version_member(dix, vmask, ts, te)
+
+
+@jax.jit
+def batch_query_full_mixed(dix: DeviceIndex, slot: jnp.ndarray,
+                           ts: jnp.ndarray, te: jnp.ndarray,
+                           kq: jnp.ndarray):
+    """Mixed-k batch against a stratified :class:`DeviceIndex`: one
+    compiled program, per-query k as a device operand.
+
+    ``slot`` is the per-query entry slot ``k_index(k) * n + u`` (computed
+    host-side from the :class:`StratifiedPECB` handle; strata are
+    link-disjoint so propagation needs no k mask) and ``kq`` the per-query
+    k filtering the shared version arrays for the EDGES/SUBGRAPH payload.
+    Returns ``(bool[B, n] vertex mask, bool[B, V] version mask)``.
+    """
+    B = slot.shape[0]
+    if dix.num_nodes == 0:
+        return (jnp.zeros((B, dix.n), bool),
+                jnp.zeros((B, dix.ver_src.shape[0]), bool))
+    e0_ok, e0c = _entry_nodes(dix, dix.vrow_ptr[slot],
+                              dix.vrow_ptr[slot + 1], ts, te)
+    vmask = _component_masks(dix, e0_ok, e0c, ts, te)
+    vermask = (_version_member(dix, vmask, ts, te)
+               & (dix.ver_k[None, :] == kq[:, None]))
+    return vmask, vermask
+
+
+def mixed_slots(sx: StratifiedPECB,
+                queries: list[tuple[int, int]]) -> np.ndarray:
+    """Host-side slot computation for a mixed-k batch: ``(u, k) ->
+    k_index(k) * n + u``. Raises ``KeyError`` for an unsupported k — the
+    serving planner short-circuits those before batching."""
+    return np.asarray([sx.k_index(k) * sx.n + u for (u, k) in queries],
+                      np.int32)
+
+
+def batch_query_mixed_np(sx: StratifiedPECB,
+                         queries: list[tuple[int, int, int, int]]) -> list[set[int]]:
+    """Host wrapper: mixed-k ``(u, ts, te, k)`` batch -> vertex sets
+    (tests/benches)."""
+    dix = to_device(sx)
+    slot = jnp.asarray(mixed_slots(sx, [(u, k) for (u, _, _, k) in queries]))
+    ts = jnp.asarray([q[1] for q in queries], jnp.int32)
+    te = jnp.asarray([q[2] for q in queries], jnp.int32)
+    kq = jnp.asarray([q[3] for q in queries], jnp.int32)
+    vmask, _ = batch_query_full_mixed(dix, slot, ts, te, kq)
+    mask = np.asarray(vmask)
+    return [set(np.nonzero(row)[0].tolist()) for row in mask]
+
+
+def batch_query_mixed_edges_np(sx: StratifiedPECB,
+                               queries: list[tuple[int, int, int, int]]) -> list[set[int]]:
+    """Host wrapper: mixed-k ``(u, ts, te, k)`` batch -> member *edge id*
+    sets (tests/benches)."""
+    if sx.strata is None:
+        raise ValueError("index has no version store")
+    dix = to_device(sx)
+    slot = jnp.asarray(mixed_slots(sx, [(u, k) for (u, _, _, k) in queries]))
+    ts = jnp.asarray([q[1] for q in queries], jnp.int32)
+    te = jnp.asarray([q[2] for q in queries], jnp.int32)
+    kq = jnp.asarray([q[3] for q in queries], jnp.int32)
+    _, vermask = batch_query_full_mixed(dix, slot, ts, te, kq)
+    vermask = np.asarray(vermask)[:, :dix.num_versions]
+    eid = sx.strata.edge_id
+    return [set(eid[np.nonzero(row)[0]].tolist()) for row in vermask]
 
 
 @jax.jit

@@ -765,6 +765,294 @@ def shrink_core_times(g: TemporalGraph, k: int,
 
 
 # ----------------------------------------------------------------------
+# K-stratified plane: one build serves every k (DESIGN.md §14)
+# ----------------------------------------------------------------------
+
+def _rle_columns(vct: np.ndarray, t_max: int):
+    """Run-length encode the finite cells of a dense (t_max+1, n) vertex
+    core-time matrix, per vertex over ts = 1..t_max.
+
+    Returns ``(counts, ts_from, ts_to, val)`` with runs sorted by
+    (vertex, ts_from) — the same edge-major run detection as `_compress`,
+    applied to vertex columns. INF cells are simply absent (decode fills
+    INF), so encode/decode round-trips bit-exactly.
+    """
+    n = vct.shape[1]
+    inf = t_max + 1
+    z = np.zeros(0, np.int32)
+    if t_max == 0 or n == 0:
+        return np.zeros(n, np.int64), z, z, z
+    cols = np.ascontiguousarray(vct[1:].T).reshape(-1)    # (n*T,) row-major
+    start = np.empty(cols.shape[0], bool)
+    start[0] = True
+    np.not_equal(cols[1:], cols[:-1], out=start[1:])
+    start[::t_max] = True                                 # runs stay in-column
+    sidx = np.flatnonzero(start)
+    vals = cols[sidx]
+    nxt = np.empty_like(sidx)
+    nxt[:-1] = sidx[1:]
+    nxt[-1] = cols.shape[0]
+    keep = vals < inf
+    sidx, nxt, vals = sidx[keep], nxt[keep], vals[keep]
+    counts = np.bincount(sidx // t_max, minlength=n).astype(np.int64)
+    return (counts, (sidx % t_max + 1).astype(np.int32),
+            ((nxt - 1) % t_max + 1).astype(np.int32),
+            vals.astype(np.int32))
+
+
+def _expand_runs(n: int, t_max: int, vptr: np.ndarray, ts_from: np.ndarray,
+                 ts_to: np.ndarray, val: np.ndarray) -> np.ndarray:
+    """Inverse of `_rle_columns`: dense (t_max+1, n) int32 matrix, INF
+    everywhere no run covers. ``vptr`` is the per-vertex run CSR."""
+    vct = np.full((t_max + 1, n), t_max + 1, np.int32)
+    if ts_from.size == 0:
+        return vct
+    lens = (ts_to - ts_from + 1).astype(np.int64)
+    total = int(lens.sum())
+    off = np.zeros(ts_from.shape[0] + 1, np.int64)
+    np.cumsum(lens, out=off[1:])
+    flat_ts = (np.arange(total, dtype=np.int64)
+               - np.repeat(off[:-1], lens) + np.repeat(ts_from, lens))
+    run_vert = np.repeat(np.arange(n, dtype=np.int64), np.diff(vptr))
+    vct[flat_ts, np.repeat(run_vert, lens)] = np.repeat(val, lens)
+    return vct
+
+
+@dataclasses.dataclass(frozen=True)
+class StratifiedCoreTable:
+    """Core-time tables for every supported k, packed as one structure.
+
+    Record arrays are the per-k ``CoreTimeTable`` version records
+    concatenated in ascending-k blocks (``kptr`` bounds block i); each
+    block keeps its (edge_id, ts_from) lexsort order verbatim, so
+    ``table_for(k)`` is a zero-copy slice that is bit-identical to
+    ``edge_core_times(g, k)``'s records.
+
+    Vertex core times are stored run-length encoded per (k, vertex) slot
+    (``vptr`` is a CSR over slot = k_index * n + vertex) instead of |K|
+    dense (t_max+1, n) matrices — columns are piecewise constant in ts,
+    so this is the memory lever that lets one stratified handle undercut
+    |K| per-k handles. ``table_for`` re-expands the dense matrix on
+    demand (streaming extend needs it).
+    """
+
+    n: int
+    m: int
+    t_max: int
+    ks: tuple[int, ...]       # ascending, strictly increasing
+    kptr: np.ndarray          # int64[|K|+1] record-block bounds
+    edge_id: np.ndarray       # int32[R] concat per-k blocks
+    ts_from: np.ndarray       # int32[R]
+    ts_to: np.ndarray         # int32[R]
+    ct: np.ndarray            # int32[R]
+    vptr: np.ndarray          # int64[|K|*n + 1] vertex-run CSR over slots
+    v_ts_from: np.ndarray     # int32[VR]
+    v_ts_to: np.ndarray       # int32[VR]
+    v_ct: np.ndarray          # int32[VR]
+
+    @property
+    def INF(self) -> int:
+        return self.t_max + 1
+
+    @property
+    def num_versions(self) -> int:
+        return int(self.edge_id.shape[0])
+
+    def nbytes(self) -> int:
+        """Bytes of everything stored — records, vertex runs and both
+        pointer tables (unlike `CoreTimeTable.nbytes` there is no dense
+        matrix to exclude; the RLE strata *are* the vertex storage)."""
+        return int(self.kptr.nbytes + self.edge_id.nbytes
+                   + self.ts_from.nbytes + self.ts_to.nbytes + self.ct.nbytes
+                   + self.vptr.nbytes + self.v_ts_from.nbytes
+                   + self.v_ts_to.nbytes + self.v_ct.nbytes)
+
+    def k_index(self, k: int) -> int:
+        i = int(np.searchsorted(np.asarray(self.ks), k))
+        if i >= len(self.ks) or self.ks[i] != k:
+            raise KeyError(f"k={k} not in supported strata {self.ks}")
+        return i
+
+    def table_for(self, k: int) -> CoreTimeTable:
+        """The per-k ``CoreTimeTable`` of stratum k: record arrays are
+        views, the dense vertex matrix is re-expanded from the runs."""
+        i = self.k_index(k)
+        lo, hi = int(self.kptr[i]), int(self.kptr[i + 1])
+        vlo, vhi = i * self.n, (i + 1) * self.n
+        rlo, rhi = int(self.vptr[vlo]), int(self.vptr[vhi])
+        vct = _expand_runs(self.n, self.t_max,
+                           self.vptr[vlo:vhi + 1] - self.vptr[vlo],
+                           self.v_ts_from[rlo:rhi], self.v_ts_to[rlo:rhi],
+                           self.v_ct[rlo:rhi])
+        return CoreTimeTable(self.n, self.m, self.t_max,
+                             self.edge_id[lo:hi], self.ts_from[lo:hi],
+                             self.ts_to[lo:hi], self.ct[lo:hi], vct)
+
+    @classmethod
+    def from_tables(cls, g: TemporalGraph, ks, tables) -> "StratifiedCoreTable":
+        """Stratify per-k ``CoreTimeTable``s (ascending k order). Each
+        table's records are taken verbatim; dense matrices are RLE'd."""
+        ks = _validate_ks(ks)
+        if len(tables) != len(ks):
+            raise ValueError("one table per k required")
+        n, t_max = g.n, g.t_max
+        kptr = np.zeros(len(ks) + 1, np.int64)
+        counts_all = []
+        for i, tab in enumerate(tables):
+            if (tab.n, tab.m, tab.t_max) != (n, g.m, t_max):
+                raise ValueError("table shape mismatch with graph")
+            kptr[i + 1] = kptr[i] + tab.num_versions
+        i32 = lambda parts: (np.concatenate(parts).astype(np.int32, copy=False)
+                             if parts else np.zeros(0, np.int32))
+        rle = [_rle_columns(tab.vertex_ct, t_max) for tab in tables]
+        for counts, _, _, _ in rle:
+            counts_all.append(counts)
+        vptr = np.zeros(len(ks) * n + 1, np.int64)
+        if counts_all:
+            np.cumsum(np.concatenate(counts_all), out=vptr[1:])
+        return cls(
+            n, g.m, t_max, ks, kptr,
+            i32([t.edge_id for t in tables]), i32([t.ts_from for t in tables]),
+            i32([t.ts_to for t in tables]), i32([t.ct for t in tables]),
+            vptr, i32([r[1] for r in rle]), i32([r[2] for r in rle]),
+            i32([r[3] for r in rle]))
+
+
+def _validate_ks(ks) -> tuple[int, ...]:
+    ks = tuple(int(k) for k in ks)
+    if any(k < 1 for k in ks):
+        raise ValueError(f"strata must be k >= 1, got {ks}")
+    if any(b <= a for a, b in zip(ks, ks[1:])):
+        raise ValueError(f"strata must be strictly ascending, got {ks}")
+    return ks
+
+
+def default_ks(g: TemporalGraph) -> tuple[int, ...]:
+    """The full useful range 2..k_max(g): below 2 a TCCS query is invalid,
+    above the degeneracy every answer is exactly empty (no stratum needed)."""
+    from .kcore import k_max
+
+    if g.m == 0:
+        return ()
+    return tuple(range(2, k_max(g) + 1))
+
+
+def _sweep_host_stratified(g: TemporalGraph, ks) -> list[np.ndarray]:
+    """Dense (t_max+1, n) vertex core times for every k in ``ks``, fused.
+
+    One pair-CSR and one blocked t_uv table serve every stratum; inside a
+    ts block the k loop ascends and seeds each stratum's fixpoint with
+    ``max(carry_k(ts-1), c_{kprev}(ts))`` — both are lower bounds of the
+    least fixpoint (window shrink / k-core nesting), and iterating the
+    clamped operator from *any* lower bound converges to the same lfp, so
+    every stratum row is bit-identical to the per-k `_sweep_host` row.
+    The inner loop is `_sweep_host`'s verbatim (one packed sort per
+    iteration serves both the rank probe and the climb).
+    """
+    n, t_max = g.n, g.t_max
+    inf = t_max + 1
+    vcts = [np.full((t_max + 1, n), inf, np.int32) for _ in ks]
+    if g.m == 0 or t_max == 0 or not ks:
+        return vcts
+    csr = _pair_csr(g)
+    deg = np.diff(csr.vptr)
+    S = 1
+    while S < inf + 2:
+        S *= 2
+    kdtype = np.int32 if n * S < 2 ** 31 else np.int64
+    base = (csr.src.astype(np.int64) * S).astype(kdtype)
+    vbase = (np.arange(n, dtype=np.int64) * S).astype(kdtype)
+    pd = csr.dst.astype(np.int64)
+    vstart = csr.vptr[:-1]
+    has_k = [deg >= k for k in ks]
+    sel = [csr.vptr[:-1][h] + (k - 1) for k, h in zip(ks, has_k)]
+    carry = [np.zeros(n, np.int32) for _ in ks]
+    for ts0 in range(1, t_max + 1, TUV_BLOCK):
+        ts1 = min(ts0 + TUV_BLOCK, t_max + 1)
+        tuv_rows = _tuv_rows(csr, ts0, ts1, t_max)
+        for ki, k in enumerate(ks):
+            c = carry[ki]
+            vct = vcts[ki]
+            seed_rows = vcts[ki - 1] if ki else None
+            for ts in range(ts0, ts1):
+                tuv = tuv_rows[ts - ts0]
+                if seed_rows is not None:
+                    np.maximum(c, seed_rows[ts], out=c)
+                while True:
+                    w = np.maximum(tuv, c[pd]).astype(kdtype, copy=False)
+                    key = base + w
+                    key.sort()
+                    cnt = np.searchsorted(key, vbase + c + 1) - vstart
+                    if bool(((cnt >= k) | (c >= inf)).all()):
+                        break
+                    c_new = np.full(n, inf, np.int32)
+                    c_new[has_k[ki]] = (key[sel[ki]] & (S - 1)) \
+                        if kdtype == np.int32 else key[sel[ki]] % S
+                    np.minimum(c_new, inf, out=c_new)
+                    np.maximum(c, c_new, out=c)
+                vct[ts] = c
+    return vcts
+
+
+def stratified_core_times(g: TemporalGraph, ks=None, *,
+                          engine: str = "auto") -> StratifiedCoreTable:
+    """One k-stratified core-time build covering every k in ``ks``
+    (default: the full useful range ``default_ks(g)``).
+
+    Every stratum is bit-identical to ``edge_core_times(g, k)`` — the
+    host path runs the fused warm-seeded sweep `_sweep_host_stratified`;
+    other engines fall back to per-k sweeps (still sharing nothing worse
+    than the status quo) and exist for differential testing.
+    """
+    ks = _validate_ks(default_ks(g) if ks is None else ks)
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}, expected one of {ENGINES}")
+    if engine == "auto":
+        try:
+            import jax
+            backend = jax.default_backend()
+        except Exception:  # pragma: no cover - jax is a hard dep in practice
+            backend = "cpu"
+        engine = "jax" if backend != "cpu" else "host"
+    if engine == "host":
+        tables = [_compress(g, vct)
+                  for vct in _sweep_host_stratified(g, ks)]
+    else:
+        tables = [edge_core_times(g, k, engine=engine) for k in ks]
+    return StratifiedCoreTable.from_tables(g, ks, tables)
+
+
+def extend_stratified_core_times(g: TemporalGraph, prev: StratifiedCoreTable,
+                                 ks=None) -> StratifiedCoreTable:
+    """Suffix-append epoch for every stratum at once: existing strata go
+    through `extend_core_times` (bit-identical incremental), strata newly
+    requested via ``ks`` (e.g. the appended edges raised k_max) are built
+    cold. ``ks`` defaults to ``prev.ks``."""
+    ks = _validate_ks(prev.ks if ks is None else ks)
+    tables = []
+    for k in ks:
+        if k in prev.ks:
+            tables.append(extend_core_times(g, k, prev.table_for(k)))
+        else:
+            tables.append(edge_core_times(g, k, engine="host"))
+    return StratifiedCoreTable.from_tables(g, ks, tables)
+
+
+def shrink_stratified_core_times(g: TemporalGraph, prev: StratifiedCoreTable,
+                                 ks=None) -> StratifiedCoreTable:
+    """Prefix-expiry epoch for every stratum at once (see
+    `shrink_core_times`); ``ks`` defaults to ``prev.ks`` and may drop
+    strata (expiry can lower k_max) but must not add any."""
+    ks = _validate_ks(prev.ks if ks is None else ks)
+    missing = [k for k in ks if k not in prev.ks]
+    if missing:
+        raise ValueError(f"shrink cannot add strata {missing}; "
+                         "build them cold instead")
+    return StratifiedCoreTable.from_tables(
+        g, ks, [shrink_core_times(g, k, prev.table_for(k)) for k in ks])
+
+
+# ----------------------------------------------------------------------
 # Brute-force oracle (tests only): CT by scanning te for each (ts, e).
 # ----------------------------------------------------------------------
 

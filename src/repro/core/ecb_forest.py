@@ -511,3 +511,207 @@ class IncrementalBuilder:
             raise ForestInvariantError(
                 f"processed {done} of {R} version records")
         return self
+
+
+class FastIncrementalBuilder(IncrementalBuilder):
+    """`IncrementalBuilder` with the per-node hot state in Python lists.
+
+    The zipper cascade and the findInsertion climb are scalar pointer
+    chases — a few reads/writes of parent/child/rank per hop, tens of
+    hops per insert. Numpy scalar indexing pays ~5x a list access for
+    each of them, and the ``via`` slot bookkeeping allocated a dict per
+    insert; this subclass keeps ``parent/child0/child1/rank/in`` as plain
+    lists during `run` and resolves slots by direct child comparison.
+    The numpy node arrays that the MSF prefilter and `pack_index` read
+    (``n_u/n_v/n_ct/n_edge/n_rank/n_live_*``) stay maintained throughout,
+    and `run` writes the list state back into ``n_parent``/``n_child`` so
+    the finished builder is indistinguishable from the base class.
+
+    The construction order is identical — same prefilter, same
+    ascending-rank inserts, same flush — so the recorded entries are
+    bit-identical to the base builder's (per-ts forests are unique, and
+    node ids are assigned in the same insertion order). Tests assert
+    exactly this; the stratified plane (`build_stratified_index`) uses
+    the fast builder while the per-k oracle path keeps the base class.
+    """
+
+    def __init__(self, g, tab: CoreTimeTable, *, prefilter: bool = True):
+        super().__init__(g, tab, prefilter=prefilter)
+        R = self._cap
+        self._parent_l: list[int] = [NONE] * R
+        self._child0_l: list[int] = [NONE] * R
+        self._child1_l: list[int] = [NONE] * R
+        self._rank_l: list[int] = [0] * R
+        self._in_l: list[bool] = [False] * R
+        # last-recorded (l, r, p) per node as lists (-2 = never recorded)
+        self._last_l: list[int] = [-2] * (3 * R)
+
+    def _new_node(self, edge_id: int, ct: int) -> int:
+        x = super()._new_node(edge_id, ct)
+        self._rank_l[x] = int(self.n_rank[x])
+        return x
+
+    def _find_side(self, vert: int, rk: int):
+        keys, nodes = self._inc_key[vert], self._inc_node[vert]
+        i = bisect.bisect_left(keys, rk)
+        if i > 0:
+            child = nodes[i - 1]
+            parent, rank = self._parent_l, self._rank_l
+            p = parent[child]
+            while p != NONE and rank[p] < rk:
+                child = p
+                p = parent[child]
+            if p == NONE:
+                return child, NONE, NONE
+            if self._child0_l[p] == child:
+                return child, p, 0
+            if self._child1_l[p] != child:
+                raise ForestInvariantError(
+                    f"node {child} is not a child of {p}")
+            return child, p, 1
+        if i >= len(keys):
+            return NONE, NONE, NONE
+        attach = nodes[i]
+        via = 0 if self.n_u[attach] == vert else 1
+        taken = self._child0_l[attach] if via == 0 else self._child1_l[attach]
+        if taken != NONE:
+            raise ForestInvariantError(
+                f"entry slot {via} of node {attach} unexpectedly taken")
+        return NONE, attach, via
+
+    def insert(self, edge_id: int, ct: int) -> int | None:
+        g = self.g
+        uu, vv = int(g.src[edge_id]), int(g.dst[edge_id])
+        if uu == vv:
+            return None
+        rk = int(np.int64(ct) * self._stride + edge_id)
+        l, eu, va = self._find_side(uu, rk)
+        r, ev, vb = self._find_side(vv, rk)
+        if l != NONE and l == r:
+            return None
+
+        x = self._new_node(edge_id, ct)
+        parent, c0, c1 = self._parent_l, self._child0_l, self._child1_l
+        rank = self._rank_l
+        dirty = self._dirty_nodes
+        self._in_l[x] = True
+        c0[x] = l
+        c1[x] = r
+        if l != NONE:
+            parent[l] = x
+            dirty.add(l)
+        if r != NONE:
+            parent[r] = x
+            dirty.add(r)
+        self._inc_add(uu, x, rk)
+        self._inc_add(vv, x, rk)
+        self._live_add(x)
+        dirty.add(x)
+
+        # zipper merge; (a, va) and (b, vb) are the chain heads and the
+        # slot each will hand to the node hung beneath it
+        cur, a, b = x, eu, ev
+        expired = None
+        while True:
+            if a == NONE and b == NONE:
+                parent[cur] = NONE
+                break
+            if a == NONE or b == NONE:
+                t, s = (a, va) if a != NONE else (b, vb)
+                parent[cur] = t
+                if s == 0:
+                    c0[t] = cur
+                else:
+                    c1[t] = cur
+                dirty.add(t)
+                break
+            if a == b:
+                # Lemma 5.7: the meeting node is the cycle's LCA -> expired
+                expired = a
+                p = parent[a]
+                parent[cur] = p
+                if p != NONE:
+                    if c0[p] == a:
+                        c0[p] = cur
+                    elif c1[p] == a:
+                        c1[p] = cur
+                    else:
+                        raise ForestInvariantError(
+                            f"node {a} is not a child of {p}")
+                    dirty.add(p)
+                self._delete_node(a)
+                break
+            if rank[a] < rank[b]:
+                lo, vlo = a, va
+            else:
+                lo, vlo, b, vb = b, vb, a, va
+            nxt = parent[lo]
+            parent[cur] = lo
+            if vlo == 0:
+                c0[lo] = cur
+            else:
+                c1[lo] = cur
+            dirty.add(lo)
+            if nxt != NONE:
+                if c0[nxt] == lo:
+                    va = 0
+                elif c1[nxt] == lo:
+                    va = 1
+                else:
+                    raise ForestInvariantError(
+                        f"node {lo} is not a child of {nxt}")
+            cur, a = lo, nxt
+        return expired
+
+    def _delete_node(self, x: int):
+        self._in_l[x] = False
+        self.n_live_from[x] = self._cur_ts + 1
+        self._inc_remove(int(self.n_u[x]), x)
+        self._inc_remove(int(self.n_v[x]), x)
+        self._live_remove(x)
+        self._dirty_nodes.discard(x)
+
+    def flush(self, ts: int):
+        last = self._last_l
+        in_l, c0, c1 = self._in_l, self._child0_l, self._child1_l
+        parent = self._parent_l
+        ent_node, ent_ts = self.ent_node, self.ent_ts
+        ent_l, ent_r, ent_p = self.ent_l, self.ent_r, self.ent_p
+        for x in self._dirty_nodes:
+            if not in_l[x]:
+                continue
+            l, r, p = c0[x], c1[x], parent[x]
+            j = 3 * x
+            if last[j] != l or last[j + 1] != r or last[j + 2] != p:
+                last[j] = l
+                last[j + 1] = r
+                last[j + 2] = p
+                ent_node.append(x)
+                ent_ts.append(ts)
+                ent_l.append(l)
+                ent_r.append(r)
+                ent_p.append(p)
+        for vert in self._dirty_verts:
+            lst = self._inc_node[vert]
+            node = lst[0] if lst else NONE
+            if self._last_vent[vert] != node:
+                self._last_vent[vert] = node
+                self.vent_vert.append(vert)
+                self.vent_ts.append(ts)
+                self.vent_node.append(node)
+        self._dirty_nodes.clear()
+        self._dirty_verts.clear()
+
+    def run(self):
+        super().run()
+        # write the list state back so the finished builder's numpy node
+        # arrays match the base class bit for bit
+        N = self.num_nodes
+        if N:
+            self.n_parent[:N] = self._parent_l[:N]
+            self.n_child[:N, 0] = self._child0_l[:N]
+            self.n_child[:N, 1] = self._child1_l[:N]
+            self.n_in[:N] = self._in_l[:N]
+            self._last[:N] = np.asarray(
+                self._last_l[:3 * N], np.int32).reshape(N, 3)
+        return self

@@ -25,9 +25,12 @@ import warnings
 
 import numpy as np
 
-from .core_time import CoreTimeTable, edge_core_times
-from .ecb_forest import NONE, ForestInvariantError, IncrementalBuilder
-from .query_api import ComponentBackend, VersionStore
+from .core_time import (CoreTimeTable, StratifiedCoreTable, default_ks,
+                        edge_core_times, stratified_core_times)
+from .ecb_forest import (NONE, FastIncrementalBuilder, ForestInvariantError,
+                        IncrementalBuilder)
+from .query_api import (ComponentBackend, InvalidQueryError, Provenance,
+                        TCCSQuery, TCCSResult, VersionStore, empty_result)
 from .temporal_graph import TemporalGraph
 
 
@@ -184,3 +187,259 @@ def build_pecb_index(g: TemporalGraph, k: int,
     tab = tab if tab is not None else edge_core_times(g, k)
     b = IncrementalBuilder(g, tab).run()
     return pack_index(g, k, b)
+
+
+# ----------------------------------------------------------------------
+# K-stratified index plane: one packed structure serves every k
+# (DESIGN.md §14)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class StratifiedPECB:
+    """All k strata of one workload in a single packed structure.
+
+    Layout: the per-k PECB arrays are concatenated stratum-by-stratum,
+    node/entry ids staying *local* to their stratum, with int64 pointer
+    tables (``knode_ptr``/``kent_ptr``/``kvent_ptr`` and
+    ``strata.kptr``) delimiting the blocks. ``slice_k(k)`` therefore
+    returns a :class:`PECBIndex` of pure zero-copy views that is
+    bit-identical to a standalone per-k build (test-asserted) — every
+    existing host query routine, the device packer and the store
+    serializer run unchanged on a slice.
+
+    Version membership (EDGES/SUBGRAPH modes, streaming resume) rides on
+    the :class:`StratifiedCoreTable` the construction already produced:
+    its record blocks are exactly the per-k :class:`VersionStore`
+    payloads, so the only extra per-version state is the endpoint
+    columns ``ver_src/ver_dst/ver_t``.
+
+    Query dispatch: ``answer`` routes ``k in supported_ks`` to the
+    stratum slice, answers ``k > k_max_graph`` exactly empty (every
+    window's k-core is a subgraph of the full-window k-core, which is
+    empty beyond the graph's degeneracy), and rejects an in-range but
+    unsupported k with :class:`InvalidQueryError` — silence would be a
+    wrong answer, not a trivial one.
+    """
+
+    n: int
+    m: int
+    t_max: int
+    k_max_graph: int
+    ks: tuple
+    # per-k node blocks (ids local to each block)
+    knode_ptr: np.ndarray       # int64[|K|+1]
+    node_u: np.ndarray          # int32[Ntot]
+    node_v: np.ndarray
+    node_ct: np.ndarray
+    node_edge: np.ndarray
+    node_live_from: np.ndarray
+    node_live_to: np.ndarray
+    # node entries: per-k CSR; block for stratum ki spans
+    # row_ptr[knode_ptr[ki]+ki : knode_ptr[ki+1]+ki+1] (one extra slot each)
+    row_ptr: np.ndarray         # int32[Ntot+|K|]
+    kent_ptr: np.ndarray        # int64[|K|+1]
+    ent_ts: np.ndarray          # int32[Etot]
+    ent_left: np.ndarray
+    ent_right: np.ndarray
+    ent_parent: np.ndarray
+    # vertex entry points: per-k CSR, one (n+1)-slot row_ptr block per k
+    vrow_ptr: np.ndarray        # int32[|K|*(n+1)]
+    kvent_ptr: np.ndarray       # int64[|K|+1]
+    vent_ts: np.ndarray         # int32[VEtot]
+    vent_node: np.ndarray
+    # version membership: stratified core-time records + endpoint columns
+    strata: StratifiedCoreTable | None = None
+    ver_src: np.ndarray | None = None
+    ver_dst: np.ndarray | None = None
+    ver_t: np.ndarray | None = None
+
+    backend_name = "pecb-stratified"
+
+    def __post_init__(self):
+        self.ks = tuple(int(k) for k in self.ks)
+        self._kset = frozenset(self.ks)
+        self._slices: dict[int, PECBIndex] = {}
+        self._versions_all: VersionStore | None = None
+
+    @property
+    def supported_ks(self) -> tuple:
+        return self.ks
+
+    @property
+    def versions(self) -> VersionStore | None:
+        """One :class:`VersionStore` over ALL strata (``k=0`` marks the
+        mixed view — no single k describes it). The device plane's
+        version-membership masks index this global space (with the
+        ``ver_k`` filter selecting each query's stratum), and
+        ``select``/``member_edges`` never consult ``k``, so the serving
+        planner can assemble EDGES/SUBGRAPH payloads for mixed-k batches
+        through the same store interface as a per-k index."""
+        if self.strata is None:
+            return None
+        if self._versions_all is None:
+            self._versions_all = VersionStore(
+                n=self.n, t_max=self.t_max, k=0,
+                edge_id=self.strata.edge_id,
+                ts_from=self.strata.ts_from,
+                ts_to=self.strata.ts_to,
+                ct=self.strata.ct,
+                src=self.ver_src, dst=self.ver_dst, t=self.ver_t)
+        return self._versions_all
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_u.shape[0])
+
+    def nbytes(self) -> int:
+        """Index payload: packed arrays + stratum pointer tables. The
+        version store (``strata``/``ver_*``) is excluded, mirroring
+        :meth:`PECBIndex.nbytes`."""
+        return sum(
+            a.nbytes
+            for a in (
+                self.knode_ptr, self.node_u, self.node_v, self.node_ct,
+                self.node_edge, self.node_live_from, self.node_live_to,
+                self.row_ptr, self.kent_ptr, self.ent_ts, self.ent_left,
+                self.ent_right, self.ent_parent, self.vrow_ptr,
+                self.kvent_ptr, self.vent_ts, self.vent_node,
+            )
+        )
+
+    def k_index(self, k: int) -> int:
+        try:
+            return self.ks.index(int(k))
+        except ValueError:
+            raise KeyError(f"k={k} not in supported_ks={self.ks}") from None
+
+    def slice_k(self, k: int) -> PECBIndex:
+        """The per-k :class:`PECBIndex` view of stratum ``k`` (cached;
+        zero-copy; bit-identical to a standalone build)."""
+        k = int(k)
+        hit = self._slices.get(k)
+        if hit is not None:
+            return hit
+        ki = self.k_index(k)
+        s, e = int(self.knode_ptr[ki]), int(self.knode_ptr[ki + 1])
+        es, ee = int(self.kent_ptr[ki]), int(self.kent_ptr[ki + 1])
+        vs, ve = int(self.kvent_ptr[ki]), int(self.kvent_ptr[ki + 1])
+        rs = s + ki
+        vr = ki * (self.n + 1)
+        versions = None
+        if self.strata is not None:
+            ss, se = int(self.strata.kptr[ki]), int(self.strata.kptr[ki + 1])
+            versions = VersionStore(
+                n=self.n, t_max=self.t_max, k=k,
+                edge_id=self.strata.edge_id[ss:se],
+                ts_from=self.strata.ts_from[ss:se],
+                ts_to=self.strata.ts_to[ss:se],
+                ct=self.strata.ct[ss:se],
+                src=self.ver_src[ss:se], dst=self.ver_dst[ss:se],
+                t=self.ver_t[ss:se])
+        idx = PECBIndex(
+            self.n, self.m, self.t_max, k,
+            self.node_u[s:e], self.node_v[s:e], self.node_ct[s:e],
+            self.node_edge[s:e], self.node_live_from[s:e],
+            self.node_live_to[s:e],
+            self.row_ptr[rs:rs + (e - s) + 1],
+            self.ent_ts[es:ee], self.ent_left[es:ee],
+            self.ent_right[es:ee], self.ent_parent[es:ee],
+            self.vrow_ptr[vr:vr + self.n + 1],
+            self.vent_ts[vs:ve], self.vent_node[vs:ve],
+            versions=versions)
+        self._slices[k] = idx
+        return idx
+
+    def answer(self, q: TCCSQuery) -> TCCSResult:
+        q.validate(n=self.n)
+        if q.k in self._kset:
+            return self.slice_k(q.k).answer(q)
+        if q.k > self.k_max_graph:
+            cq = q.canonical(self.t_max)
+            prov = Provenance(route="trivial", backend=self.backend_name)
+            return empty_result(cq, self.n, prov)
+        raise InvalidQueryError(
+            f"k={q.k} is not served by this index "
+            f"(supported_ks={self.ks}, k_max={self.k_max_graph})")
+
+    def answer_many(self, specs) -> list:
+        return [self.answer(q) for q in specs]
+
+    @classmethod
+    def from_parts(cls, strata: StratifiedCoreTable,
+                   indices: list, k_max_graph: int,
+                   ver_src: np.ndarray, ver_dst: np.ndarray,
+                   ver_t: np.ndarray) -> "StratifiedPECB":
+        ks = strata.ks
+        if len(indices) != len(ks):
+            raise ValueError("one PECBIndex per stratum required")
+        z32 = np.zeros(0, np.int32)
+
+        def ptr(sizes):
+            p = np.zeros(len(sizes) + 1, np.int64)
+            np.cumsum(np.asarray(sizes, np.int64), out=p[1:])
+            return p
+
+        def cat(field):
+            arrs = [getattr(ix, field) for ix in indices]
+            return np.concatenate(arrs) if arrs else z32.copy()
+
+        return cls(
+            n=strata.n, m=strata.m, t_max=strata.t_max,
+            k_max_graph=int(k_max_graph), ks=ks,
+            knode_ptr=ptr([ix.num_nodes for ix in indices]),
+            node_u=cat("node_u"), node_v=cat("node_v"),
+            node_ct=cat("node_ct"), node_edge=cat("node_edge"),
+            node_live_from=cat("node_live_from"),
+            node_live_to=cat("node_live_to"),
+            row_ptr=cat("row_ptr"),
+            kent_ptr=ptr([ix.ent_ts.shape[0] for ix in indices]),
+            ent_ts=cat("ent_ts"), ent_left=cat("ent_left"),
+            ent_right=cat("ent_right"), ent_parent=cat("ent_parent"),
+            vrow_ptr=cat("vrow_ptr"),
+            kvent_ptr=ptr([ix.vent_ts.shape[0] for ix in indices]),
+            vent_ts=cat("vent_ts"), vent_node=cat("vent_node"),
+            strata=strata, ver_src=ver_src, ver_dst=ver_dst, ver_t=ver_t)
+
+
+def _assemble_stratified(g: TemporalGraph, stab: StratifiedCoreTable,
+                         indices: list, k_max_graph: int) -> StratifiedPECB:
+    """Pack per-stratum indices + the stratified table into one
+    :class:`StratifiedPECB` (shared by cold build and streaming)."""
+    eid = stab.edge_id
+    return StratifiedPECB.from_parts(
+        stab, indices, k_max_graph,
+        ver_src=g.src[eid].astype(np.int32),
+        ver_dst=g.dst[eid].astype(np.int32),
+        ver_t=g.t[eid].astype(np.int32))
+
+
+def _forest_builder(g: TemporalGraph, tab: CoreTimeTable):
+    """Fastest available forest engine: native C when compilable (the
+    stratified plane's |K|-fold build makes this the dominant cost),
+    else the list-based Python fast path. Both pack bit-identically to
+    the base builder (test-asserted)."""
+    from . import ecb_native
+    if ecb_native.available():
+        return ecb_native.NativeForestBuilder(g, tab).run()
+    return FastIncrementalBuilder(g, tab).run()
+
+
+def build_stratified_index(g: TemporalGraph, ks=None, *,
+                           strata: StratifiedCoreTable | None = None,
+                           engine: str = "auto") -> StratifiedPECB:
+    """One build serving every k: fused stratified core-time sweep, then
+    one forest per stratum through the fastest available engine, packed
+    into a single :class:`StratifiedPECB`.
+
+    ``ks=None`` covers the graph's full coreness range
+    (:func:`default_ks`); pass ``strata`` to reuse a table the streaming
+    plane already maintains.
+    """
+    from .kcore import k_max as _graph_k_max
+    stab = strata if strata is not None else stratified_core_times(
+        g, ks, engine=engine)
+    indices = []
+    for k in stab.ks:
+        b = _forest_builder(g, stab.table_for(int(k)))
+        indices.append(pack_index(g, int(k), b))
+    return _assemble_stratified(g, stab, indices, _graph_k_max(g))

@@ -216,7 +216,7 @@ class Provenance:
     route: str                       # host | device | sweep | cache | trivial
                                      # | disk (index promoted from the store)
     backend: str = ""                # pecb | ef | ctmsf | pecb-device | ...
-    index_key: tuple | None = None   # (workload, k) when served by the engine
+    index_key: str | tuple | None = None  # workload key when engine-served
     batch_size: int = 1
     bucket: int | None = None        # padded device batch shape, if any
     timings: dict = dataclasses.field(default_factory=dict, compare=False)

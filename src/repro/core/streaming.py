@@ -58,9 +58,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from .core_time import CoreTimeTable
+from .core_time import (CoreTimeTable, default_ks,
+                        extend_stratified_core_times,
+                        shrink_stratified_core_times)
 from .ecb_forest import NONE, ForestInvariantError
-from .pecb_index import PECBIndex, _csr_sorted
+from .pecb_index import (PECBIndex, StratifiedPECB, _assemble_stratified,
+                         _csr_sorted, _forest_builder, pack_index)
 from .query_api import VersionStore
 from .temporal_graph import TemporalGraph
 
@@ -730,3 +733,61 @@ def shrink_pecb_index(g: TemporalGraph, k: int, tab: CoreTimeTable,
         vrow_ptr, vent_ts_c, vent_node_c,
         versions=VersionStore.from_table(g, k, tab),
     )
+
+
+# ----------------------------------------------------------------------
+# stratified epoch lifecycle: one call covers every k (DESIGN.md §14)
+# ----------------------------------------------------------------------
+
+def extend_stratified_index(g: TemporalGraph, prev: StratifiedPECB,
+                            ks=None, *, strata=None) -> StratifiedPECB:
+    """Grow a whole k-stratified index across one suffix-append epoch.
+
+    Each existing stratum grows through :func:`extend_pecb_index`
+    (bit-identical incremental); strata the new epoch adds (``ks``
+    defaults to ``default_ks(g)``, and appended edges can raise the
+    graph's degeneracy) are built cold through the fastest forest
+    engine. One call replaces |K| per-k lifecycle operations. Pass
+    ``strata`` to reuse an already-extended table (the registry times
+    the core and forest stages separately).
+    """
+    from .kcore import k_max as _graph_k_max
+    from .pecb_index import build_stratified_index
+
+    if prev.strata is None:
+        return build_stratified_index(g, ks, strata=strata)
+    if ks is None:
+        ks = default_ks(g)
+    stab = (strata if strata is not None
+            else extend_stratified_core_times(g, prev.strata, ks))
+    indices = []
+    for k in stab.ks:
+        tab = stab.table_for(int(k))
+        if k in prev.supported_ks:
+            indices.append(extend_pecb_index(g, int(k), tab,
+                                             prev.slice_k(k)))
+        else:
+            indices.append(pack_index(g, int(k), _forest_builder(g, tab)))
+    return _assemble_stratified(g, stab, indices, _graph_k_max(g))
+
+
+def shrink_stratified_index(g: TemporalGraph, prev: StratifiedPECB,
+                            ks=None, *, strata=None) -> StratifiedPECB:
+    """Shrink a whole k-stratified index across one prefix-expiry epoch
+    (pure slicing per stratum, :func:`shrink_pecb_index`). ``ks``
+    defaults to ``default_ks(g)`` — expiry can lower the degeneracy, in
+    which case the dropped strata simply disappear (queries above the
+    new ``k_max_graph`` stay exactly empty)."""
+    from .kcore import k_max as _graph_k_max
+    from .pecb_index import build_stratified_index
+
+    if prev.strata is None:
+        return build_stratified_index(g, ks, strata=strata)
+    if ks is None:
+        ks = default_ks(g)
+    stab = (strata if strata is not None
+            else shrink_stratified_core_times(g, prev.strata, ks))
+    indices = [shrink_pecb_index(g, int(k), stab.table_for(int(k)),
+                                 prev.slice_k(k))
+               for k in stab.ks]
+    return _assemble_stratified(g, stab, indices, _graph_k_max(g))

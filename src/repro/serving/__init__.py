@@ -1,7 +1,8 @@
 """TCCS serving engine (DESIGN.md §7, §8): shape-bucketed micro-batching,
 host/device query planning, per-query LRU result caching, a memoizing
-(workload, k) index registry, and batch-dim-sharded device execution, all
-behind the typed Query API v2 surface.
+per-workload registry of k-stratified indexes (one build serves every k),
+and batch-dim-sharded device execution, all behind the typed Query API v2
+surface.
 
 Quick start::
 

@@ -9,7 +9,7 @@ pending requests and flushes a batch when either
 * the oldest pending request has waited ``flush_ms`` (the latency SLO knob), or
 * someone forces a flush (``flush()``, ``drain()``, ``close()``).
 
-One batcher per index handle — requests against different (workload, k)
+One batcher per index handle — requests against different workload
 indexes can never share a device launch, so the engine keys batchers by
 handle. Downstream shape bucketing (executor.py) pads each flushed batch to
 a power of two, so the flush size need not be exact for compile stability.

@@ -10,10 +10,13 @@ one entry. Real query streams are heavily skewed (contact tracing
 re-queries the same hot cases; the bench workloads draw vertices from a
 Zipf), which is what makes an LRU worthwhile before any device work.
 
-When the index registry evicts a (workload, k) pair, the engine's eviction
-listener calls :meth:`ResultCache.purge_index` so stale keys for dead
-handles stop occupying LRU capacity (they could never be hit *wrongly* —
-results are immutable — but they crowd out live entries). Streaming epochs
+When the index registry evicts a workload's stratified index, the engine's
+eviction listener calls :meth:`ResultCache.purge_index` so stale keys for
+dead handles stop occupying LRU capacity (they could never be hit
+*wrongly* — results are immutable — but they crowd out live entries). The
+k axis lives inside the canonical spec key, not the index key, so ONE
+workload-level purge clears the results of every k stratum at once — and
+touches nothing cached for other workloads (regression-tested). Streaming epochs
 invalidate through :meth:`purge_window`: suffix appends drop nothing (every
 cached canonical window predates the append); retention trims drop exactly
 the windows that touch the expired prefix and *rehome* the survivors into
@@ -108,8 +111,9 @@ class ResultCache:
 
     def purge_index(self, index_key) -> int:
         """Drop every entry whose key belongs to ``index_key`` (an evicted
-        (workload, k) pair). Engine cache keys are ``(index_key, spec_key)``
-        tuples; foreign-shaped keys are left alone. Returns purge count."""
+        workload). Engine cache keys are ``(index_key, spec_key)`` tuples
+        with k inside the spec key, so one call clears every k stratum's
+        results; foreign-shaped keys are left alone. Returns purge count."""
         with self._lock:
             dead = [k for k in self._data
                     if isinstance(k, tuple) and len(k) == 2

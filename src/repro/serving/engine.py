@@ -7,23 +7,37 @@ Wires the subsystem together::
                                                boundary; clamped windows
                                                share one cache key; empty
                                                windows resolve instantly)
-        -> registry.get_nowait(workload, k)   (memoized handle, or kick off
-                                               the background build; a cold
-                                               key never blocks the caller)
+        -> registry.get_nowait(workload)      (memoized k-stratified handle
+                                               serving EVERY supported k, or
+                                               kick off the background
+                                               build; a cold workload never
+                                               blocks the caller)
         -> result cache probe                 (hit: resolve immediately,
                                                re-stamped route="cache")
         -> per-handle micro-batcher           (shape-bucketed batching;
-                                               cold keys enqueue when the
-                                               build future resolves)
+                                               cold workloads enqueue when
+                                               the build future resolves)
         -> planner                            (host typed answer | sharded
-                                               device, full-mode launch
-                                               when the batch wants edges)
+                                               device; per-query k rides as
+                                               a device operand — a mixed-k
+                                               batch is ONE launch of ONE
+                                               compiled program)
         -> future resolves with a TCCSResult
+
+The index plane is k-agnostic (DESIGN.md §14): one workload maps to one
+:class:`StratifiedPECB` handle whose strata cover ``handle.supported_ks``,
+so a batch mixing k=2 and k=5 queries shares a handle, a batcher, a
+device mirror and a compiled program. Queries for a k above the graph's
+k-max are answered exactly empty host-side; an in-range k outside the
+registry's strata policy raises :class:`InvalidQueryError` onto the
+query's future.
 
 ``sweep(workload, WindowSweep(u, k, windows))`` answers one vertex over
 many sliding windows in a single device launch (the contact-tracing
 trajectory query); cache-hot windows are skipped, misses share one
-``window_sweep`` program.
+``window_sweep`` program run against the k stratum's own device block
+(``IndexHandle.stratum_device``) so a single-k sweep never pays
+propagation over the other |K|-1 strata.
 
 ``ingest(workload, edges)`` is the streaming entry point (DESIGN.md §9):
 suffix edges extend the graph epoch, resident indexes refresh
@@ -125,7 +139,7 @@ class EngineConfig:
     min_bucket: int = 8          # smallest padded batch shape
     host_threshold: int = 8      # batches below this run host Algorithm 1
     cache_capacity: int = 4096   # LRU result-cache entries (<=0 disables)
-    registry_capacity: int = 8   # resident (workload, k) index pairs
+    registry_capacity: int = 8   # resident workload indexes (all-k each)
     trace: bool = True           # record query-lifecycle spans (§11)
     trace_buffer: int = 16384    # finished-span ring capacity
     slow_query_ms: float | None = None  # slow-query log threshold (off=None)
@@ -166,8 +180,8 @@ class ServingEngine:
             self.executor, self.cache, self.metrics,
             host_threshold=cfg.host_threshold, min_bucket=cfg.min_bucket,
             max_batch=cfg.max_batch)
-        # key -> (handle the batcher's execute_fn is bound to, batcher)
-        self._batchers: dict[tuple[str, int], tuple[IndexHandle, MicroBatcher]] = {}
+        # workload -> (handle the batcher's execute_fn is bound to, batcher)
+        self._batchers: dict[str, tuple[IndexHandle, MicroBatcher]] = {}
         self._lock = named_lock("engine")
         self._closed = False
         # retention state: per-workload policy + ingest tick. The epoch
@@ -194,14 +208,26 @@ class ServingEngine:
     def register_graph(self, name: str, g) -> None:
         self.registry.register_graph(name, g)
 
-    def warmup(self, workload: str, k: int, *, sweep: bool = False,
-               full: bool = False) -> IndexHandle:
-        """Build the (workload, k) index and pre-compile every bucket shape
-        of the vertex-mask program, so no live request pays a build or an
-        XLA compile. ``sweep=True`` / ``full=True`` additionally warm the
-        window-sweep / full-mode (EDGES) programs for callers that will use
-        those paths."""
-        handle = self.registry.get(workload, k)
+    def warmup(self, workload: str, k: int | None = None, *,
+               sweep: bool = False, full: bool = False,
+               sweep_ks=None) -> IndexHandle:
+        """Build the workload's k-stratified index and pre-compile every
+        bucket shape of the vertex-mask program, so no live request pays a
+        build or an XLA compile — for *any* k the handle supports (the
+        programs take k as a device operand, so one warmup covers every k
+        mix). ``sweep=True`` / ``full=True`` additionally warm the
+        window-sweep / mixed-k full-mode (EDGES) programs for callers that
+        will use those paths; the sweep program runs against per-stratum
+        mirrors, so with ``sweep=True`` pass ``sweep_ks`` to bound the
+        warm to the ks you will actually sweep (default: every supported
+        k — |K| compiles per bucket). The ``k`` argument is deprecated
+        and ignored."""
+        if k is not None:
+            warnings.warn(
+                "ServingEngine.warmup(workload, k) is deprecated: one "
+                "stratified index serves every k — warmup(workload) warms "
+                "all of them", DeprecationWarning, stacklevel=2)
+        handle = self.registry.get(workload)
         if handle.pecb.num_nodes == 0:
             return handle  # host-only route, nothing to compile
         cfg = self.config
@@ -211,26 +237,37 @@ class ServingEngine:
                 min(b, cfg.max_batch), cfg.min_bucket, cfg.max_batch)
             self.executor.run(handle.device, [0], [1], [0], bucket)
             if sweep:
-                self.executor.run_sweep(handle.device, 0, [1], [0], bucket)
+                for sk in (handle.supported_ks if sweep_ks is None
+                           else sweep_ks):
+                    self.executor.run_sweep(handle.stratum_device(sk), 0,
+                                            [1], [0], bucket)
             if full:
-                self.executor.run_full(handle.device, [0], [1], [0], bucket)
+                self.executor.run_full_mixed(handle.device, [0], [1], [0],
+                                             [0], bucket)
             if b >= cfg.max_batch:
                 break
             b *= 2
         return handle
 
-    def prefetch(self, workload: str, k: int) -> Future:
-        """Kick off (or join) the background index build; never blocks."""
-        return self.registry.get_async(workload, k)
+    def prefetch(self, workload: str, k: int | None = None) -> Future:
+        """Kick off (or join) the background index build; never blocks.
+        The ``k`` argument is deprecated and ignored (the build covers
+        every supported k)."""
+        if k is not None:
+            warnings.warn(
+                "ServingEngine.prefetch(workload, k) is deprecated: one "
+                "stratified build serves every k — prefetch(workload)",
+                DeprecationWarning, stacklevel=2)
+        return self.registry.get_async(workload)
 
     # -- streaming ingest -------------------------------------------------
     def ingest(self, workload: str, edges,
                wait: bool = False, timeout: float | None = 120.0) -> dict:
         """Append suffix ``edges`` to ``workload``'s graph and refresh its
-        resident indexes incrementally in the background.
+        resident stratified index incrementally in the background.
 
-        Non-blocking by default: returns ``{(workload, k): Future}`` for
-        every resident index being refreshed (empty when none is resident
+        Non-blocking by default: returns ``{workload: Future}`` for the
+        resident index being refreshed (empty when none is resident
         — the next cold build simply sees the new epoch). Queries keep
         resolving throughout a refresh, pinned to the old epoch's handle;
         the swap is atomic and the refresh listener retires the old
@@ -273,7 +310,7 @@ class ServingEngine:
         ``policy.every``) and auto-trims the expired prefix in the
         background — and the policy is evaluated once right here, so a
         workload already over its window starts trimming immediately;
-        the returned ``{(workload, k): Future}`` dict (usually empty) lets
+        the returned ``{workload: Future}`` dict (usually empty) lets
         callers wait for that first trim to land."""
         if isinstance(policy, int):
             policy = RetentionPolicy(window=policy)
@@ -291,11 +328,11 @@ class ServingEngine:
     def retain(self, workload: str, t_cut: int, wait: bool = False,
                timeout: float | None = 120.0) -> dict:
         """Manually expire the prefix below ``t_cut`` (see
-        :meth:`IndexRegistry.retain`): resident indexes shrink in the
+        :meth:`IndexRegistry.retain`): the resident index shrinks in the
         background, queries keep resolving against the old epoch until the
         atomic swap, expired cache windows are purged and surviving ones
-        rehomed into the shifted timeline. Returns ``{(workload, k):
-        Future}`` like :meth:`ingest`."""
+        rehomed into the shifted timeline. Returns ``{workload: Future}``
+        like :meth:`ingest`."""
         if self._closed:
             raise RuntimeError("engine is closed")
         self.metrics.count("retentions")
@@ -361,29 +398,12 @@ class ServingEngine:
     def submit_specs(self, workload: str,
                      specs: Iterable[TCCSQuery]) -> list[Future]:
         """One TCCSResult future per spec, in input order; specs may mix k
-        values (each k routes to its own index/batcher) and result modes
-        (a batch launches the full-mode device program iff any of its
-        members wants EDGES/SUBGRAPH)."""
-        specs = list(specs)
-        # validate the WHOLE call before any group is enqueued: a malformed
-        # spec in a later k-group must not leave earlier groups already
-        # submitted (all-or-nothing across groups, not just within one)
-        try:
-            g = self.registry.resolve_graph(workload)
-        except KeyError:
-            g = None
-        for s in specs:
-            s.validate(n=g.n if g is not None else None)
-        futures: list = [None] * len(specs)
-        groups: dict[int, list[int]] = {}
-        for i, s in enumerate(specs):
-            groups.setdefault(s.k, []).append(i)
-        for k, idxs in groups.items():
-            fs = self._submit_specs(workload, k, [specs[i] for i in idxs],
-                                    lenient=False)
-            for i, f in zip(idxs, fs):
-                futures[i] = f
-        return futures
+        values *and* result modes freely — every k shares the workload's
+        one stratified index, one batcher and one compiled program (k is a
+        device operand), so a mixed-k batch is still a single launch. A
+        batch launches the full-mode program iff any of its members wants
+        EDGES/SUBGRAPH."""
+        return self._submit_specs(workload, list(specs), lenient=False)
 
     def answer(self, workload: str, spec: TCCSQuery,
                timeout: float | None = 60.0) -> TCCSResult:
@@ -418,22 +438,23 @@ class ServingEngine:
                        queries: Iterable[Sequence[int]]) -> list[Future]:
         specs = [TCCSQuery(int(u), int(ts), int(te), int(k))
                  for (u, ts, te) in queries]
-        inner = self._submit_specs(workload, int(k), specs, lenient=True)
+        inner = self._submit_specs(workload, specs, lenient=True)
         return [_vertices_future(f) for f in inner]
 
     # -- the shared submit core ------------------------------------------
-    def _submit_specs(self, workload: str, k: int, specs: list[TCCSQuery],
+    def _submit_specs(self, workload: str, specs: list[TCCSQuery],
                       *, lenient: bool) -> list[Future]:
         """Validate/canonicalize, short-circuit trivial queries and cache
-        hits, batch the misses. A cold (workload, k) never blocks the
-        caller: the index builds on the registry's background pool and the
-        misses are enqueued when the handle future resolves."""
+        hits, batch the misses (all ks together — one handle serves them).
+        A cold workload never blocks the caller: the index builds on the
+        registry's background pool and the misses are enqueued when the
+        handle future resolves."""
         if self._closed:
             raise RuntimeError("engine is closed")
-        key = (workload, int(k))
+        key = str(workload)
         # probe only: don't schedule a build until a cache miss proves one
         # is needed (a fully-cached stream must not rebuild an evicted index)
-        handle = self.registry.get_nowait(workload, k, start_build=False)
+        handle = self.registry.get_nowait(workload, start_build=False)
         g = None
         if handle is not None:
             # epoch pinning: canonicalize against the graph the resident
@@ -476,7 +497,7 @@ class ServingEngine:
             # callback (covering error resolutions too)
             span = self.tracer.start_span(
                 "query", parent=None, cat="query", t0=t0,
-                workload=workload, k=int(k), u=cq.u, ts=cq.ts, te=cq.te)
+                workload=workload, k=int(cq.k), u=cq.u, ts=cq.ts, te=cq.te)
             tr, sp = span.ids
             if trivial:
                 # an empty window (or lenient out-of-range vertex) needs no
@@ -502,13 +523,13 @@ class ServingEngine:
                                       spec=cq, span=span))
         if misses:
             if handle is not None:
-                self._dispatch_misses(workload, k, handle, misses)
+                self._dispatch_misses(workload, handle, misses)
             else:
                 self.metrics.count("cold_submits")
-                self._submit_when_built(workload, k, misses)
+                self._submit_when_built(workload, misses)
         return futures
 
-    def _dispatch_misses(self, workload: str, k: int, handle: IndexHandle,
+    def _dispatch_misses(self, workload: str, handle: IndexHandle,
                          misses: list[Request]) -> None:
         """Hand misses to the handle's batcher, riding out retirement
         races: a refresh/eviction listener may close the batcher between
@@ -520,27 +541,65 @@ class ServingEngine:
         *resurrect* a batcher bound to the retired handle (its retirement
         already ran); the post-enqueue check retires it again so a dead
         epoch never stays pinned — ``MicroBatcher.close`` drains pending
-        work first, so the just-enqueued misses still resolve."""
-        key = (workload, int(k))
+        work first, so the just-enqueued misses still resolve.
+
+        Misses whose k falls outside the handle's strata never reach the
+        batcher: they are answered host-side right here (exactly empty
+        above the graph's k-max; ``InvalidQueryError`` onto the future for
+        an in-range k the strata policy excludes). The partition re-runs
+        per retry because an epoch swap can change ``supported_ks`` (a
+        retention trim drops strata above the trimmed graph's k-max)."""
+        key = str(workload)
         for _ in range(8):   # bounded: each retry needs another swap race
-            cur = self.registry.get_nowait(workload, k, start_build=False)
+            cur = self.registry.get_nowait(workload, start_build=False)
             if cur is None:
                 self.metrics.count("cold_submits")
-                self._submit_when_built(workload, k, misses)
+                self._submit_when_built(workload, misses)
                 return
             handle = cur
+            supported = set(handle.pecb.supported_ks)
+            batchable = []
+            for req in misses:
+                kq = req.spec.k if req.spec is not None else None
+                if kq is None or kq in supported:
+                    batchable.append(req)
+                elif not req.future.done():
+                    self._answer_unsupported_k(key, handle, req)
+            if not batchable:
+                return
+            misses = batchable
             try:
-                self._batcher_for(handle).submit_many(misses)
+                self._batcher_for(handle).submit_many(batchable)
             except RuntimeError:
                 if self._closed:
                     raise
                 continue
-            latest = self.registry.get_nowait(workload, k, start_build=False)
+            latest = self.registry.get_nowait(workload, start_build=False)
             if latest is not None and latest is not handle:
                 self._retire_batcher(key, handle)
             return
         raise RuntimeError(
-            f"batcher for {key} kept closing under submit")
+            f"batcher for {key!r} kept closing under submit")
+
+    def _answer_unsupported_k(self, key: str, handle: IndexHandle,
+                              req: Request) -> None:
+        """Resolve one miss whose k has no stratum in the handle.
+        ``StratifiedPECB.answer`` owns the semantics: k above the graph's
+        k-max is exactly empty (computed host-side, no index needed), any
+        other unsupported k raises ``InvalidQueryError`` — which lands on
+        the future, like every other per-query failure."""
+        try:
+            res = handle.pecb.answer(req.spec)
+        except BaseException as exc:
+            req.future.set_exception(exc)
+            return
+        tr, sp = req.span.ids if req.span is not None else (None, None)
+        res = dataclasses.replace(res, provenance=dataclasses.replace(
+            res.provenance, index_key=key, trace_id=tr, span_id=sp))
+        self.cache.put((key, req.spec.cache_key()), res,
+                       epoch=handle.epoch)
+        self.metrics.count("unsupported_k_queries")
+        req.future.set_result(res)
 
     def _finish_root_span(self, span, cq: TCCSQuery):
         """Done callback closing a miss's root query span. Attached at
@@ -586,7 +645,7 @@ class ServingEngine:
         index is built first (use :meth:`prefetch` to hide that)."""
         if self._closed:
             raise RuntimeError("engine is closed")
-        handle = self.registry.get(workload, ws.k, timeout=timeout)
+        handle = self.registry.get(workload, timeout=timeout)
         g, key = handle.graph, handle.key
         specs = ws.specs()
         for s in specs:
@@ -618,7 +677,12 @@ class ServingEngine:
                 self.metrics.count("cache_misses")
                 misses.append((i, cq))
         cfg = self.config
-        if misses and (handle.pecb.num_nodes == 0
+        # an unsupported k routes host: above the graph's k-max every
+        # window is exactly empty (answered without an index); an in-range
+        # k outside the strata policy raises InvalidQueryError — the sweep
+        # is synchronous, so it surfaces to the caller directly
+        k_on_device = ws.k in handle.pecb.supported_ks
+        if misses and (handle.pecb.num_nodes == 0 or not k_on_device
                        or len(misses) < cfg.host_threshold):
             es = span.child("execute", route="host")
             for i, cq in misses:
@@ -633,6 +697,11 @@ class ServingEngine:
             self.metrics.count("host_queries", len(misses))
         elif misses:
             store = handle.pecb.versions
+            # single-k launch: carve the stratum's block out of the fused
+            # mixed-k mirror (lazy per-handle memo) so sweep propagation
+            # pays for one stratum's nodes, not all |K|; ``u`` is a plain
+            # row of the sliced per-vertex CSR
+            sdix = handle.stratum_device(int(ws.k))
             for c0 in range(0, len(misses), cfg.max_batch):
                 chunk = misses[c0:c0 + cfg.max_batch]
                 bucket = self.executor.final_bucket(
@@ -640,7 +709,7 @@ class ServingEngine:
                 ts = [cq.ts for _, cq in chunk]
                 te = [cq.te for _, cq in chunk]
                 t1 = time.perf_counter()
-                vmask = self.executor.run_sweep(handle.device, ws.u, ts, te,
+                vmask = self.executor.run_sweep(sdix, int(ws.u), ts, te,
                                                 bucket)
                 dt = time.perf_counter() - t1
                 span.child("execute", route="sweep", bucket=bucket,
@@ -663,18 +732,18 @@ class ServingEngine:
         self.metrics.observe("sweep_e2e", time.perf_counter() - t0)
         return results
 
-    def _submit_when_built(self, workload: str, k: int,
+    def _submit_when_built(self, workload: str,
                            misses: list[Request]) -> None:
         """Chain a batch of misses onto the pending index build."""
         def on_built(handle_fut: Future) -> None:
             try:
                 handle = handle_fut.result()
-                self._dispatch_misses(workload, k, handle, misses)
+                self._dispatch_misses(workload, handle, misses)
             except BaseException as exc:  # build failed or engine closed
                 for req in misses:
                     if not req.future.done():
                         req.future.set_exception(exc)
-        self.registry.get_async(workload, k).add_done_callback(on_built)
+        self.registry.get_async(workload).add_done_callback(on_built)
 
     def query(self, workload: str, k: int, u: int, ts: int, te: int,
               timeout: float | None = 60.0) -> frozenset:
@@ -705,24 +774,25 @@ class ServingEngine:
             b = MicroBatcher(
                 self.planner.bind(handle),
                 max_batch=cfg.max_batch, flush_ms=cfg.flush_ms,
-                name=f"batcher-dispatch-{handle.key[0]}-k{handle.key[1]}",
+                name=f"batcher-dispatch-{handle.key}",
                 metrics=self.metrics)
             self._batchers[handle.key] = (handle, b)
         if stale is not None:
             stale.close()
         return b
 
-    def _on_index_evicted(self, key: tuple[str, int],
-                          handle: IndexHandle) -> None:
+    def _on_index_evicted(self, key: str, handle: IndexHandle) -> None:
         """Registry eviction hook: retire the batcher (and its worker
         thread) bound to the evicted handle, and purge the dead handle's
-        result-cache entries so stale keys stop occupying LRU capacity."""
+        result-cache entries — ONE workload-level purge clears every k
+        stratum's results, because the cache key is (workload, spec key)
+        and k lives inside the spec key."""
         purged = self.cache.purge_index(key)
         if purged:
             self.metrics.count("cache_purged", purged)
         self._retire_batcher(key, handle)
 
-    def _on_index_retained(self, key: tuple[str, int], old: IndexHandle,
+    def _on_index_retained(self, key: str, old: IndexHandle,
                            new: IndexHandle, t_cut: int) -> None:
         """Registry retention hook (prefix-expiry trim landed). Ordering:
         (1) raise the cache's epoch floor (idempotent with the raise at
@@ -739,7 +809,7 @@ class ServingEngine:
         if purged:
             self.metrics.count("cache_purged_retention", purged)
 
-    def _on_index_refreshed(self, key: tuple[str, int], old: IndexHandle,
+    def _on_index_refreshed(self, key: str, old: IndexHandle,
                             new: IndexHandle) -> None:
         """Registry refresh hook (streaming epoch landed): run the
         *targeted* cache purge — only results whose canonical window
@@ -754,8 +824,7 @@ class ServingEngine:
             self.metrics.count("cache_purged_targeted", purged)
         self._retire_batcher(key, old)
 
-    def _retire_batcher(self, key: tuple[str, int],
-                        handle: IndexHandle) -> None:
+    def _retire_batcher(self, key: str, handle: IndexHandle) -> None:
         with self._lock:
             entry = self._batchers.get(key)
             if entry is None or entry[0] is not handle:

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.batch_query import (DeviceIndex, batch_query,
-                                    batch_query_full, window_sweep)
+                                    batch_query_full,
+                                    batch_query_full_mixed, window_sweep)
 
 #: Inert padding query: te < ts matches no core-time entry (cts are >= 1).
 PAD_QUERY = (0, 1, 0)
@@ -164,6 +165,37 @@ class ShardedExecutor:
                 np.asarray(  # repro: ignore[hot-path-transfer] — ditto
                     jax.device_get(vermask))[:b, :dix.num_versions])
 
+    def run_full_mixed(self, dix: DeviceIndex, slot, ts, te, kq,
+                       bucket: int) -> tuple[np.ndarray, np.ndarray]:
+        """Mixed-k full-mode launch against a *stratified* device index:
+        ``slot`` is the per-query entry slot ``k_index(k) * n + u`` and
+        ``kq`` the per-query k filtering the shared version arrays — both
+        plain device operands, so every k mix shares one compiled program
+        per bucket. Returns the same ``(vertex masks, version masks)``
+        pair as :meth:`run_full`."""
+        b = len(slot)
+        if self.align(bucket) != bucket:
+            raise ValueError(f"bucket {bucket} is not device-aligned; "
+                             "use final_bucket()")
+        qs, qts, qte = self._place(*pad_queries(slot, ts, te, bucket), bucket)
+        kq = np.asarray(kq, np.int32)
+        if kq.shape[0] < bucket:
+            # pad lanes are already inert via te < ts; kq=0 matches no
+            # stratum, keeping the version mask all-False twice over
+            kq = np.concatenate([kq, np.zeros(bucket - b, np.int32)])
+        if self.batch_sharding is not None and bucket % self.num_devices == 0:
+            # repro: ignore[hot-path-transfer] — padded operand upload
+            qkq = jax.device_put(jnp.asarray(kq), self.batch_sharding)
+        else:
+            qkq = jnp.asarray(kq)
+        vmask, vermask = self._dispatch(
+            batch_query_full_mixed, "batch_query_full_mixed", bucket,
+            (dix, qs, qts, qte, qkq))
+        # repro: ignore[hot-path-transfer] — measured result downloads
+        return (np.asarray(jax.device_get(vmask))[:b],
+                np.asarray(  # repro: ignore[hot-path-transfer] — ditto
+                    jax.device_get(vermask))[:b, :dix.num_versions])
+
     def run_sweep(self, dix: DeviceIndex, u: int, ts, te,
                   bucket: int) -> np.ndarray:
         """bool[W, n] masks of one vertex over W windows in one launch.
@@ -187,4 +219,5 @@ class ShardedExecutor:
         window-sweep programs). Bucketing tests assert this stays flat
         across batch sizes within one bucket."""
         return (batch_query._cache_size() + batch_query_full._cache_size()
+                + batch_query_full_mixed._cache_size()
                 + window_sweep._cache_size())

@@ -31,6 +31,7 @@ import time
 
 import numpy as np
 
+from repro.core.pecb_index import StratifiedPECB
 from repro.core.query_api import (Provenance, ResultMode, TCCSQuery,
                                   build_result)
 
@@ -102,7 +103,12 @@ class QueryPlanner:
 
     def execute(self, handle, batch: list[Request]) -> list:
         b = len(batch)
-        k = handle.key[1]
+        # bare requests carry no spec and need a default k: the smallest
+        # supported stratum (a per-k PECBIndex handle keeps its own k)
+        k = getattr(handle.pecb, "k", None)
+        if k is None:
+            ks = handle.pecb.supported_ks
+            k = min(ks) if ks else 2
         specs = [self._spec_of(r, k) for r in batch]
         store = handle.pecb.versions
         route = self.route(handle, b)
@@ -136,7 +142,17 @@ class QueryPlanner:
         else:
             bucket = self.executor.final_bucket(b, self.min_bucket,
                                                 self.max_batch)
-            u = [s.u for s in specs]
+            # on a stratified index the per-query k enters as the entry
+            # *slot* k_index(k) * n + u — batch_query's vertex-CSR lookup
+            # is the only place u appears, so the mixed-k batch shares the
+            # per-k path's compiled program (unsupported ks were answered
+            # host-side before batching; k_index raising here is a bug)
+            pecb = handle.pecb
+            mixed = isinstance(pecb, StratifiedPECB)
+            if mixed:
+                u = [pecb.k_index(s.k) * pecb.n + s.u for s in specs]
+            else:
+                u = [s.u for s in specs]
             ts = [s.ts for s in specs]
             te = [s.te for s in specs]
             need_edges = (store is not None
@@ -145,7 +161,12 @@ class QueryPlanner:
             exec_spans = [r.span.child("execute", route="device",
                                        bucket=bucket, t0=t_exec)
                           if r.span is not None else None for r in batch]
-            if need_edges:
+            if need_edges and mixed:
+                # the version arrays are the one index space shared across
+                # strata — the kq operand scopes the edge payload per query
+                vmask, vermask = self.executor.run_full_mixed(
+                    handle.device, u, ts, te, [s.k for s in specs], bucket)
+            elif need_edges:
                 vmask, vermask = self.executor.run_full(
                     handle.device, u, ts, te, bucket)
             else:

@@ -1,57 +1,79 @@
-"""Index registry: build, memoize, evict (PECB, Device) index pairs
-(DESIGN.md §7.4).
+"""Index registry: build, memoize, evict (StratifiedPECB, Device) index
+pairs (DESIGN.md §7.4, §14).
 
-One engine serves many (workload, k) combinations concurrently — a contact
-tracer asks k=2 and k=3 over the same graph, a dashboard watches five
-graphs. Index construction is the offline plane (seconds); queries are the
-online plane (microseconds). The registry keeps that split honest: the
-first request for a (workload, k) pays the build once, everyone after gets
-the memoized handle; capacity-bounded LRU eviction drops cold indexes.
+One engine serves many workloads concurrently — a contact tracer asks k=2
+and k=3 over the same graph, a dashboard watches five graphs. Index
+construction is the offline plane (seconds); queries are the online plane
+(microseconds). The registry keeps that split honest: the first request
+for a workload pays ONE k-stratified build (`build_stratified_index` —
+one fused core-time sweep plus one forest per stratum), and everyone
+after gets the memoized handle, which answers *every* supported k;
+capacity-bounded LRU eviction drops cold workloads.
+
+Keys are workload names. The pre-stratified registry keyed residency by
+``(workload, k)`` and built |K| independent indexes per graph; that key
+space is collapsed — the k axis now lives inside the handle
+(``handle.supported_ks``), and the legacy two-argument lookups remain as
+``DeprecationWarning`` shims that ignore the k.
+
+Which strata a workload gets is the registry's ``ks`` policy: the
+default (``None``) covers the graph's full useful range
+``default_ks(g)`` = 2..k_max(g); a global tuple or a per-workload
+``set_ks`` override bounds |K| for graphs whose degeneracy makes the
+full range wasteful. Queries for a k above ``k_max`` are exactly empty
+and need no stratum; an in-range k outside the policy raises
+``InvalidQueryError`` at answer time.
 
 Builds run on a small background pool and are exposed three ways:
 
 * ``get_async`` — returns a ``Future[IndexHandle]`` immediately; a
-  thundering herd on a cold key coalesces onto one pending future, while
-  distinct keys build in parallel (bounded by ``build_workers``).
+  thundering herd on a cold workload coalesces onto one pending future,
+  while distinct workloads build in parallel (bounded by
+  ``build_workers``).
 * ``get_nowait`` — non-blocking probe; on a miss it (optionally) kicks off
   the background build and returns ``None`` so the caller's thread never
   blocks behind a multi-second build (the engine's submit path uses this).
 * ``get`` — the blocking convenience wrapper (``get_async().result()``).
 
-Each build records per-stage wall times (core times, forest, pack, device
-upload) on the handle and into the metrics sink (``index_build_<stage>``).
+Each build records per-stage wall times (stratified core times, forests,
+device upload) on the handle and into the metrics sink
+(``index_build_<stage>``).
 
 Graphs resolve by name: either registered explicitly (``register_graph``)
 or one of the named bench workloads (``BENCH_WORKLOADS``).
 
 Streaming epochs (DESIGN.md §9): ``extend_graph(name, edges)`` appends a
-timestamp suffix to a registered graph and *refreshes* every resident
-``(name, k)`` handle incrementally on a dedicated background worker
-(``extend_core_times`` + ``extend_pecb_index`` + ``refresh_device`` —
-bit-identical to a cold rebuild, at a fraction of the cost). Handles are
-immutable and **epoch-versioned**: the swap into the registry is atomic
-under the registry lock, so queries keep being answered against the old
-epoch's handle until the refresh lands, and in-flight batches holding the
-old handle stay consistent (its graph, index and device mirror describe
-one snapshot). Refresh listeners (``add_refresh_listener``) let the engine
-retire the old handle's batcher and run the *targeted* result-cache purge.
+timestamp suffix to a registered graph and *refreshes* the resident
+handle incrementally on a dedicated background worker
+(``extend_stratified_core_times`` + ``extend_stratified_index`` +
+``refresh_device`` — bit-identical to a cold rebuild for every stratum,
+at a fraction of the cost; strata the appended edges add, e.g. a raised
+k_max under the default policy, are built cold inside the same swap).
+Handles are immutable and **epoch-versioned**: the swap into the
+registry is atomic under the registry lock, so queries keep being
+answered against the old epoch's handle until the refresh lands, and
+in-flight batches holding the old handle stay consistent (its graph,
+index and device mirror describe one snapshot). Refresh listeners
+(``add_refresh_listener``) let the engine retire the old handle's
+batcher and run the *targeted* result-cache purge.
 
 Disk tier (DESIGN.md §13): with an :class:`~repro.store.IndexStore`
 attached, the registry is durable — cold builds first try *promotion*
 (mmap the stored epoch + device upload, no rebuild), landed builds and
-epoch swaps are written through (suffix epochs as deltas), LRU eviction
-*demotes* instead of discarding, and unregistered workload names resolve
-from the store's persisted graphs, so a restarted process warm-opens in
-well under a second.
+epoch swaps are written through (suffix epochs as per-stratum deltas),
+LRU eviction *demotes* instead of discarding, and unregistered workload
+names resolve from the store's persisted graphs, so a restarted process
+warm-opens in well under a second.
 
 Retention (DESIGN.md §10): ``retain(name, t_cut)`` is the epoch
 lifecycle's second leg — prefix expiry. It expires edges below ``t_cut``,
-rebinds the name to the shifted epoch immediately, and *shrinks* every
-resident ``(name, k)`` handle on the same FIFO refresh worker
-(``shrink_core_times`` + ``shrink_pecb_index`` + ``refresh_device`` — bit-
-identical to a cold build of the trimmed edge list, at slicing cost), so a
-long-running ingest+trim loop holds index, table and device-mirror memory
-bounded. Retention listeners (``add_retention_listener``) receive
+rebinds the name to the shifted epoch immediately, and *shrinks* the
+resident handle on the same FIFO refresh worker
+(``shrink_stratified_core_times`` + ``shrink_stratified_index`` +
+``refresh_device`` — bit-identical to a cold build of the trimmed edge
+list, at slicing cost; strata above the trimmed graph's k_max drop), so
+a long-running ingest+trim loop holds index, table and device-mirror
+memory bounded. Retention listeners (``add_retention_listener``) receive
 ``(key, old, new, t_cut)`` so the engine can purge expired cache windows
 and rehome the survivors into the shifted timeline.
 """
@@ -60,6 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
@@ -68,34 +91,79 @@ import numpy as np
 from repro.obs.locks import named_lock
 from repro.obs.trace import NULL_SPAN
 from repro.core.temporal_graph import BENCH_WORKLOADS, TemporalGraph, bench_graph
-from repro.core.core_time import (CoreTimeTable, edge_core_times,
-                                  extend_core_times, shrink_core_times)
-from repro.core.ecb_forest import IncrementalBuilder
-from repro.core.pecb_index import PECBIndex, pack_index
-from repro.core.streaming import extend_pecb_index, shrink_pecb_index
-from repro.core.batch_query import DeviceIndex, refresh_device, to_device
+from repro.core.core_time import (StratifiedCoreTable, _validate_ks,
+                                  default_ks, extend_stratified_core_times,
+                                  shrink_stratified_core_times,
+                                  stratified_core_times)
+from repro.core.pecb_index import StratifiedPECB, build_stratified_index
+from repro.core.streaming import (extend_stratified_index,
+                                  shrink_stratified_index)
+from repro.core.batch_query import (DeviceIndex, refresh_device,
+                                    stratum_device, to_device)
+
+_K_KEY_DEPRECATION = (
+    "per-k registry keys are deprecated: one k-stratified index serves "
+    "every k — pass the workload name alone (the k argument is ignored; "
+    "check handle.supported_ks)")
+
+
+def _coerce_key(key) -> str:
+    """Workload key from either the modern string or the legacy
+    ``(workload, k)`` tuple (DeprecationWarning — the k axis lives inside
+    the handle now)."""
+    if isinstance(key, tuple):
+        warnings.warn(_K_KEY_DEPRECATION, DeprecationWarning, stacklevel=3)
+        return str(key[0])
+    return str(key)
 
 
 @dataclasses.dataclass(frozen=True)
 class IndexHandle:
-    """A built (workload, k) index pair: host arrays + device mirror.
+    """One workload's built k-stratified index: host arrays + device mirror.
 
-    ``epoch`` counts suffix extensions of the workload's graph; ``tab`` is
-    the epoch's core-time table, retained so the next refresh can extend it
-    in place (``extend_core_times`` needs the dense ``vertex_ct``)."""
+    ``pecb`` answers every k in :attr:`supported_ks` (and every
+    ``k > k_max(graph)`` exactly empty); ``device`` is the fused mixed-k
+    mirror served by one compiled program per bucket shape. ``epoch``
+    counts suffix extensions of the workload's graph; ``tab`` is the
+    epoch's stratified core-time table, retained so the next refresh can
+    extend every stratum in place."""
 
-    key: tuple[str, int]          # (workload name, k)
+    key: str                      # workload name
     graph: TemporalGraph
-    pecb: PECBIndex
+    pecb: StratifiedPECB
     device: DeviceIndex
     build_seconds: float
     build_stages: dict = dataclasses.field(default_factory=dict, compare=False)
     epoch: int = 0
-    tab: CoreTimeTable | None = dataclasses.field(default=None, compare=False)
+    tab: StratifiedCoreTable | None = dataclasses.field(default=None,
+                                                        compare=False)
     # how the host arrays got here: "build" (cold construction or epoch
     # refresh) vs "disk" (promoted from the persistent store — mmap + device
     # upload, no rebuild). The planner stamps this onto result provenance.
     source: str = dataclasses.field(default="build", compare=False)
+    # lazy per-k slices of the fused mirror for single-k launches (the
+    # window sweep) — see :meth:`stratum_device`
+    _stratum_dev: dict = dataclasses.field(default_factory=dict,
+                                           compare=False, repr=False)
+
+    @property
+    def supported_ks(self) -> tuple:
+        return self.pecb.supported_ks
+
+    def stratum_device(self, k: int) -> DeviceIndex:
+        """Stratum ``k``'s block of :attr:`device` as a standalone per-k
+        mirror (``batch_query.stratum_device``), so single-k launches pay
+        propagation on one stratum's nodes instead of all |K|. Memoized
+        for the handle's lifetime — handles are immutable and swapped
+        whole per epoch, so the memo can never go stale; the unlocked
+        dict is a benign race (two threads may slice the same block, one
+        result wins). Raises ``KeyError`` for an unsupported k."""
+        k = int(k)
+        dev = self._stratum_dev.get(k)
+        if dev is None:
+            dev = stratum_device(self.device, self.pecb, k)
+            self._stratum_dev[k] = dev
+        return dev
 
     @property
     def nbytes(self) -> int:
@@ -103,20 +171,24 @@ class IndexHandle:
 
     @property
     def tab_nbytes(self) -> int:
-        """Bytes retained for the refresh path: the epoch's version arrays
-        plus the dense ``vertex_ct`` matrix ((t_max+1) x n int32 — the
-        dominant term on long-horizon graphs). Kept out of :attr:`nbytes`
+        """Bytes retained for the refresh path: the stratified core-time
+        table — per-k record blocks plus the run-length-encoded vertex
+        core times. This replaces what used to be |K| per-handle dense
+        ``(t_max+1, n)`` matrices and |K| version stores; the RLE strata
+        are the memory lever behind the one-build-serves-every-k claim
+        (asserted by the construction bench). Kept out of :attr:`nbytes`
         so the paper's index-size comparison stays undistorted, but
         surfaced in the registry's ``resident_tab_bytes`` stat because it
         is real, per-handle resident memory."""
         if self.tab is None:
             return 0
-        return self.tab.nbytes() + int(self.tab.vertex_ct.nbytes)
+        return self.tab.nbytes()
 
 
 class IndexRegistry:
     def __init__(self, capacity: int = 8, metrics=None, on_evict=None,
-                 build_workers: int = 2, tracer=None, store=None):
+                 build_workers: int = 2, tracer=None, store=None, *,
+                 ks=None):
         if capacity < 1:
             raise ValueError(f"registry capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -137,6 +209,11 @@ class IndexRegistry:
         # that scheduled them — across the FIFO worker thread boundary
         # (DESIGN.md §11.2).
         self.tracer = tracer
+        # strata policy: which ks each workload's one stratified build
+        # covers. None = the full useful range default_ks(g) (2..k_max);
+        # a tuple bounds |K| globally; set_ks() overrides per workload.
+        self._default_ks = None if ks is None else _validate_ks(ks)
+        self._ks_policy: dict[str, tuple] = {}
         # evict listeners: called as cb(key, handle) after an entry leaves
         # the registry (outside the registry lock). A list, not a slot:
         # several engines may share one registry (the bench does), and each
@@ -153,13 +230,13 @@ class IndexRegistry:
         self._retention_listeners: list = []
         self._graphs: dict[str, TemporalGraph] = {}
         self._epochs: dict[str, int] = {}
-        self._entries: "OrderedDict[tuple[str, int], IndexHandle]" = OrderedDict()
+        self._entries: "OrderedDict[str, IndexHandle]" = OrderedDict()
         self._lock = named_lock("registry")
-        self._pending: dict[tuple[str, int], Future] = {}
+        self._pending: dict[str, Future] = {}
         self._build_workers = max(1, int(build_workers))
         self._pool: ThreadPoolExecutor | None = None
         # refreshes run on their own single worker: FIFO, so chained
-        # extend_graph calls refresh each key in epoch order
+        # extend_graph calls refresh each workload in epoch order
         self._refresh_pool: ThreadPoolExecutor | None = None
         self.builds = 0
         self.evictions = 0
@@ -202,6 +279,27 @@ class IndexRegistry:
         return self.tracer.start_span(name, parent=parent, cat="index",
                                       **attrs)
 
+    # -- strata policy ----------------------------------------------------
+    def set_ks(self, workload: str, ks) -> None:
+        """Pin the strata the next (re)build of ``workload`` covers.
+        ``None`` reverts to the registry default. Raises while the
+        workload is resident or building — the policy must not fork from
+        what the resident handle actually serves."""
+        with self._lock:
+            if workload in self._entries or workload in self._pending:
+                raise RuntimeError(
+                    f"cannot change ks policy for resident workload "
+                    f"{workload!r}; evict or close first")
+            if ks is None:
+                self._ks_policy.pop(workload, None)
+            else:
+                self._ks_policy[workload] = _validate_ks(ks)
+
+    def _ks_for(self, workload: str, g: TemporalGraph) -> tuple:
+        with self._lock:
+            explicit = self._ks_policy.get(workload, self._default_ks)
+        return default_ks(g) if explicit is None else explicit
+
     # -- graph sources --------------------------------------------------
     def register_graph(self, name: str, g: TemporalGraph) -> None:
         """Bind ``name`` to a graph, immutably: indexes, cached results and
@@ -241,8 +339,8 @@ class IndexRegistry:
                     return self._graphs[name]
         if name in BENCH_WORKLOADS:
             g = bench_graph(name)
-            # concurrent cold builds of different k race to generate the
-            # same bench graph: first registration wins, losers adopt it
+            # concurrent cold builds of different workloads race to generate
+            # the same bench graph: first registration wins, losers adopt it
             # (bench_graph is deterministic, so either copy is identical)
             with self._lock:
                 return self._graphs.setdefault(name, g)
@@ -253,18 +351,18 @@ class IndexRegistry:
 
     # -- streaming epochs -------------------------------------------------
     def extend_graph(self, name: str, edges,
-                     parent=None) -> dict[tuple[str, int], "Future[IndexHandle]"]:
-        """Append suffix ``edges`` to workload ``name`` and refresh every
-        resident ``(name, k)`` index incrementally in the background.
+                     parent=None) -> dict[str, "Future[IndexHandle]"]:
+        """Append suffix ``edges`` to workload ``name`` and refresh its
+        resident stratified index incrementally in the background.
 
         The graph rebind and epoch bump happen immediately (new cold builds
-        see the new epoch); each resident handle keeps serving until its
-        refreshed replacement is atomically swapped in. Returns one future
-        per affected key, resolving with the refreshed handle. Suffix
-        violations (historical timestamps, unknown vertices) raise here,
-        before anything is mutated. ``parent`` (a span or SpanContext)
-        parents each key's background ``index_refresh`` span under the
-        caller's trace (DESIGN.md §11.2).
+        see the new epoch); the resident handle keeps serving until its
+        refreshed replacement is atomically swapped in. Returns a
+        ``{workload: Future}`` dict (at most one entry), resolving with the
+        refreshed handle. Suffix violations (historical timestamps, unknown
+        vertices) raise here, before anything is mutated. ``parent`` (a
+        span or SpanContext) parents the background ``index_refresh`` span
+        under the caller's trace (DESIGN.md §11.2).
         """
         with self._lock:
             g = self._graphs.get(name)
@@ -281,24 +379,22 @@ class IndexRegistry:
             self._graphs[name] = g2
             epoch = self._epochs.get(name, 0) + 1
             self._epochs[name] = epoch
-            stale = [(key, h) for key, h in self._entries.items()
-                     if key[0] == name]
-            if stale and self._refresh_pool is None:
+            handle = self._entries.get(name)
+            if handle is not None and self._refresh_pool is None:
                 self._refresh_pool = ThreadPoolExecutor(
                     max_workers=1, thread_name_prefix="registry-refresh")
-            for key, handle in stale:
+            if handle is not None:
                 fut: Future = Future()
-                futures[key] = fut
+                futures[name] = fut
                 self._refresh_pool.submit(
-                    self._run_refresh, key, handle, g2, epoch, fut, parent)
+                    self._run_refresh, name, handle, g2, epoch, fut, parent)
         return futures
 
-    def _run_refresh(self, key, old: IndexHandle, g2: TemporalGraph,
+    def _run_refresh(self, key: str, old: IndexHandle, g2: TemporalGraph,
                      epoch: int, fut: Future, parent=None) -> None:
         span = self._span("index_refresh", parent=parent,
-                          workload=key[0], k=key[1], epoch=epoch)
+                          workload=key, epoch=epoch)
         try:
-            workload, k = key
             # re-read the resident handle: the FIFO worker guarantees every
             # previously scheduled epoch mutation has landed, so a chain
             # like retain -> extend must grow from the *trimmed* handle the
@@ -318,14 +414,15 @@ class IndexRegistry:
             t0 = time.perf_counter()
             if old.tab is None:
                 raise RuntimeError(
-                    f"handle {key} carries no core-time table; cannot "
-                    "refresh incrementally")
+                    f"handle {key!r} carries no stratified core-time table; "
+                    "cannot refresh incrementally")
+            ks = self._ks_for(key, g2)
             t1 = time.perf_counter()
-            tab2 = extend_core_times(g2, k, old.tab)
+            tab2 = extend_stratified_core_times(g2, old.tab, ks)
             stages["core_times"] = time.perf_counter() - t1
             span.child("core_times", t0=t1).end()
             t1 = time.perf_counter()
-            idx2 = extend_pecb_index(g2, k, tab2, old.pecb)
+            idx2 = extend_stratified_index(g2, old.pecb, ks, strata=tab2)
             stages["forest"] = time.perf_counter() - t1
             span.child("forest", t0=t1).end()
             t1 = time.perf_counter()
@@ -365,7 +462,7 @@ class IndexRegistry:
                 cb(key, replaced, handle)
         fut.set_result(handle)
 
-    def _swap_epoch_handle(self, key, grown_from: IndexHandle,
+    def _swap_epoch_handle(self, key: str, grown_from: IndexHandle,
                            handle: IndexHandle, epoch: int, kind: str):
         """Atomic epoch-handle swap shared by refresh and shrink workers.
 
@@ -393,19 +490,19 @@ class IndexRegistry:
 
     # -- retention (prefix expiry) ----------------------------------------
     def retain(self, name: str, t_cut: int,
-               parent=None) -> dict[tuple[str, int], "Future[IndexHandle]"]:
+               parent=None) -> dict[str, "Future[IndexHandle]"]:
         """Expire every edge of workload ``name`` with timestamp
-        ``< t_cut`` and shrink every resident ``(name, k)`` index to the
+        ``< t_cut`` and shrink the resident stratified index to the
         shifted retained epoch in the background (DESIGN.md §10).
 
         Mirrors :meth:`extend_graph`: the graph rebind and epoch bump are
-        immediate (new cold builds see the trimmed epoch), each resident
+        immediate (new cold builds see the trimmed epoch), the resident
         handle keeps serving until its shrunk replacement is atomically
-        swapped in, and one future per affected key resolves with the
-        swapped handle (``None`` if the key was evicted before its trim
-        ran). Trims share the single FIFO refresh worker with suffix
-        refreshes, so a ``extend_graph`` + ``retain`` chain lands in
-        order: the shrink always runs against the fully caught-up
+        swapped in, and the returned ``{workload: Future}`` resolves with
+        the swapped handle (``None`` if the workload was evicted before
+        its trim ran). Trims share the single FIFO refresh worker with
+        suffix refreshes, so an ``extend_graph`` + ``retain`` chain lands
+        in order: the shrink always runs against the fully caught-up
         resident handle. ``t_cut <= 1`` trims nothing and returns ``{}``.
         """
         with self._lock:
@@ -424,30 +521,28 @@ class IndexRegistry:
             self._graphs[name] = g2
             epoch = self._epochs.get(name, 0) + 1
             self._epochs[name] = epoch
-            stale = [key for key in self._entries if key[0] == name]
-            if stale and self._refresh_pool is None:
+            if name in self._entries and self._refresh_pool is None:
                 self._refresh_pool = ThreadPoolExecutor(
                     max_workers=1, thread_name_prefix="registry-refresh")
-            for key in stale:
+            if name in self._entries:
                 fut: Future = Future()
-                futures[key] = fut
+                futures[name] = fut
                 self._refresh_pool.submit(
-                    self._run_shrink, key, g, g2, int(t_cut), epoch, fut,
+                    self._run_shrink, name, g, g2, int(t_cut), epoch, fut,
                     parent)
         return futures
 
-    def _run_shrink(self, key, g_old: TemporalGraph, g2: TemporalGraph,
+    def _run_shrink(self, key: str, g_old: TemporalGraph, g2: TemporalGraph,
                     t_cut: int, epoch: int, fut: Future,
                     parent=None) -> None:
-        """FIFO-worker body of one (key, trim). Unlike ``_run_refresh``
+        """FIFO-worker body of one (workload, trim). Unlike ``_run_refresh``
         (which grows from the handle captured at schedule time — valid
         because extending from *any* older suffix epoch works), the shrink
         re-reads the resident handle here: the FIFO worker guarantees
         every previously scheduled refresh has landed, so the resident
         handle describes exactly the pre-cut binding ``g_old``."""
         span = self._span("index_retention", parent=parent,
-                          workload=key[0], k=key[1], epoch=epoch,
-                          t_cut=t_cut)
+                          workload=key, epoch=epoch, t_cut=t_cut)
         try:
             with self._lock:
                 cur = self._entries.get(key)
@@ -459,28 +554,36 @@ class IndexRegistry:
                 span.set("outcome", "superseded").end()
                 fut.set_result(cur)      # a cold build already caught up
                 return
-            workload, k = key
             stages = {}
             t0 = time.perf_counter()
+            # expiry can only lower coreness, so the target strata are a
+            # subset of the resident ones under the default policy; an
+            # explicit policy intersects with what is actually resident
+            # (strata that were never built cannot be shrunk — and expiry
+            # cannot create the need for one)
+            ks = tuple(k for k in self._ks_for(key, g2)
+                       if k in cur.pecb.supported_ks)
             if cur.graph is g_old and cur.tab is not None:
                 t1 = time.perf_counter()
-                tab2 = shrink_core_times(g2, k, cur.tab)
+                tab2 = shrink_stratified_core_times(g2, cur.tab, ks)
                 stages["core_times"] = time.perf_counter() - t1
                 span.child("core_times", t0=t1).end()
                 t1 = time.perf_counter()
-                idx2 = shrink_pecb_index(g2, k, tab2, cur.pecb)
+                idx2 = shrink_stratified_index(g2, cur.pecb, ks,
+                                               strata=tab2)
                 stages["forest"] = time.perf_counter() - t1
                 span.child("forest", t0=t1).end()
             else:
                 # resident handle does not describe the pre-cut epoch (a
                 # cold-build race stored an intermediate snapshot): fall
                 # back to an exact cold build of the trimmed graph
+                ks = self._ks_for(key, g2)
                 t1 = time.perf_counter()
-                tab2 = edge_core_times(g2, k)
+                tab2 = stratified_core_times(g2, ks)
                 stages["core_times"] = time.perf_counter() - t1
                 span.child("core_times", t0=t1, cold=True).end()
                 t1 = time.perf_counter()
-                idx2 = pack_index(g2, k, IncrementalBuilder(g2, tab2).run())
+                idx2 = build_stratified_index(g2, ks, strata=tab2)
                 stages["forest"] = time.perf_counter() - t1
                 span.child("forest", t0=t1, cold=True).end()
             t1 = time.perf_counter()
@@ -515,30 +618,41 @@ class IndexRegistry:
         fut.set_result(handle)
 
     # -- handle lookup ---------------------------------------------------
-    def get(self, workload: str, k: int,
+    def get(self, workload: str, k: int | None = None,
             timeout: float | None = None) -> IndexHandle:
-        """Blocking lookup: memoized handle, or wait for the build."""
-        return self.get_async(workload, k).result(timeout=timeout)
+        """Blocking lookup: memoized handle, or wait for the build. The
+        handle answers every supported k; passing ``k`` is deprecated."""
+        if k is not None:
+            warnings.warn(_K_KEY_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
+        return self.get_async(workload).result(timeout=timeout)
 
-    def get_nowait(self, workload: str, k: int, *,
+    def get_nowait(self, workload: str, k: int | None = None, *,
                    start_build: bool = True) -> IndexHandle | None:
         """Non-blocking probe. On a miss, optionally schedule the
         background build (so a later probe hits) and return ``None``."""
-        key = (workload, int(k))
+        if k is not None:
+            warnings.warn(_K_KEY_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
+        key = str(workload)
         with self._lock:
             h = self._entries.get(key)
             if h is not None:
                 self._entries.move_to_end(key)
                 return h
         if start_build:
-            self.get_async(workload, k)
+            self.get_async(key)
         return None
 
-    def get_async(self, workload: str, k: int) -> "Future[IndexHandle]":
+    def get_async(self, workload: str,
+                  k: int | None = None) -> "Future[IndexHandle]":
         """Future resolving to the built handle; build failures (including
         unknown workloads) surface as the future's exception. Concurrent
-        callers of one cold key share a single pending future."""
-        key = (workload, int(k))
+        callers of one cold workload share a single pending future."""
+        if k is not None:
+            warnings.warn(_K_KEY_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
+        key = str(workload)
         with self._lock:
             h = self._entries.get(key)
             if h is not None:
@@ -565,7 +679,7 @@ class IndexRegistry:
                 fut.set_exception(exc)
         return fut
 
-    def _run_build(self, key: tuple[str, int], fut: Future) -> None:
+    def _run_build(self, key: str, fut: Future) -> None:
         try:
             handle = self._build(key)
         except BaseException as exc:
@@ -593,7 +707,7 @@ class IndexRegistry:
             # no resident entry to refresh; catch the stored handle up to
             # the current epoch now, or it would serve pre-ingest data
             # until the next ingest
-            cur_g = self._graphs.get(key[0])
+            cur_g = self._graphs.get(key)
             if (cur_g is not None and cur_g is not handle.graph
                     and self._entries.get(key) is handle):
                 if self._refresh_pool is None:
@@ -602,7 +716,7 @@ class IndexRegistry:
                 # capture the pool under the lock: close() nulls the
                 # attribute, and the build future must resolve regardless
                 catchup = (self._refresh_pool, handle, cur_g,
-                           self._epochs.get(key[0], 0))
+                           self._epochs.get(key, 0))
         for (k2, h2) in evicted:
             self._demote(k2, h2)
             for cb in listeners:
@@ -616,8 +730,8 @@ class IndexRegistry:
             except RuntimeError:
                 pass   # registry closing: stale data is moot
 
-    def _build(self, key: tuple[str, int]) -> IndexHandle:
-        workload, k = key
+    def _build(self, key: str) -> IndexHandle:
+        workload = key
         g = self.resolve_graph(workload)
         with self._lock:
             # re-read graph and epoch together: an extend_graph between the
@@ -625,25 +739,23 @@ class IndexRegistry:
             # an old graph (or vice versa)
             g = self._graphs.get(workload, g)
             epoch = self._epochs.get(workload, 0)
+        ks = self._ks_for(workload, g)
         if self._store is not None:
-            promoted = self._promote(key, g, epoch)
+            promoted = self._promote(key, g, epoch, ks)
             if promoted is not None:
                 return promoted
-        span = self._span("index_build", workload=workload, k=k, epoch=epoch)
+        span = self._span("index_build", workload=workload,
+                          num_strata=len(ks), epoch=epoch)
         stages = {}
         try:
             t0 = time.perf_counter()
-            tab = edge_core_times(g, k)
+            tab = stratified_core_times(g, ks)
             stages["core_times"] = time.perf_counter() - t0
             span.child("core_times", t0=t0).end()
             t1 = time.perf_counter()
-            builder = IncrementalBuilder(g, tab).run()
+            idx = build_stratified_index(g, ks, strata=tab)
             stages["forest"] = time.perf_counter() - t1
             span.child("forest", t0=t1).end()
-            t1 = time.perf_counter()
-            idx = pack_index(g, k, builder)
-            stages["pack"] = time.perf_counter() - t1
-            span.child("pack", t0=t1).end()
             t1 = time.perf_counter()
             dev = to_device(idx)
             stages["device"] = time.perf_counter() - t1
@@ -656,8 +768,8 @@ class IndexRegistry:
         handle = IndexHandle(key, g, idx, dev, total, stages,
                              epoch=epoch, tab=tab)
         with self._lock:
-            # under the lock: concurrent builds of *different* keys would
-            # otherwise lose increments (read-modify-write race)
+            # under the lock: concurrent builds of *different* workloads
+            # would otherwise lose increments (read-modify-write race)
             self.builds += 1
         if self._metrics is not None:
             self._metrics.count("index_builds")
@@ -667,17 +779,17 @@ class IndexRegistry:
         return handle
 
     # -- disk tier (DESIGN.md §13.4) --------------------------------------
-    def _promote(self, key: tuple[str, int], g: TemporalGraph,
-                 epoch: int) -> IndexHandle | None:
+    def _promote(self, key: str, g: TemporalGraph, epoch: int,
+                 ks: tuple) -> IndexHandle | None:
         """Try to answer a cold build from the store: mmap the stored
         epoch, check it describes exactly the graph the build would target
         (same epoch number *and* identical edge arrays — epoch counters
-        reset across processes, so the arrays are authoritative), upload to
-        the device, and mint a ``source="disk"`` handle. ``None`` on any
-        miss or mismatch — the caller falls through to the cold build."""
-        workload, k = key
-        span = self._span("index_promote", workload=workload, k=k,
-                          epoch=epoch)
+        reset across processes, so the arrays are authoritative) AND the
+        strata the current policy asks for, upload to the device, and mint
+        a ``source="disk"`` handle. ``None`` on any miss or mismatch — the
+        caller falls through to the cold build."""
+        workload = key
+        span = self._span("index_promote", workload=workload, epoch=epoch)
         try:
             stored = self._store.load(key)
         except Exception as exc:
@@ -694,6 +806,9 @@ class IndexRegistry:
                 and np.array_equal(sg.dst, g.dst)
                 and np.array_equal(sg.t, g.t)):
             span.set("outcome", "stale").end()
+            return None
+        if tuple(stored.pecb.supported_ks) != tuple(ks):
+            span.set("outcome", "ks-mismatch").end()
             return None
         stages = {}
         t0 = time.perf_counter()
@@ -719,7 +834,7 @@ class IndexRegistry:
         return IndexHandle(key, g, stored.pecb, dev, total, stages,
                            epoch=epoch, tab=stored.tab, source="disk")
 
-    def _persist(self, key: tuple[str, int], handle: IndexHandle,
+    def _persist(self, key: str, handle: IndexHandle,
                  prev: IndexHandle | None = None) -> dict | None:
         """Write ``handle`` through to the store (delta against ``prev``
         when given). Best-effort: failures count a metric and return
@@ -734,11 +849,11 @@ class IndexRegistry:
             if self._metrics is not None:
                 self._metrics.count("store_commit_failures")
             if self.tracer is not None:
-                self._span("store_commit_failed", workload=key[0], k=key[1],
+                self._span("store_commit_failed", workload=key,
                            error=repr(exc)).end()
             return None
 
-    def _demote(self, key: tuple[str, int], handle: IndexHandle) -> None:
+    def _demote(self, key: str, handle: IndexHandle) -> None:
         """Eviction hook: preserve the evicted handle's epoch in the store
         (write-through usually already has it — then this is a cheap
         manifest probe, not a rewrite) instead of discarding built work."""
@@ -765,7 +880,8 @@ class IndexRegistry:
         if rpool is not None:
             rpool.shutdown(wait=wait)
 
-    def __contains__(self, key: tuple[str, int]) -> bool:
+    def __contains__(self, key) -> bool:
+        key = _coerce_key(key)
         with self._lock:
             return key in self._entries
 
@@ -782,6 +898,8 @@ class IndexRegistry:
                 "demotions": self.demotions,
                 "epochs": dict(self._epochs),
                 "pending": list(self._pending),
+                "supported_ks": {w: list(h.supported_ks)
+                                 for w, h in self._entries.items()},
                 "resident_bytes": sum(h.nbytes for h in self._entries.values()),
                 "resident_tab_bytes": sum(h.tab_nbytes
                                           for h in self._entries.values()),

@@ -6,7 +6,7 @@ Three layers, lowest first:
 * :mod:`blobio` — the atomic tmp-rename + crc32 write/read primitives,
   extracted from ``checkpoint/manager.py`` so the checkpoint manager and
   the segment store share one durable-write idiom instead of two copies.
-* :mod:`segment` — the on-disk format for one (workload, k) key: alloc-
+* :mod:`segment` — the on-disk format for one workload key: alloc-
   rounded append-only segment files holding raw array bytes, plus JSON
   manifests (epoch, per-array dtype/shape/parts/crc32) committed by
   atomic rename. Suffix epochs commit as *deltas* against the resident

@@ -1,14 +1,27 @@
-"""IndexStore: the registry's disk tier (DESIGN.md §13.3).
+"""IndexStore: the registry's disk tier (DESIGN.md §13.3, §14.5).
 
-Maps one ``(workload, k)`` registry key to one segment directory (see
+Maps one *workload* registry key to one segment directory (see
 :mod:`repro.store.segment`) and speaks the registry's language on both
 sides: ``put_handle`` flattens a built
-:class:`~repro.serving.registry.IndexHandle` — graph arrays, the 14
-packed PECB arrays, the version store, the core-time table — into the
-segment format (as a *delta* against the previous epoch's handle when
-one is supplied), and ``load`` mmaps the newest committed epoch back
-into real host index objects, so a warm restart or an LRU promotion
-pays a device upload instead of a multi-second rebuild.
+:class:`~repro.serving.registry.IndexHandle` — graph arrays, every
+stratum's 14 packed PECB arrays, the stratified core-time table — into
+the segment format (as a *delta* against the previous epoch's handle
+when one is supplied), and ``load`` mmaps the newest committed epoch
+back into host index objects, so a warm restart or an LRU promotion
+pays a device upload instead of a multi-second |K|-stratum rebuild.
+
+Stratified block layout: arrays are stored *per stratum* under
+``pecb.k{k}.*`` / ``tab.k{k}.*`` names rather than as the handle's
+concatenated globals. That choice is what keeps suffix-epoch deltas
+working — appending edges grows every stratum's arrays at its own tail,
+so per-k blocks classify as suffix writes, while the concatenated form
+would shift every block past the first and force a full commit each
+epoch. A k_max raise (new stratum) changes the name set, which the
+segment layer answers with one full commit — correct and rare. Two
+derived pieces are *not* stored: the dense per-k vertex matrices (the
+RLE runs in ``tab.k{k}.vptr``/``v_*`` are the authoritative form) and
+the version-store endpoint arrays (recomputed on load as
+``g.src[edge_id]`` — cheaper to gather than to persist).
 
 Locking: ``self._lock`` (hierarchy level ``"store"``) guards the
 counters behind :meth:`stats` and nothing else — every byte of file I/O
@@ -27,9 +40,8 @@ import zlib
 
 import numpy as np
 
-from repro.core.core_time import CoreTimeTable
-from repro.core.pecb_index import PECBIndex
-from repro.core.query_api import VersionStore
+from repro.core.core_time import StratifiedCoreTable
+from repro.core.pecb_index import PECBIndex, StratifiedPECB
 from repro.core.temporal_graph import TemporalGraph
 from repro.obs.locks import named_lock
 from repro.obs.trace import NULL_SPAN
@@ -43,23 +55,26 @@ PECB_ARRAYS = (
     "row_ptr", "ent_ts", "ent_left", "ent_right", "ent_parent",
     "vrow_ptr", "vent_ts", "vent_node",
 )
-VERSION_ARRAYS = ("edge_id", "ts_from", "ts_to", "ct", "src", "dst", "t")
-TAB_ARRAYS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+#: per-stratum core-time blocks: version records + localized vertex-run CSR
+TAB_ARRAYS = ("edge_id", "ts_from", "ts_to", "ct",
+              "vptr", "v_ts_from", "v_ts_to", "v_ct")
 
 
 @dataclasses.dataclass
 class StoredIndex:
     """One stored epoch, rehydrated: everything the registry needs to
     re-mint an :class:`~repro.serving.registry.IndexHandle` minus the
-    device mirror (the promoter uploads). Arrays are read-only views into
-    the mmap'd segments wherever the layout allows (single-part)."""
+    device mirror (the promoter uploads). Record arrays are read-only
+    views into the mmap'd segments wherever the layout allows
+    (single-part, single-stratum); the stratified globals are assembled
+    by one concatenation pass."""
 
-    key: tuple[str, int]
+    key: str
     epoch: int
     build_seconds: float
     graph: TemporalGraph
-    pecb: PECBIndex
-    tab: CoreTimeTable | None
+    pecb: StratifiedPECB
+    tab: StratifiedCoreTable | None
     manifest: dict
     recovered: int = 0     # newer, invalid commits skipped on the way here
 
@@ -72,12 +87,13 @@ def _safe(name: str) -> str:
     return re.sub(r"[^A-Za-z0-9._-]", "_", name)
 
 
-def key_dirname(key: tuple[str, int]) -> str:
-    """Directory name for one (workload, k) key: a sanitized readable stem
-    plus a crc32 of the exact name (collision-proofing the sanitizer) and
-    the k. The authoritative key lives in the manifest meta."""
-    name, k = key
-    return f"{_safe(name)}__{zlib.crc32(name.encode()):08x}__k{int(k)}"
+def key_dirname(key: str) -> str:
+    """Directory name for one workload key: a sanitized readable stem plus
+    a crc32 of the exact name (collision-proofing the sanitizer). The
+    authoritative key lives in the manifest meta. No k component — the k
+    axis collapsed into the stored strata (DESIGN.md §14)."""
+    name = str(key)
+    return f"{_safe(name)}__{zlib.crc32(name.encode()):08x}"
 
 
 class IndexStore:
@@ -103,11 +119,11 @@ class IndexStore:
             return NULL_SPAN
         return self.tracer.start_span(name, cat="store", **attrs)
 
-    def _dir(self, key) -> str:
+    def _dir(self, key: str) -> str:
         return os.path.join(self.root, key_dirname(key))
 
     # -- write path ------------------------------------------------------
-    def put_handle(self, key, handle, prev=None) -> dict:
+    def put_handle(self, key: str, handle, prev=None) -> dict:
         """Persist ``handle`` as key's next committed epoch. ``prev`` (the
         handle the epoch lifecycle grew/shrunk ``handle`` from) enables a
         delta commit when it matches the epoch already on disk. Returns
@@ -115,7 +131,7 @@ class IndexStore:
         the store already holds this epoch and nothing was written (the
         demote-after-write-through case)."""
         dirpath = self._dir(key)
-        span = self._span("store_commit", workload=key[0], k=key[1],
+        span = self._span("store_commit", workload=str(key),
                           epoch=handle.epoch)
         try:
             os.makedirs(dirpath, exist_ok=True)
@@ -147,43 +163,60 @@ class IndexStore:
                 "bytes_written": res["bytes_written"]}
 
     @staticmethod
-    def _handle_meta(key, handle) -> dict:
+    def _handle_meta(key: str, handle) -> dict:
         g = handle.graph
+        sx = handle.pecb
         return {
-            "workload": key[0], "k": int(key[1]),
+            "workload": str(key),
             "epoch": int(handle.epoch),
             "n": int(g.n), "m": int(g.m), "t_max": int(g.t_max),
             "build_seconds": float(handle.build_seconds),
-            "has_versions": handle.pecb.versions is not None,
+            "ks": [int(k) for k in sx.ks],
+            "k_max_graph": int(sx.k_max_graph),
             "has_tab": handle.tab is not None,
         }
 
     @staticmethod
     def _handle_arrays(handle) -> dict:
-        g, idx = handle.graph, handle.pecb
+        g = handle.graph
+        sx: StratifiedPECB = handle.pecb
         out = {"graph.src": g.src, "graph.dst": g.dst, "graph.t": g.t}
-        for f in PECB_ARRAYS:
-            out[f"pecb.{f}"] = getattr(idx, f)
-        if idx.versions is not None:
-            for f in VERSION_ARRAYS:
-                out[f"versions.{f}"] = getattr(idx.versions, f)
-        if handle.tab is not None:
-            for f in TAB_ARRAYS:
-                out[f"tab.{f}"] = getattr(handle.tab, f)
+        for k in sx.ks:
+            view = sx.slice_k(k)
+            for f in PECB_ARRAYS:
+                out[f"pecb.k{k}.{f}"] = getattr(view, f)
+        tab: StratifiedCoreTable | None = handle.tab
+        if tab is not None:
+            n = tab.n
+            for ki, k in enumerate(tab.ks):
+                lo, hi = int(tab.kptr[ki]), int(tab.kptr[ki + 1])
+                vlo, vhi = ki * n, (ki + 1) * n
+                rlo, rhi = int(tab.vptr[vlo]), int(tab.vptr[vhi])
+                out[f"tab.k{k}.edge_id"] = tab.edge_id[lo:hi]
+                out[f"tab.k{k}.ts_from"] = tab.ts_from[lo:hi]
+                out[f"tab.k{k}.ts_to"] = tab.ts_to[lo:hi]
+                out[f"tab.k{k}.ct"] = tab.ct[lo:hi]
+                # CSR localized to the stratum (subtracting the base makes
+                # it epoch-stable under *other* strata growing)
+                out[f"tab.k{k}.vptr"] = tab.vptr[vlo:vhi + 1] - tab.vptr[vlo]
+                out[f"tab.k{k}.v_ts_from"] = tab.v_ts_from[rlo:rhi]
+                out[f"tab.k{k}.v_ts_to"] = tab.v_ts_to[rlo:rhi]
+                out[f"tab.k{k}.v_ct"] = tab.v_ct[rlo:rhi]
         return out
 
     # -- read path -------------------------------------------------------
-    def current_epoch(self, key) -> int | None:
+    def current_epoch(self, key: str) -> int | None:
         """Epoch of the newest structurally valid commit, or ``None`` —
         without loading (or crc-verifying) any array bytes."""
         probe = open_latest(self._dir(key), load=False)
         return None if probe is None else int(probe[0]["epoch"])
 
-    def load(self, key) -> StoredIndex | None:
+    def load(self, key: str) -> StoredIndex | None:
         """mmap the newest valid commit back into host index objects;
-        ``None`` when the key has no loadable commit."""
+        ``None`` when the key has no loadable commit (including a legacy
+        per-k directory — those carry no strata and simply miss here)."""
         dirpath = self._dir(key)
-        span = self._span("store_open", workload=key[0], k=key[1])
+        span = self._span("store_open", workload=str(key))
         try:
             got = open_latest(dirpath, verify=self._verify)
             if got is None:
@@ -191,24 +224,18 @@ class IndexStore:
                 return None
             man, arrays, recovered = got
             meta = man["meta"]
+            if "ks" not in meta:
+                span.set("outcome", "legacy").end()
+                return None
             n, m, t_max = meta["n"], meta["m"], meta["t_max"]
-            k = meta["k"]
+            ks = tuple(int(k) for k in meta["ks"])
             g = TemporalGraph(n, arrays["graph.src"], arrays["graph.dst"],
                               arrays["graph.t"])
-            versions = None
-            if meta.get("has_versions"):
-                versions = VersionStore(
-                    n, t_max, k,
-                    *(arrays[f"versions.{f}"] for f in VERSION_ARRAYS))
-            idx = PECBIndex(
-                n, m, t_max, k,
-                *(arrays[f"pecb.{f}"] for f in PECB_ARRAYS),
-                versions=versions)
             tab = None
             if meta.get("has_tab"):
-                tab = CoreTimeTable(
-                    n, m, t_max,
-                    *(arrays[f"tab.{f}"] for f in TAB_ARRAYS))
+                tab = self._assemble_tab(n, m, t_max, ks, arrays)
+            idx = self._assemble_pecb(
+                g, m, t_max, ks, int(meta["k_max_graph"]), arrays, tab)
         except BaseException as exc:
             span.set("error", repr(exc)).end()
             raise
@@ -222,25 +249,81 @@ class IndexStore:
             if recovered:
                 self._metrics.count("store_recovered_commits", recovered)
         return StoredIndex(
-            key=(meta["workload"], k), epoch=int(meta["epoch"]),
+            key=str(meta["workload"]), epoch=int(meta["epoch"]),
             build_seconds=float(meta.get("build_seconds", 0.0)),
             graph=g, pecb=idx, tab=tab, manifest=man, recovered=recovered)
 
-    def keys(self) -> list[tuple[str, int]]:
-        """Every (workload, k) key with at least one valid commit on disk."""
+    @staticmethod
+    def _assemble_tab(n: int, m: int, t_max: int, ks: tuple,
+                      arrays: dict) -> StratifiedCoreTable:
+        """Stratified core-time table from the per-k blocks: record
+        globals are one concatenation, the vertex-run CSR re-bases each
+        stratum's localized ``vptr`` onto the running offset."""
+        K = len(ks)
+        blocks = {f: [arrays[f"tab.k{k}.{f}"] for k in ks]
+                  for f in TAB_ARRAYS}
+        i32 = lambda parts: (np.concatenate(parts).astype(np.int32,
+                                                          copy=False)
+                             if parts else np.zeros(0, np.int32))
+        kptr = np.zeros(K + 1, np.int64)
+        for ki in range(K):
+            kptr[ki + 1] = kptr[ki] + blocks["edge_id"][ki].shape[0]
+        vptr = np.zeros(K * n + 1, np.int64)
+        off = 0
+        for ki in range(K):
+            local = blocks["vptr"][ki]
+            vptr[ki * n:(ki + 1) * n + 1] = local.astype(np.int64) + off
+            off += int(local[-1]) if local.shape[0] else 0
+        return StratifiedCoreTable(
+            n, m, t_max, ks, kptr,
+            i32(blocks["edge_id"]), i32(blocks["ts_from"]),
+            i32(blocks["ts_to"]), i32(blocks["ct"]),
+            vptr, i32(blocks["v_ts_from"]), i32(blocks["v_ts_to"]),
+            i32(blocks["v_ct"]))
+
+    @staticmethod
+    def _assemble_pecb(g: TemporalGraph, m: int, t_max: int, ks: tuple,
+                       k_max_graph: int, arrays: dict,
+                       tab: StratifiedCoreTable | None) -> StratifiedPECB:
+        """Stratified index from the per-k blocks: each stratum's mmap'd
+        arrays become a per-k :class:`PECBIndex` view and
+        ``StratifiedPECB.from_parts`` re-packs them — bit-identical to
+        the handle that was persisted (the per-k blocks ARE the packed
+        layout's blocks). Version-store endpoints are recomputed by one
+        gather over the graph arrays instead of being stored."""
+        if tab is None:
+            raise ValueError(
+                "stratified commit lacks its core-time table; cannot "
+                "rebuild the version store")
+        indices = [
+            PECBIndex(g.n, m, t_max, k,
+                      *(arrays[f"pecb.k{k}.{f}"] for f in PECB_ARRAYS),
+                      versions=None)
+            for k in ks]
+        eid = tab.edge_id
+        return StratifiedPECB.from_parts(
+            tab, indices, k_max_graph,
+            ver_src=np.asarray(g.src)[eid].astype(np.int32),
+            ver_dst=np.asarray(g.dst)[eid].astype(np.int32),
+            ver_t=np.asarray(g.t)[eid].astype(np.int32))
+
+    def keys(self) -> list[str]:
+        """Every workload key with at least one valid *stratified* commit
+        on disk (legacy per-k directories are skipped)."""
         out = []
         for entry in sorted(os.listdir(self.root)):
             probe = open_latest(os.path.join(self.root, entry), load=False)
-            if probe is not None:
-                meta = probe[0]["meta"]
-                out.append((meta["workload"], int(meta["k"])))
+            if probe is not None and "ks" in probe[0]["meta"]:
+                out.append(str(probe[0]["meta"]["workload"]))
         return out
 
     def load_graph(self, name: str):
-        """``(graph, epoch)`` of workload ``name``'s newest stored epoch
-        across all its k-keys — the warm path for ``resolve_graph`` on an
-        unregistered name — or ``None``. Graph arrays are *copied* out of
-        the mapping: the adopted graph outlives any one commit's files."""
+        """``(graph, epoch)`` of workload ``name``'s newest stored epoch —
+        the warm path for ``resolve_graph`` on an unregistered name — or
+        ``None``. Graph arrays are *copied* out of the mapping: the
+        adopted graph outlives any one commit's files. Legacy per-k
+        directories still qualify here (their graph arrays are identical),
+        so adoption survives a store written before the k collapse."""
         best = None
         for entry in sorted(os.listdir(self.root)):
             dirpath = os.path.join(self.root, entry)

@@ -1,4 +1,4 @@
-"""On-disk segment/manifest format for one stored (workload, k) key
+"""On-disk segment/manifest format for one stored workload key
 (DESIGN.md §13.2).
 
 One key directory holds:
@@ -167,19 +167,25 @@ def _flat_bytes(a) -> np.ndarray:
 def _delta_entries(prev_man: dict, prev_arrays: dict, arrays: dict,
                    seg_name: str):
     """Per-array delta classification against the previous commit. The
-    name sets must match (an index never gains or loses arrays between
-    epochs); a mismatch degrades to a full commit by inflating the
-    chain."""
-    if set(prev_man["arrays"]) != set(arrays):
+    new name set may gain arrays (a suffix epoch can raise the graph's
+    k-max, adding fresh per-k blocks — those write in full while the
+    existing blocks still delta); *losing* arrays degrades to a full
+    commit by inflating the chain."""
+    if not set(prev_man["arrays"]) <= set(arrays):
         return {}, 0, set(range(10_000))  # force the full path
     entries: dict = {}
     delta_bytes = 0
     chain = {seg_name}
     for name, arr in arrays.items():
         arr = np.asarray(arr)
-        p_ent = prev_man["arrays"][name]
-        d = array_delta(prev_arrays.get(name), arr)
-        if d == "reuse":
+        p_ent = prev_man["arrays"].get(name)
+        d = (array_delta(prev_arrays.get(name), arr)
+             if p_ent is not None else "full")
+        if p_ent is None:
+            raw = _flat_bytes(arr)
+            delta_bytes += raw.nbytes
+            parts = [_Pending(raw)]
+        elif d == "reuse":
             parts = [dict(p) for p in p_ent["parts"]]
         elif d == "suffix":
             prev_n = sum(p["nbytes"] for p in p_ent["parts"])

@@ -31,3 +31,16 @@ def validates_with_typed_errors(x):
 def suppressed_assert(x):
     assert x > 0  # repro: ignore[bare-assert]
     return x
+
+
+def uses_workload_keys(registry, store, engine, cache, spec_key):
+    # the modern key space: workload name alone; k stays per-query
+    h = registry.get("wl")
+    f = registry.get_async("wl", timeout=1.0)
+    s = store.load("wl")
+    engine.warmup("wl", sweep=True, sweep_ks=(2,))
+    resident = "wl" in registry
+    # the result cache's 2-tuple keys are a DIFFERENT key space —
+    # (index_key, spec_key), not (workload, k) — and must not be flagged
+    hit = cache.get(("wl", spec_key))
+    return h, f, s, resident, hit

@@ -23,3 +23,13 @@ def times_with_wallclock():
 def has_bare_assert(x):
     assert x > 0                             # bare-assert
     return x
+
+
+def uses_per_k_keys(registry, store, engine, k):
+    h1 = registry.get(("wl", 3))             # per-k-key (tuple key)
+    h2 = registry.get_async(("wl", k))       # per-k-key (tuple key)
+    h3 = store.load(("wl", 3))               # per-k-key (tuple key)
+    h4 = registry.get("wl", k)               # per-k-key (positional k)
+    h5 = engine.warmup("wl", 3)              # per-k-key (positional k)
+    resident = ("wl", 3) in registry         # per-k-key (tuple membership)
+    return h1, h2, h3, h4, h5, resident

@@ -124,6 +124,7 @@ class TestApiPassFixtures:
         assert len(by_rule["metrics-direct"]) == 2
         assert len(by_rule["wallclock-in-traced"]) == 1
         assert len(by_rule["bare-assert"]) == 1
+        assert len(by_rule["per-k-key"]) == 6
 
     def test_clean_fixture_has_zero_findings(self):
         mod = "tests.fixtures.analysis"
@@ -410,7 +411,7 @@ class TestWitnessedServingPath:
         g = TemporalGraph(n=4, src=src, dst=dst, t=t)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             r = eng.answer("g", TCCSQuery(0, 1, 7, 2))
             assert r is not None
         assert w.acquisitions > 0

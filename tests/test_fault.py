@@ -178,7 +178,7 @@ class TestStoreCrashRecovery:
     bit-identical to the one that was live at that commit. The commit point
     is the manifest rename — everything short of it is ignorable debris."""
 
-    KEY = ("crash", 2)
+    KEY = "crash"
 
     @pytest.fixture(scope="class")
     def committed(self, tmp_path_factory):
@@ -190,7 +190,7 @@ class TestStoreCrashRecovery:
         g0, suffix = split_epoch(g, 0.7)
         reg = IndexRegistry(store=IndexStore(root))
         reg.register_graph("crash", g0)
-        h0 = reg.get("crash", 2)
+        h0 = reg.get("crash")
         h1 = reg.extend_graph("crash", suffix)[self.KEY].result(timeout=60)
         g1 = reg.resolve_graph("crash")
         reg.close()
@@ -209,7 +209,7 @@ class TestStoreCrashRecovery:
         if graph is not None:
             reg.register_graph("crash", graph)
         try:
-            return reg, reg.get("crash", 2)
+            return reg, reg.get("crash")
         finally:
             reg.close()
 
@@ -263,7 +263,7 @@ class TestStoreCrashRecovery:
         store = IndexStore(root)
         reg = IndexRegistry(store=store)
         reg.register_graph("crash", committed[3])
-        h = reg.get("crash", 2)
+        h = reg.get("crash")
         reg.close()
         assert h.source == "disk" and h.epoch == 0
         assert_pecb_identical(h.pecb, committed[1].pecb)
@@ -295,7 +295,7 @@ class TestStoreCrashRecovery:
         store = IndexStore(root)
         reg = IndexRegistry(store=store)
         reg.register_graph("crash", committed[3])
-        assert reg.get("crash", 2).epoch == 0       # recovered to epoch 0
+        assert reg.get("crash").epoch == 0       # recovered to epoch 0
         g1 = committed[4]
         suffix = [(int(u), int(v), int(t)) for u, v, t in
                   zip(g1.src[committed[3].m:], g1.dst[committed[3].m:],

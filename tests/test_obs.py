@@ -305,7 +305,7 @@ class TestEngineTracing:
         cfg = EngineConfig(flush_ms=0.5, host_threshold=0, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             futs = eng.submit_specs(
                 "g", [TCCSQuery(u, 1, g.t_max, 2) for u in range(24)])
             eng.flush()
@@ -330,7 +330,7 @@ class TestEngineTracing:
         cfg = EngineConfig(flush_ms=0.5, host_threshold=0, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             futs = eng.submit_specs(
                 "g", [TCCSQuery(u, 1, g.t_max, 2) for u in range(12)])
             eng.flush()
@@ -349,7 +349,7 @@ class TestEngineTracing:
         g = _graph()
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             spec = TCCSQuery(3, 1, g.t_max, 2)
             r1 = eng.answer("g", spec)
             r2 = eng.answer("g", spec)              # cache hit
@@ -379,7 +379,7 @@ class TestEngineTracing:
         g = _graph()
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2, sweep=True)
+            eng.warmup("g", sweep=True, sweep_ks=(2,))
             res = eng.sweep("g", WindowSweep(
                 u=3, k=2, windows=[(t, min(t + 4, g.t_max))
                                    for t in range(1, 14)]))
@@ -427,14 +427,14 @@ class TestBackgroundTracing:
         g = _graph()
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.registry.get("g", 2)
+            eng.registry.get("g")
             (b,) = eng.tracer.spans(name="index_build")
             assert b.cat == "index" and b.parent_id is None
             assert "build-pool" in b.thread_name
             kids = [s for s in eng.tracer.spans()
                     if s.parent_id == b.span_id]
             assert {s.name for s in kids} == \
-                {"core_times", "forest", "pack", "device"}
+                {"core_times", "forest", "device"}
 
     def test_ingest_refresh_parented_across_fifo_worker(self):
         """A query racing an ingest: the query's spans pin the old epoch
@@ -443,7 +443,7 @@ class TestBackgroundTracing:
         g = _graph()
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             suffix = [(0, 1, g.t_max + 1), (1, 2, g.t_max + 2)]
             futures = eng.ingest("g", suffix)
             r = eng.answer("g", TCCSQuery(3, 1, g.t_max, 2))
@@ -468,7 +468,7 @@ class TestBackgroundTracing:
         g = _graph()
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             eng.retain("g", 6, wait=True)
             (ret,) = eng.tracer.spans(name="retain")
             (trim,) = eng.tracer.spans(name="index_retention")
@@ -518,14 +518,14 @@ class TestSlowQueriesAndCompiles:
         with ServingEngine(EngineConfig(flush_ms=0.5,
                                         host_threshold=0)) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)
+            eng.warmup("g")
             assert eng.metrics.counter("jit_compiles") > 0
             assert eng.metrics.counter("jit_compile_batch_query") > 0
             comp = eng.tracer.spans(name="jit_compile")
             assert comp and all(s.cat == "compile" for s in comp)
             assert comp[0].attrs["program"] == "batch_query"
             before = eng.metrics.counter("jit_compiles")
-            eng.warmup("g", 2)     # warm: no cache growth, no new events
+            eng.warmup("g")     # warm: no cache growth, no new events
             assert eng.metrics.counter("jit_compiles") == before
 
 

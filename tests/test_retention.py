@@ -13,7 +13,7 @@ from repro.core.batch_query import refresh_device, to_device
 from repro.core.core_time import (edge_core_times, extend_core_times,
                                   shrink_core_times)
 from repro.core.kcore import tccs_oracle
-from repro.core.pecb_index import build_pecb_index
+from repro.core.pecb_index import build_pecb_index, build_stratified_index
 from repro.core.query_api import ResultMode, TCCSQuery
 from repro.core.streaming import extend_pecb_index, shrink_pecb_index
 from repro.core.temporal_graph import TemporalGraph, gen_temporal_graph
@@ -28,9 +28,19 @@ TAB_FIELDS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
 
 
 def assert_pecb_identical(a, b):
+    """Bit-identity for a per-k PECBIndex or a StratifiedPECB (same
+    packed field names; the stratified form adds k-block offsets)."""
     for f in PECB_FIELDS:
         assert np.array_equal(getattr(a, f), getattr(b, f)), f
-    assert (a.n, a.m, a.t_max, a.k) == (b.n, b.m, b.t_max, b.k)
+    assert (a.n, a.m, a.t_max) == (b.n, b.m, b.t_max)
+    if hasattr(a, "supported_ks"):
+        assert a.supported_ks == b.supported_ks
+        assert a.k_max_graph == b.k_max_graph
+        for f in ("knode_ptr", "kent_ptr", "kvent_ptr",
+                  "ver_src", "ver_dst", "ver_t"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    else:
+        assert a.k == b.k
     assert a.versions == b.versions
 
 
@@ -216,15 +226,15 @@ class TestRegistryRetain:
         reg = IndexRegistry()
         try:
             reg.register_graph("feed", g)
-            h0 = reg.get("feed", 2)
+            h0 = reg.get("feed")
             assert h0.epoch == 0
             futs = reg.retain("feed", 7)
-            assert set(futs) == {("feed", 2)}
-            h1 = futs[("feed", 2)].result(timeout=60)
+            assert set(futs) == {"feed"}
+            h1 = futs["feed"].result(timeout=60)
             g2 = g.expire_before(7)
             assert h1.epoch == 1 and h1.graph.t_max == g2.t_max
-            assert reg.get_nowait("feed", 2, start_build=False) is h1
-            assert_pecb_identical(h1.pecb, build_pecb_index(g2, 2))
+            assert reg.get_nowait("feed", start_build=False) is h1
+            assert_pecb_identical(h1.pecb, build_stratified_index(g2))
             assert reg.stats()["retentions"] == 1
             assert reg.stats()["epochs"] == {"feed": 1}
             # old handle still answers (old epoch pinned for in-flight use)
@@ -241,7 +251,7 @@ class TestRegistryRetain:
             reg.register_graph("feed", g)
             assert reg.retain("feed", 1) == {}      # nothing expires
             assert reg.retain("feed", 5) == {}      # nothing resident
-            h = reg.get("feed", 2)                  # cold build: new epoch
+            h = reg.get("feed")                  # cold build: new epoch
             assert h.epoch == 1
             assert h.graph.t_max == g.expire_before(5).t_max
         finally:
@@ -257,17 +267,17 @@ class TestRegistryRetain:
         reg = IndexRegistry()
         try:
             reg.register_graph("feed", g)
-            reg.get("feed", 2)
+            reg.get("feed")
             g2 = g.expire_before(9)
             f1 = reg.retain("feed", 9)
             f2 = reg.extend_graph("feed", [(0, 1, g2.t_max + 1)])
             for f in list(f1.values()) + list(f2.values()):
                 f.result(timeout=120)
-            h = reg.get_nowait("feed", 2, start_build=False)
+            h = reg.get_nowait("feed", start_build=False)
             expected = g2.extend([(0, 1, g2.t_max + 1)])
             assert h is not None and h.epoch == 2
             assert h.graph.t_max == expected.t_max
-            assert_pecb_identical(h.pecb, build_pecb_index(expected, 2))
+            assert_pecb_identical(h.pecb, build_stratified_index(expected))
         finally:
             reg.close()
 
@@ -280,16 +290,16 @@ class TestRegistryRetain:
         reg = IndexRegistry()
         try:
             reg.register_graph("feed", g0)
-            reg.get("feed", 2)
+            reg.get("feed")
             f1 = reg.extend_graph("feed", suffix)
             f2 = reg.retain("feed", 9)
             for f in list(f1.values()) + list(f2.values()):
                 f.result(timeout=120)
-            h = reg.get_nowait("feed", 2, start_build=False)
+            h = reg.get_nowait("feed", start_build=False)
             assert h is not None and h.epoch == 2
             g2 = g.expire_before(9)
             assert h.graph.t_max == g2.t_max
-            assert_pecb_identical(h.pecb, build_pecb_index(g2, 2))
+            assert_pecb_identical(h.pecb, build_stratified_index(g2))
         finally:
             reg.close()
 
@@ -303,7 +313,7 @@ class TestEngineRetention:
         t_cut = 7
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             q_dead = TCCSQuery(3, 1, 5, 2)            # touches the prefix
             q_live = TCCSQuery(3, 9, 14, 2)           # survives, rehomes
             q_edge = TCCSQuery(3, 9, 14, 2, ResultMode.EDGES)  # dropped
@@ -334,7 +344,7 @@ class TestEngineRetention:
         g = self._graph(42)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             eng.retain("feed", 8, wait=True)
             g2 = g.expire_before(8)
             rng = np.random.default_rng(3)
@@ -350,9 +360,9 @@ class TestEngineRetention:
         g = self._graph(43)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             futs = eng.retain("feed", 9)
-            trim_fut = futs[("feed", 2)]
+            trim_fut = futs["feed"]
             answered = 0
             while not trim_fut.done() or answered < 32:
                 res = eng.answer("feed", TCCSQuery(answered % g.n, 1, 5, 2))
@@ -369,19 +379,19 @@ class TestEngineRetention:
         suffix = [tuple(e) for e in suffix.tolist()]
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             eng.set_retention("feed", RetentionPolicy(window=10, slack=2))
             assert eng.retention_policy("feed").window == 10
             eng.ingest("feed", suffix, wait=True)    # 18 > 12: trims to 10
-            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            h = eng.registry.get_nowait("feed", start_build=False)
             assert h.graph.t_max == 10
             assert h.epoch == 2                      # extend then retain
             gt = g.expire_before(g.t_max - 10 + 1)
-            assert_pecb_identical(h.pecb, build_pecb_index(gt, 2))
+            assert_pecb_identical(h.pecb, build_stratified_index(gt))
             assert eng.stats()["engine"]["counters"]["auto_trims"] == 1
             # within slack: the next tiny ingest must NOT trim again
             eng.ingest("feed", [(0, 1, h.graph.t_max + 1)], wait=True)
-            h2 = eng.registry.get_nowait("feed", 2, start_build=False)
+            h2 = eng.registry.get_nowait("feed", start_build=False)
             assert h2.graph.t_max == 11              # grew, under 10 + 2
             assert eng.stats()["engine"]["counters"]["auto_trims"] == 1
 
@@ -390,20 +400,20 @@ class TestEngineRetention:
         g0, _ = g.split_at(6)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             eng.set_retention("feed", RetentionPolicy(window=6, every=2))
             # first ingest: tick 1 of 2 -> no trim despite overflow
             eng.ingest("feed", [(0, 1, 7)], wait=True)
-            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            h = eng.registry.get_nowait("feed", start_build=False)
             assert h.graph.t_max == 7
             # second ingest: tick 2 -> trims back to the window
             eng.ingest("feed", [(1, 2, 8)], wait=True)
-            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            h = eng.registry.get_nowait("feed", start_build=False)
             assert h.graph.t_max == 6
             eng.set_retention("feed", None)
             assert eng.retention_policy("feed") is None
             eng.ingest("feed", [(2, 3, h.graph.t_max + 4)], wait=True)
-            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            h = eng.registry.get_nowait("feed", start_build=False)
             assert h.graph.t_max == 10               # no policy: no trim
         with pytest.raises(ValueError, match="window"):
             RetentionPolicy(window=0)
@@ -417,7 +427,7 @@ class TestEngineRetention:
         g0, _ = full.split_at(window)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("roll", g0)
-            eng.registry.get("roll", k)
+            eng.registry.get("roll")
             eng.set_retention("roll", RetentionPolicy(window=window))
             offset, t_abs, cycles = 0, window, 0
             while t_abs < full.t_max:
@@ -429,14 +439,14 @@ class TestEngineRetention:
                              full.t[lo:hi])]
                 eng.ingest("roll", chunk, wait=True)
                 t_abs = t_hi
-                h = eng.registry.get_nowait("roll", k, start_build=False)
+                h = eng.registry.get_nowait("roll", start_build=False)
                 assert h.graph.t_max <= window
-                assert h.tab.vertex_ct.nbytes <= 4 * full.n * (window + 1)
+                assert h.tab.num_versions <= len(h.tab.ks) * full.n * (window + 1)
                 offset = t_abs - h.graph.t_max
                 cycles += 1
             assert cycles >= 5
             expected = full.retain_last(window)
-            assert_pecb_identical(h.pecb, build_pecb_index(expected, k))
+            assert_pecb_identical(h.pecb, build_stratified_index(expected))
 
 
 # ----------------------------------------------------------------------

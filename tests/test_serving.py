@@ -29,9 +29,13 @@ def lenient_spec(u, ts, te, k):
     return TCCSQuery(u, ts, te, k)
 
 
-def alg1(pecb, u, ts, te):
+def alg1(pecb, u, ts, te, k=2):
     """Algorithm-1 reference through the non-deprecated component
-    routine (the deprecated .query shim wrapped exactly this)."""
+    routine (the deprecated .query shim wrapped exactly this). Accepts
+    either a per-k PECBIndex or the registry's stratified index (sliced
+    to the requested stratum)."""
+    if hasattr(pecb, "slice_k"):
+        pecb = pecb.slice_k(k)
     return frozenset(pecb._component_vertices(u, ts, te))
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -72,7 +76,7 @@ class TestEngineExactness:
                            min_bucket=8, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 2)
+            h = eng.registry.get("g")
             qs = random_stream(g, 120, rng)
             got = run_engine(eng, "g", 2, qs)
             assert eng.metrics.counter("device_batches") > 0
@@ -87,28 +91,33 @@ class TestEngineExactness:
                            host_threshold=10**9, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 3)
+            h = eng.registry.get("g")
             qs = random_stream(g, 80, rng)
             got = run_engine(eng, "g", 3, qs)
             assert eng.metrics.counter("host_batches") > 0
             assert eng.metrics.counter("device_batches") == 0
         for (u, ts, te), res in zip(qs, got):
-            assert res == alg1(h.pecb, u, ts, te)
+            assert res == alg1(h.pecb, u, ts, te, k=3)
 
-    def test_empty_forest_returns_empty(self):
+    def test_unsupported_k_returns_empty(self):
+        """k above the graph's k-max is outside every stratum: the engine
+        answers exactly-empty host-side, no device launch."""
         g = gen_temporal_graph(n=20, m=60, t_max=8, seed=9)
         with ServingEngine(EngineConfig(flush_ms=500.0)) as eng:
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 50)        # k >> k_max: empty forest
-            assert h.pecb.num_nodes == 0
+            h = eng.registry.get("g")
+            assert 50 not in h.pecb.supported_ks
+            assert 50 > h.pecb.k_max_graph
             qs = [(u, 1, g.t_max) for u in range(g.n)]
             got = run_engine(eng, "g", 50, qs)
             assert all(r == frozenset() for r in got)
-            # empty forest always routes host (nothing to launch)
+            # trivially-empty k always routes host (nothing to launch)
             assert eng.metrics.counter("device_batches") == 0
+            assert eng.metrics.counter("unsupported_k_queries") == g.n
 
     def test_mixed_k_one_engine(self):
-        """One engine serves several k values; answers stay per-k exact."""
+        """One engine serves several k values off ONE stratified build;
+        answers stay per-k exact and no rebuild happens between ks."""
         g = gen_temporal_graph(n=30, m=240, t_max=12, seed=5)
         rng = np.random.default_rng(5)
         qs = random_stream(g, 40, rng, oob_frac=0.0)
@@ -117,9 +126,31 @@ class TestEngineExactness:
             eng.register_graph("g", g)
             for k in (2, 3):
                 got = run_engine(eng, "g", k, qs)
-                h = eng.registry.get("g", k)
+                h = eng.registry.get("g")
                 for (u, ts, te), res in zip(qs, got):
-                    assert res == alg1(h.pecb, u, ts, te), (k, u, ts, te)
+                    assert res == alg1(h.pecb, u, ts, te, k=k), (k, u, ts, te)
+            assert eng.registry.builds == 1
+
+    def test_mixed_k_single_batch(self):
+        """Queries with different k share one flushed batch (one device
+        launch) and each resolves against its own stratum."""
+        g = gen_temporal_graph(n=30, m=240, t_max=12, seed=6)
+        rng = np.random.default_rng(6)
+        qs = random_stream(g, 48, rng, oob_frac=0.0)
+        cfg = EngineConfig(max_batch=64, flush_ms=500.0, host_threshold=0,
+                           cache_capacity=0)
+        with ServingEngine(cfg) as eng:
+            eng.register_graph("g", g)
+            h = eng.registry.get("g")
+            ks = [int(rng.choice(h.pecb.supported_ks)) for _ in qs]
+            futs = eng.submit_specs(
+                "g", [TCCSQuery(u, ts, te, k)
+                      for (u, ts, te), k in zip(qs, ks)])
+            eng.flush()
+            got = [f.result(timeout=60).vertices for f in futs]
+            assert eng.metrics.counter("device_batches") == 1
+            for (u, ts, te), k, res in zip(qs, ks, got):
+                assert res == alg1(h.pecb, u, ts, te, k=k), (k, u, ts, te)
 
 
 class TestCache:
@@ -128,7 +159,7 @@ class TestCache:
         with ServingEngine(EngineConfig(flush_ms=500.0, host_threshold=0,
                                         cache_capacity=64)) as eng:
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 2)
+            h = eng.registry.get("g")
             qs = [(u, 2, 9) for u in range(10)]
             first = run_engine(eng, "g", 2, qs)
             assert eng.metrics.counter("cache_hits") == 0
@@ -185,7 +216,7 @@ class TestBucketing:
                            min_bucket=8, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            eng.registry.get("g", 2)             # build outside measurement
+            eng.registry.get("g")             # build outside measurement
 
             def wave(n_q):
                 qs = random_stream(g, n_q, rng, oob_frac=0.0)
@@ -210,9 +241,9 @@ class TestBucketing:
         cfg = EngineConfig(max_batch=100, flush_ms=500.0, host_threshold=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)                   # must not assert on 128 > 100
+            eng.warmup("g")                   # must not assert on 128 > 100
             got = run_engine(eng, "g", 2, [(0, 1, 9), (1, 2, 8)])
-            h = eng.registry.get("g", 2)
+            h = eng.registry.get("g")
             assert got[0] == alg1(h.pecb, 0, 1, 9)
 
     def test_warmup_precompiles_all_buckets(self):
@@ -221,7 +252,7 @@ class TestBucketing:
                            min_bucket=8, cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            eng.warmup("g", 2)                   # buckets 8, 16, 32
+            eng.warmup("g")                   # buckets 8, 16, 32
             c0 = ShardedExecutor.compile_count()
             rng = np.random.default_rng(1)
             for n_q in (2, 7, 12, 20, 32):
@@ -242,7 +273,7 @@ class TestPlannerRouting:
                            cache_capacity=0)
         with ServingEngine(cfg) as eng:
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 2)
+            h = eng.registry.get("g")
             small = random_stream(g, 3, rng, 0.0)
             futs = eng.submit_specs(
                 "g", [TCCSQuery(u, ts, te, 2) for (u, ts, te) in small])
@@ -263,19 +294,18 @@ class TestPlannerRouting:
 
 class TestRegistry:
     def test_memoize_and_evict(self):
-        reg = IndexRegistry(capacity=2)
+        reg = IndexRegistry(capacity=1)
         g1 = gen_temporal_graph(n=20, m=100, t_max=8, seed=1)
         g2 = gen_temporal_graph(n=20, m=100, t_max=8, seed=2)
         reg.register_graph("g1", g1); reg.register_graph("g2", g2)
-        h = reg.get("g1", 2)
-        assert reg.get("g1", 2) is h             # memoized
+        h = reg.get("g1")
+        assert reg.get("g1") is h             # memoized
         assert reg.builds == 1
-        reg.get("g1", 3)                         # second resident
-        reg.get("g2", 2)                         # evicts ("g1", 2): LRU
+        reg.get("g2")                         # evicts "g1": LRU
         assert reg.evictions == 1
-        assert ("g1", 2) not in reg
-        h2 = reg.get("g1", 2)                    # rebuild
-        assert h2 is not h and reg.builds == 4
+        assert "g1" not in reg
+        h2 = reg.get("g1")                    # rebuild (evicts "g2")
+        assert h2 is not h and reg.builds == 3
 
     def test_rebinding_graph_name_raises(self):
         reg = IndexRegistry()
@@ -292,9 +322,11 @@ class TestRegistry:
                             on_evict=lambda k, h: evicted.append((k, reg.stats())))
         g = gen_temporal_graph(n=15, m=80, t_max=6, seed=3)
         reg.register_graph("g", g)
-        reg.get("g", 2)
-        reg.get("g", 3)                          # evicts ("g", 2)
-        assert [k for (k, _) in evicted] == [("g", 2)]
+        reg.get("g")
+        reg.register_graph("g2",
+                           gen_temporal_graph(n=15, m=80, t_max=6, seed=4))
+        reg.get("g2")                         # evicts "g"
+        assert [k for (k, _) in evicted] == ["g"]
         # the hook could re-enter the registry (stats() takes the lock)
 
     def test_engine_retires_batcher_on_eviction(self):
@@ -306,12 +338,12 @@ class TestRegistry:
             eng.register_graph("g1", g1)
             eng.register_graph("g2", g2)
             eng.answer("g1", TCCSQuery(0, 1, 6, 2))
-            assert ("g1", 2) in eng._batchers
-            eng.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts ("g1", 2)
-            assert ("g1", 2) not in eng._batchers
-            assert ("g2", 2) in eng._batchers
+            assert "g1" in eng._batchers
+            eng.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts "g1"
+            assert "g1" not in eng._batchers
+            assert "g2" in eng._batchers
             # re-query after eviction: rebuild + fresh batcher, exact answer
-            h1 = eng.registry.get("g1", 2)
+            h1 = eng.registry.get("g1")
             assert eng.answer("g1", TCCSQuery(3, 1, 6, 2)).vertices == \
                 alg1(h1.pecb, 3, 1, 6)
 
@@ -325,14 +357,14 @@ class TestRegistry:
              ServingEngine(cfg, registry=reg) as b:
             a.answer("g1", TCCSQuery(0, 1, 6, 2))
             b.answer("g1", TCCSQuery(1, 1, 6, 2))
-            assert ("g1", 2) in a._batchers and ("g1", 2) in b._batchers
-            a.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts ("g1", 2)
-            assert ("g1", 2) not in a._batchers
-            assert ("g1", 2) not in b._batchers   # B's listener fired too
+            assert "g1" in a._batchers and "g1" in b._batchers
+            a.answer("g2", TCCSQuery(0, 1, 6, 2))  # evicts "g1"
+            assert "g1" not in a._batchers
+            assert "g1" not in b._batchers        # B's listener fired too
 
     def test_unknown_workload_raises(self):
         with pytest.raises(KeyError):
-            IndexRegistry().get("no_such_graph", 2)
+            IndexRegistry().get("no_such_graph")
 
     def test_bench_workload_resolves_by_name(self):
         reg = IndexRegistry()
@@ -442,7 +474,7 @@ def test_engine_multi_device_sharded():
             assert eng.executor.num_devices == 8
             assert eng.executor.batch_sharding is not None
             eng.register_graph("g", g)
-            h = eng.registry.get("g", 2)
+            h = eng.registry.get("g")
             rng = np.random.default_rng(0)
             qs = [(int(rng.integers(0, g.n)), int(rng.integers(1, g.t_max)),
                    int(rng.integers(1, g.t_max + 1))) for _ in range(48)]
@@ -453,7 +485,8 @@ def test_engine_multi_device_sharded():
             eng.flush()
             got = [f.result(timeout=120).vertices for f in futs]
             for (u, ts, te), res in zip(qs, got):
-                assert res == frozenset(h.pecb._component_vertices(u, ts, te))
+                assert res == frozenset(
+                    h.pecb.slice_k(2)._component_vertices(u, ts, te))
         print("sharded engine ok")
     """)
     env = dict(os.environ)
@@ -475,43 +508,43 @@ class TestAsyncRegistry:
         import threading
 
         reg = IndexRegistry(capacity=32, build_workers=8)
-        keys = []
+        names = []
         for i in range(8):
             name = f"g{i}"
             reg.register_graph(name, gen_temporal_graph(
                 n=12, m=50, t_max=5, seed=i))
-            keys.extend([(name, 2), (name, 3)])
+            names.append(name)
         start = threading.Barrier(16)
 
-        def hammer(key):
+        def hammer(name):
             start.wait()
             for _ in range(4):
-                reg.get(*key)
+                reg.get(name)
 
-        threads = [threading.Thread(target=hammer, args=(key,))
-                   for key in keys]
+        threads = [threading.Thread(target=hammer, args=(name,))
+                   for name in names for _ in range(2)]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
-        assert reg.builds == len(keys)
+        assert reg.builds == len(names)
         reg.close()
 
     def test_get_nowait_miss_then_hit(self):
         reg = IndexRegistry()
         reg.register_graph("g", gen_temporal_graph(n=12, m=50, t_max=5, seed=0))
-        assert reg.get_nowait("g", 2, start_build=False) is None
-        assert ("g", 2) not in reg
-        h = reg.get_nowait("g", 2)              # miss, but schedules the build
+        assert reg.get_nowait("g", start_build=False) is None
+        assert "g" not in reg
+        h = reg.get_nowait("g")              # miss, but schedules the build
         assert h is None
-        built = reg.get_async("g", 2).result(timeout=60)
-        assert reg.get_nowait("g", 2) is built
+        built = reg.get_async("g").result(timeout=60)
+        assert reg.get_nowait("g") is built
         reg.close()
 
     def test_get_async_coalesces_thundering_herd(self):
         reg = IndexRegistry()
         reg.register_graph("g", gen_temporal_graph(n=14, m=60, t_max=6, seed=1))
-        futs = [reg.get_async("g", 2) for _ in range(6)]
+        futs = [reg.get_async("g") for _ in range(6)]
         handles = {id(f.result(timeout=60)) for f in futs}
         assert len(handles) == 1 and reg.builds == 1
         reg.close()
@@ -519,12 +552,12 @@ class TestAsyncRegistry:
     def test_build_failure_surfaces_on_future(self):
         reg = IndexRegistry()
         with pytest.raises(KeyError):
-            reg.get_async("no_such_graph", 2).result(timeout=60)
+            reg.get_async("no_such_graph").result(timeout=60)
         assert reg.builds == 0
         # the failed key is not stuck pending: a later register succeeds
         reg.register_graph("no_such_graph",
                            gen_temporal_graph(n=10, m=40, t_max=4, seed=2))
-        assert reg.get("no_such_graph", 2).pecb is not None
+        assert reg.get("no_such_graph").pecb is not None
         reg.close()
 
     def test_build_stage_metrics_recorded(self):
@@ -533,11 +566,11 @@ class TestAsyncRegistry:
         metrics = EngineMetrics()
         reg = IndexRegistry(metrics=metrics)
         reg.register_graph("g", gen_temporal_graph(n=14, m=70, t_max=6, seed=3))
-        h = reg.get("g", 2)
-        assert set(h.build_stages) == {"core_times", "forest", "pack", "device"}
+        h = reg.get("g")
+        assert set(h.build_stages) == {"core_times", "forest", "device"}
         assert all(v >= 0 for v in h.build_stages.values())
         snap = metrics.snapshot()
-        for stage in ("core_times", "forest", "pack", "device"):
+        for stage in ("core_times", "forest", "device"):
             assert snap["latency"][f"index_build_{stage}"]["count"] == 1
         reg.close()
 
@@ -564,7 +597,7 @@ class TestAsyncRegistry:
             assert submitted_in < 30            # returned while build blocked
             assert not fut.done()
             release.set()
-            want = alg1(reg.get("g", 2).pecb, 0, 1, 6)
+            want = alg1(reg.get("g").pecb, 0, 1, 6)
             assert fut.result(timeout=60).vertices == want
         reg.close()
 
@@ -572,6 +605,6 @@ class TestAsyncRegistry:
         g = gen_temporal_graph(n=15, m=70, t_max=6, seed=5)
         with ServingEngine(EngineConfig()) as eng:
             eng.register_graph("g", g)
-            eng.prefetch("g", 2).result(timeout=60)
-            assert ("g", 2) in eng.registry
+            eng.prefetch("g").result(timeout=60)
+            assert "g" in eng.registry
             assert eng.registry.stats()["pending"] == []

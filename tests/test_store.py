@@ -20,7 +20,8 @@ from repro.store.index_store import key_dirname
 
 from test_streaming import assert_pecb_identical, split_epoch
 
-TAB_FIELDS = ("edge_id", "ts_from", "ts_to", "ct", "vertex_ct")
+TAB_FIELDS = ("kptr", "edge_id", "ts_from", "ts_to", "ct",
+              "vptr", "v_ts_from", "v_ts_to", "v_ct")
 
 
 def small_graph(seed=3):
@@ -32,7 +33,7 @@ def build_handle(g, k=2, name="g"):
     reg = IndexRegistry()
     reg.register_graph(name, g)
     try:
-        return reg.get(name, k)
+        return reg.get(name)
     finally:
         reg.close()
 
@@ -250,11 +251,11 @@ class TestIndexStore:
         g = small_graph()
         h = build_handle(g, k=2)
         store = IndexStore(str(tmp_path))
-        res = store.put_handle(("g", 2), h)
+        res = store.put_handle("g", h)
         assert res["mode"] == "full" and res["epoch"] == 0
-        assert store.current_epoch(("g", 2)) == 0
-        assert store.keys() == [("g", 2)]
-        stored = store.load(("g", 2))
+        assert store.current_epoch("g") == 0
+        assert store.keys() == ["g"]
+        stored = store.load("g")
         assert stored is not None and stored.recovered == 0
         assert_pecb_identical(stored.pecb, h.pecb)
         for f in TAB_FIELDS:
@@ -268,27 +269,27 @@ class TestIndexStore:
     def test_put_same_epoch_is_noop(self, tmp_path):
         h = build_handle(small_graph(), k=2)
         store = IndexStore(str(tmp_path))
-        store.put_handle(("g", 2), h)
-        res = store.put_handle(("g", 2), h)
+        store.put_handle("g", h)
+        res = store.put_handle("g", h)
         assert res["mode"] == "current" and res["bytes_written"] == 0
         assert store.stats()["commits_noop"] == 1
 
     def test_load_miss_returns_none(self, tmp_path):
         store = IndexStore(str(tmp_path))
-        assert store.load(("nope", 3)) is None
-        assert store.current_epoch(("nope", 3)) is None
+        assert store.load("nope") is None
+        assert store.current_epoch("nope") is None
 
     def test_key_dirname_sanitized_and_collision_proof(self):
-        d1 = key_dirname(("feed@2026/08", 3))
-        d2 = key_dirname(("feed@2026_08", 3))
+        d1 = key_dirname("feed@2026/08")
+        d2 = key_dirname("feed@2026_08")
         assert "/" not in d1 and d1 != d2
 
     def test_stored_answers_match_live_index(self, tmp_path):
         g = small_graph(seed=9)
         h = build_handle(g, k=2)
         store = IndexStore(str(tmp_path))
-        store.put_handle(("g", 2), h)
-        stored = store.load(("g", 2))
+        store.put_handle("g", h)
+        stored = store.load("g")
         rng = np.random.default_rng(0)
         for _ in range(25):
             u = int(rng.integers(0, g.n))
@@ -308,7 +309,7 @@ class TestRegistryDiskTier:
         store_a = IndexStore(str(tmp_path))
         reg_a = IndexRegistry(store=store_a)
         reg_a.register_graph("w", g)
-        h_a = reg_a.get("w", 2)
+        h_a = reg_a.get("w")
         reg_a.close()
         assert h_a.source == "build"
         assert store_a.stats()["commits"] == 1   # write-through, no demote
@@ -316,7 +317,7 @@ class TestRegistryDiskTier:
         # "restart": fresh registry + fresh store object over the same root
         reg_b = IndexRegistry(store=IndexStore(str(tmp_path)))
         reg_b.register_graph("w", g)
-        h_b = reg_b.get("w", 2)
+        h_b = reg_b.get("w")
         reg_b.close()
         assert h_b.source == "disk"
         assert reg_b.builds == 0 and reg_b.promotions == 1
@@ -326,12 +327,12 @@ class TestRegistryDiskTier:
         store = IndexStore(str(tmp_path))
         reg_a = IndexRegistry(store=store)
         reg_a.register_graph("w", small_graph(seed=5))
-        reg_a.get("w", 2)
+        reg_a.get("w")
         reg_a.close()
         # same name, different graph: promotion must refuse the stored epoch
         reg_b = IndexRegistry(store=IndexStore(str(tmp_path)))
         reg_b.register_graph("w", small_graph(seed=6))
-        h = reg_b.get("w", 2)
+        h = reg_b.get("w")
         reg_b.close()
         assert h.source == "build"
         assert reg_b.promotions == 0 and reg_b.builds == 1
@@ -342,11 +343,11 @@ class TestRegistryDiskTier:
         reg = IndexRegistry(capacity=1, metrics=metrics, store=store)
         reg.register_graph("a", small_graph(seed=1))
         reg.register_graph("b", small_graph(seed=2))
-        h_a = reg.get("a", 2)
-        reg.get("b", 2)              # evicts ("a", 2) -> demote
-        assert ("a", 2) not in reg
+        h_a = reg.get("a")
+        reg.get("b")              # evicts ("a", 2) -> demote
+        assert "a" not in reg
         assert reg.stats()["demotions"] == 1
-        h_a2 = reg.get("a", 2)       # promoted back, evicting+demoting b
+        h_a2 = reg.get("a")       # promoted back, evicting+demoting b
         reg.close()
         assert h_a2.source == "disk"
         assert reg.promotions == 1 and reg.builds == 2
@@ -364,13 +365,13 @@ class TestRegistryDiskTier:
         store = IndexStore(str(tmp_path))
         reg = IndexRegistry(store=store)
         reg.register_graph("feed", g0)
-        reg.get("feed", 2)
+        reg.get("feed")
         for fut in reg.extend_graph("feed", suffix).values():
             fut.result(timeout=60)
         t_cut = max(2, g.t_max // 4)
         for fut in reg.retain("feed", t_cut).values():
             fut.result(timeout=60)
-        h_live = reg.get("feed", 2)
+        h_live = reg.get("feed")
         g_final = reg.resolve_graph("feed")
         reg.close()
         assert h_live.epoch == 2
@@ -381,7 +382,7 @@ class TestRegistryDiskTier:
         # warm reopen WITHOUT register_graph: resolve_graph adopts the
         # stored graph + epoch, the build promotes the stored index
         reg2 = IndexRegistry(store=IndexStore(str(tmp_path)))
-        h2 = reg2.get("feed", 2)
+        h2 = reg2.get("feed")
         assert h2.source == "disk" and h2.epoch == 2
         assert_handles_identical(h2, h_live)
         g2 = reg2.resolve_graph("feed")
@@ -390,13 +391,13 @@ class TestRegistryDiskTier:
         nxt = g2.t_max + 1
         futs = reg2.extend_graph(
             "feed", [(int(g2.src[0]), int(g2.dst[0]), nxt)])
-        h3 = futs[("feed", 2)].result(timeout=60)
+        h3 = futs["feed"].result(timeout=60)
         reg2.close()
         assert h3.epoch == 3 and h3.pecb.t_max == nxt
 
         # and the delta-chained commits replay to a cold-build-identical
         # index on a third open
-        fresh = IndexStore(str(tmp_path)).load(("feed", 2))
+        fresh = IndexStore(str(tmp_path)).load("feed")
         assert fresh.epoch == 3
         h_cold = build_handle(reg2.resolve_graph("feed"), k=2)
         assert_pecb_identical(fresh.pecb, h_cold.pecb)
@@ -406,13 +407,13 @@ class TestRegistryDiskTier:
         with ServingEngine(EngineConfig(store_dir=str(tmp_path),
                                         flush_ms=1.0)) as eng:
             eng.register_graph("w", g)
-            eng.warmup("w", 2)
+            eng.warmup("w")
             res = eng.answer("w", TCCSQuery(0, 1, g.t_max, 2))
             assert res.provenance.route != "disk"
         with ServingEngine(EngineConfig(store_dir=str(tmp_path),
                                         flush_ms=1.0)) as eng:
             eng.register_graph("w", g)
-            eng.warmup("w", 2)
+            eng.warmup("w")
             res = eng.answer("w", TCCSQuery(0, 1, g.t_max, 2))
             assert res.provenance.route == "disk"
             stats = eng.stats()
@@ -434,7 +435,7 @@ class TestRegistryDiskTier:
         reg = IndexRegistry(store=BrokenStore(str(tmp_path)),
                             metrics=metrics)
         reg.register_graph("w", small_graph(seed=4))
-        h = reg.get("w", 2)
+        h = reg.get("w")
         reg.close()
         assert h.source == "build" and reg.builds == 1
         snap = metrics.snapshot(include_sources=False)["counters"]

@@ -13,7 +13,7 @@ from repro.core.batch_query import refresh_device, to_device
 from repro.core.core_time import edge_core_times, extend_core_times
 from repro.core.ctmsf_index import CTMSFIndex
 from repro.core.ef_index import EFIndex
-from repro.core.pecb_index import build_pecb_index
+from repro.core.pecb_index import build_pecb_index, build_stratified_index
 from repro.core.query_api import (EMPTY_WINDOW, ResultMode, TCCSQuery,
                                   WindowSweep)
 from repro.core.streaming import extend_pecb_index
@@ -29,9 +29,20 @@ PECB_FIELDS = ("node_u", "node_v", "node_ct", "node_edge", "node_live_from",
 
 
 def assert_pecb_identical(a, b):
+    """Bit-identity for either a per-k PECBIndex or a StratifiedPECB
+    (same packed field names; the stratified form adds the k-block
+    offset tables and global version endpoints)."""
     for f in PECB_FIELDS:
         assert np.array_equal(getattr(a, f), getattr(b, f)), f
-    assert (a.n, a.m, a.t_max, a.k) == (b.n, b.m, b.t_max, b.k)
+    assert (a.n, a.m, a.t_max) == (b.n, b.m, b.t_max)
+    if hasattr(a, "supported_ks"):
+        assert a.supported_ks == b.supported_ks
+        assert a.k_max_graph == b.k_max_graph
+        for f in ("knode_ptr", "kent_ptr", "kvent_ptr",
+                  "ver_src", "ver_dst", "ver_t"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    else:
+        assert a.k == b.k
     assert a.versions == b.versions
 
 
@@ -218,16 +229,16 @@ class TestServingEpochs:
         g0, suffix = split_epoch(g, 0.6)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            h0 = eng.registry.get("feed", 2)
+            h0 = eng.registry.get("feed")
             assert h0.epoch == 0 and h0.tab is not None
             futures = eng.ingest("feed", suffix, wait=True)
-            assert set(futures) == {("feed", 2)}
-            h1 = futures[("feed", 2)].result()
+            assert set(futures) == {"feed"}
+            h1 = futures["feed"].result()
             assert h1.epoch == 1
             assert h1.graph.t_max == g.t_max
-            assert eng.registry.get_nowait("feed", 2) is h1
+            assert eng.registry.get_nowait("feed") is h1
             # the refreshed index is bit-identical to a cold rebuild
-            assert_pecb_identical(h1.pecb, build_pecb_index(g, 2))
+            assert_pecb_identical(h1.pecb, build_stratified_index(g))
             # old handle still answers (old epoch pinned for in-flight use)
             q = TCCSQuery(3, 1, g0.t_max, 2)
             assert h0.pecb.answer(q).vertices == h1.pecb.answer(q).vertices
@@ -240,7 +251,7 @@ class TestServingEpochs:
         with ServingEngine() as eng:
             eng.register_graph("feed", g0)
             assert eng.ingest("feed", suffix) == {}
-            h = eng.registry.get("feed", 2)   # cold build sees new epoch
+            h = eng.registry.get("feed")   # cold build sees new epoch
             assert h.graph.t_max == g.t_max and h.epoch == 1
 
     def test_targeted_purge_preserves_old_window_cache(self):
@@ -248,7 +259,7 @@ class TestServingEpochs:
         g0, suffix = split_epoch(g, 0.6)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)   # resident, no XLA warmup needed
+            eng.registry.get("feed")   # resident, no XLA warmup needed
             q = TCCSQuery(5, 1, g0.t_max // 2, 2)
             first = eng.answer("feed", q)
             hit = eng.answer("feed", q)
@@ -268,9 +279,9 @@ class TestServingEpochs:
         g0, suffix = split_epoch(g, 0.7)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)   # resident, no XLA warmup needed
+            eng.registry.get("feed")   # resident, no XLA warmup needed
             futures = eng.ingest("feed", suffix)
-            refresh_fut = futures[("feed", 2)]
+            refresh_fut = futures["feed"]
             qs = random_queries(g0, 64, seed=2)
             answered = 0
             while not refresh_fut.done() or answered < 64:
@@ -289,7 +300,7 @@ class TestServingEpochs:
         g0, suffix = split_epoch(g, 0.6)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             eng.ingest("feed", suffix, wait=True)
             rng = np.random.default_rng(3)
             for _ in range(20):
@@ -313,15 +324,15 @@ class TestServingEpochs:
             [g.src[gB.m:], g.dst[gB.m:], g.t[gB.m:]], axis=1).tolist()]
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", gA)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             f1 = eng.ingest("feed", day1)
             f2 = eng.ingest("feed", day2)
             for f in list(f1.values()) + list(f2.values()):
                 f.result(timeout=120)
-            h = eng.registry.get_nowait("feed", 2, start_build=False)
+            h = eng.registry.get_nowait("feed", start_build=False)
             assert h is not None and h.epoch == 2
             assert h.graph.t_max == g.t_max
-            assert_pecb_identical(h.pecb, build_pecb_index(g, 2))
+            assert_pecb_identical(h.pecb, build_stratified_index(g))
 
     def test_cold_build_racing_ingest_catches_up(self):
         """An ingest that lands while a cold build is in flight finds no
@@ -346,7 +357,7 @@ class TestServingEpochs:
 
         reg._build = stalling_build
         try:
-            fut = reg.get_async("feed", 2)
+            fut = reg.get_async("feed")
             assert built.wait(30)
             assert reg.extend_graph("feed", suffix) == {}  # nothing resident
             proceed.set()
@@ -354,14 +365,14 @@ class TestServingEpochs:
             assert stale.graph.t_max == g0.t_max          # built pre-ingest
             deadline = time.perf_counter() + 60
             while time.perf_counter() < deadline:
-                h = reg.get_nowait("feed", 2, start_build=False)
+                h = reg.get_nowait("feed", start_build=False)
                 if h is not None and h.graph.t_max == g.t_max:
                     break
                 time.sleep(0.01)
-            h = reg.get_nowait("feed", 2, start_build=False)
+            h = reg.get_nowait("feed", start_build=False)
             assert h is not None and h.graph.t_max == g.t_max
             assert h.epoch == 1
-            assert_pecb_identical(h.pecb, build_pecb_index(g, 2))
+            assert_pecb_identical(h.pecb, build_stratified_index(g))
         finally:
             reg.close()
 
@@ -370,11 +381,11 @@ class TestServingEpochs:
         g0, suffix = split_epoch(g, 0.6)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("feed", g0)
-            eng.registry.get("feed", 2)
+            eng.registry.get("feed")
             eng.ingest("feed", suffix, wait=True)
             windows = [(d, d + 4) for d in range(1, g.t_max - 3)]
             res = eng.sweep("feed", WindowSweep(u=1, k=2, windows=windows))
-            h = eng.registry.get("feed", 2)
+            h = eng.registry.get("feed")
             for r, (ts, te) in zip(res, windows):
                 assert r.vertices == h.pecb.answer(
                     TCCSQuery(1, ts, te, 2)).vertices
@@ -424,7 +435,7 @@ class TestCacheHitRestamp:
         g = gen_temporal_graph(n=25, m=200, t_max=10, seed=41)
         with ServingEngine(EngineConfig(flush_ms=0.5)) as eng:
             eng.register_graph("g", g)
-            eng.registry.get("g", 2)      # resident, no XLA warmup needed
+            eng.registry.get("g")      # resident, no XLA warmup needed
             q = TCCSQuery(1, 1, g.t_max, 2)
             first = eng.answer("g", q)
             hit1 = eng.answer("g", q)
