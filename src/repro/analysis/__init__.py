@@ -13,6 +13,11 @@ Pass families:
 * :mod:`~repro.analysis.passes_jax` — tracing hygiene for jitted code.
 * :mod:`~repro.analysis.passes_api` — deprecated shims, metrics bypasses,
   wall-clock misuse, bare asserts.
+* :mod:`~repro.analysis.passes_kernels` — Pallas kernel contracts: grid
+  divisibility, index_map purity, VMEM budgets, int32 overflow flow and
+  device-layout contracts, on the :mod:`~repro.analysis.shapeflow`
+  abstract interpreter (runtime counterpart:
+  :mod:`repro.kernels.contracts`, armed by ``REPRO_KERNEL_WITNESS=1``).
 
 Adding a pass: write ``(module, config) -> Iterable[Finding]``, register
 it in :data:`PASSES` under its rule-family name, document it in DESIGN.md
@@ -24,6 +29,7 @@ from .core import (AnalysisConfig, Baseline, Finding, Module,
                    run_analysis)
 from .passes_api import pass_api_discipline
 from .passes_jax import pass_jax_hygiene
+from .passes_kernels import pass_kernel_contracts
 from .passes_locks import pass_lock_discipline
 
 #: name -> pass callable; config ``passes = [...]`` selects a subset.
@@ -31,10 +37,11 @@ PASSES = {
     "locks": pass_lock_discipline,
     "jax": pass_jax_hygiene,
     "api": pass_api_discipline,
+    "kernels": pass_kernel_contracts,
 }
 
 __all__ = [
     "AnalysisConfig", "Baseline", "Finding", "Module", "PASSES",
     "run_analysis", "pass_lock_discipline", "pass_jax_hygiene",
-    "pass_api_discipline",
+    "pass_api_discipline", "pass_kernel_contracts",
 ]

@@ -10,10 +10,22 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 
 from . import PASSES
 from .core import AnalysisConfig, Baseline, run_analysis
+
+
+def changed_files(root: str, base_ref: str) -> frozenset[str]:
+    """Repo-relative paths changed vs ``base_ref`` (committed, staged and
+    worktree changes alike). Raises ``CalledProcessError`` outside a git
+    checkout or on an unknown ref — the caller maps that to exit 2."""
+    out = subprocess.run(
+        ["git", "diff", "--name-only", base_ref],
+        cwd=root, capture_output=True, text=True, check=True).stdout
+    return frozenset(line.strip() for line in out.splitlines()
+                     if line.strip())
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -33,6 +45,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--passes", metavar="NAMES",
                    help="comma-separated pass subset "
                         f"(available: {', '.join(sorted(PASSES))})")
+    p.add_argument("--changed-only", action="store_true",
+                   help="analyze only files changed vs --base-ref "
+                        "(fast pre-push loop; CI strict runs stay "
+                        "full-tree)")
+    p.add_argument("--base-ref", default="HEAD", metavar="REF",
+                   help="git ref --changed-only diffs against "
+                        "(default: HEAD)")
     return p
 
 
@@ -49,6 +68,14 @@ def main(argv: list[str] | None = None) -> int:
                   file=sys.stderr)
             return 2
         config.passes = names
+    if args.changed_only:
+        try:
+            config.only_files = changed_files(root, args.base_ref)
+        except (subprocess.CalledProcessError, OSError) as e:
+            detail = getattr(e, "stderr", "") or str(e)
+            print(f"--changed-only: git diff vs {args.base_ref!r} failed: "
+                  f"{detail.strip()}", file=sys.stderr)
+            return 2
 
     findings = run_analysis(root, config, PASSES)
 

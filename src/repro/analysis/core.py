@@ -224,6 +224,25 @@ class AnalysisConfig:
     #: deprecated shim methods: name -> minimum positional-arg count that
     #: identifies the legacy signature at a call site
     deprecated_calls: dict = dataclasses.field(default_factory=dict)
+    #: per-platform VMEM budgets (bytes) for the kernels pass's static
+    #: estimator; ``vmem_platform`` selects the active one
+    vmem_budgets: dict = dataclasses.field(default_factory=dict)
+    vmem_platform: str = "tpu"
+    #: extent assumed for block dims the shape-flow interpreter cannot
+    #: resolve to a constant (data-dependent dims like a feature width)
+    vmem_assumed_extent: int = 2048
+    #: path prefixes where ``bare-assert`` does not fire (benchmark floor
+    #: asserts, test fixture helpers — not shipped library code)
+    assert_exempt: tuple[str, ...] = ()
+    #: CLI ``--changed-only``: restrict analysis to these repo-relative
+    #: paths. Never read from pyproject — strict CI always runs the tree.
+    only_files: frozenset | None = None
+
+    def vmem_budget(self) -> int:
+        """Active static-estimator budget (bytes); defaults to the
+        runtime witness's 16 MiB when the platform is unconfigured."""
+        return int(self.vmem_budgets.get(self.vmem_platform,
+                                         16 * 1024 * 1024))
 
     @classmethod
     def from_pyproject(cls, root: str) -> "AnalysisConfig":
@@ -251,6 +270,15 @@ class AnalysisConfig:
         if "deprecated-calls" in tbl:
             kw["deprecated_calls"] = {k: int(v) for k, v in
                                       tbl["deprecated-calls"].items()}
+        if "vmem-budgets" in tbl:
+            kw["vmem_budgets"] = {k: int(v) for k, v in
+                                  tbl["vmem-budgets"].items()}
+        if "vmem-platform" in tbl:
+            kw["vmem_platform"] = tbl["vmem-platform"]
+        if "vmem-assumed-extent" in tbl:
+            kw["vmem_assumed_extent"] = int(tbl["vmem-assumed-extent"])
+        if "assert-exempt" in tbl:
+            kw["assert_exempt"] = tuple(tbl["assert-exempt"])
         return cls(**kw)
 
 
@@ -273,6 +301,9 @@ def collect_files(root: str, config: AnalysisConfig) -> list[str]:
                 full = os.path.join(dirpath, fn)
                 rel = os.path.relpath(full, root).replace(os.sep, "/")
                 if any(rel.startswith(ex) for ex in config.exclude):
+                    continue
+                if (config.only_files is not None
+                        and rel not in config.only_files):
                     continue
                 out.append(full)
     return sorted(set(out))

@@ -1,0 +1,455 @@
+"""Kernel-contract passes: device-plane shape/dtype discipline
+(DESIGN.md §15.3).
+
+Five rules over every ``pl.pallas_call`` site and device-layout builder,
+driven by the :mod:`~repro.analysis.shapeflow` abstract interpreter:
+
+* ``pallas-grid-divisibility`` — a grid element of the form ``x // b``
+  silently drops the tail unless ``x`` is provably a multiple of ``b``.
+  The proof obligations are discharged symbolically: the repo's padding
+  idioms (``int(np.ceil(max(e, 1) / b)) * b``, the ``N + (ceil*b - N)``
+  cancellation in label_prop) all normalize to a multiple of ``b``.
+* ``pallas-indexmap-closure`` — a BlockSpec index_map closing over a
+  local of the enclosing wrapper (a traced value, a mutated Python
+  variable) is a staleness/miscompile hazard: index maps must be pure
+  functions of the grid indices (module constants are fine).
+* ``pallas-vmem-budget`` — sum of block shapes x dtype across in/out
+  specs, against the per-platform budget in ``[tool.repro-analysis]``.
+  Dims that resolve to constants (parameter defaults, module constants)
+  are exact; data-dependent dims use the configured assumed extent.
+* ``int32-narrowing`` — dtype-flow for the PR-9 overflow class: a cast
+  to int32 whose operand carries a product of non-constant extents
+  (``k_index * n + u``, ``K * n + 1``) or is int64-typed is a silent
+  wrap waiting for a big enough workload — unless it flows through a
+  *checked caster* (a function that raises an ``*Overflow*`` error,
+  like ``batch_query._i32``).
+* ``layout-contract`` — every array entering ``to_device`` /
+  ``_host_layout`` must be declared (dtype+rank) in
+  ``repro.kernels.contracts.LAYOUT_CONTRACTS``; construction-site dict
+  literals are cross-checked both ways and every value must provably be
+  int32 (guarded caster, int32 constructor, or an int32-typed name).
+
+The runtime counterpart (``repro.kernels.contracts``) validates the same
+contracts on real arrays when ``REPRO_KERNEL_WITNESS=1`` — static proof
+where the AST suffices, a witness where it cannot.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from . import shapeflow as sf
+from .core import AnalysisConfig, Finding, Module, make_finding
+
+_PALLAS_CALL_NAMES = frozenset({"pl.pallas_call", "pallas.pallas_call",
+                                "pallas_call"})
+_NARROW_FUNCS = frozenset({"np.int32", "numpy.int32", "jnp.int32"})
+_ASARRAY_FUNCS = frozenset({"np.asarray", "numpy.asarray", "np.array",
+                            "numpy.array", "jnp.asarray", "jnp.array"})
+
+_layout_contracts_cache: dict | None = None
+
+
+def _layout_contracts() -> dict:
+    """The declared device-layout table, imported lazily so a lint run
+    only needs numpy (contracts.py is deliberately jax-free)."""
+    global _layout_contracts_cache
+    if _layout_contracts_cache is None:
+        try:
+            from repro.kernels.contracts import LAYOUT_CONTRACTS
+            _layout_contracts_cache = dict(LAYOUT_CONTRACTS)
+        except Exception:  # pragma: no cover - contracts unimportable
+            _layout_contracts_cache = {}
+    return _layout_contracts_cache
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _kwargs(call: ast.Call) -> dict[str, ast.AST]:
+    return {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Parameter + assigned names of a function — what an index_map
+    lambda must NOT close over."""
+    out: set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            out.add(a.arg)
+        if args.vararg:
+            out.add(args.vararg.arg)
+        if args.kwarg:
+            out.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.For):
+            targets = [node.target]
+        for tgt in targets:
+            for sub in ast.walk(tgt):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+    return out
+
+
+def _resolve(env: sf.Env, node: ast.AST, hops: int = 5) -> ast.AST:
+    """Chase ``Name -> its assigned value`` a bounded number of times
+    (``grid = (...)`` then ``grid=grid``; ``blocks_kv = Tp // bk``)."""
+    while hops and isinstance(node, ast.Name) and node.id in env.value_ast:
+        node = env.value_ast[node.id]
+        hops -= 1
+    return node
+
+
+def _iter_functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            yield node
+
+
+def _pallas_sites(fn: ast.AST):
+    """Yield ``(inner, outer)``: the ``pl.pallas_call(...)`` call and the
+    call applying it to operands (None if not immediately applied)."""
+    inners = [node for node in ast.walk(fn)
+              if isinstance(node, ast.Call)
+              and _dotted(node.func) in _PALLAS_CALL_NAMES]
+    if not inners:
+        return
+    outers: dict[ast.AST, ast.Call] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and node.func in inners:
+            outers[node.func] = node
+    for inner in inners:
+        yield inner, outers.get(inner)
+
+
+def _spec_list(node: ast.AST | None) -> list[ast.Call]:
+    """BlockSpec calls from an in_specs/out_specs value (list or single)."""
+    if node is None:
+        return []
+    elts = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    return [e for e in elts
+            if isinstance(e, ast.Call)
+            and (_dotted(e.func) or "").endswith("BlockSpec")]
+
+
+# ---------------------------------------------------------------------------
+# rule: pallas-grid-divisibility
+# ---------------------------------------------------------------------------
+
+def _check_grid(module: Module, env: sf.Env, inner: ast.Call,
+                findings: list[Finding]) -> None:
+    grid = _resolve(env, _kwargs(inner).get("grid"))
+    if grid is None:
+        return
+    elts = grid.elts if isinstance(grid, (ast.Tuple, ast.List)) else [grid]
+    for elt in elts:
+        node = _resolve(env, elt)
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.FloorDiv)):
+            continue
+        num = env.lin(node.left)
+        den = env.lin(node.right)
+        if not sf.divides(num, den):
+            findings.append(make_finding(
+                module, "pallas-grid-divisibility", elt,
+                f"grid element {ast.unparse(node)!r}: the numerator is "
+                "not provably a multiple of the block size — the tail "
+                "iterations are silently dropped; pad with "
+                "int(np.ceil(x / b)) * b before dividing"))
+
+
+# ---------------------------------------------------------------------------
+# rule: pallas-indexmap-closure
+# ---------------------------------------------------------------------------
+
+def _check_index_maps(module: Module, fn: ast.AST, inner: ast.Call,
+                      locals_: set[str], findings: list[Finding]) -> None:
+    kw = _kwargs(inner)
+    for spec in (_spec_list(kw.get("in_specs"))
+                 + _spec_list(kw.get("out_specs"))):
+        index_map = None
+        if len(spec.args) >= 2:
+            index_map = spec.args[1]
+        elif "index_map" in _kwargs(spec):
+            index_map = _kwargs(spec)["index_map"]
+        if not isinstance(index_map, ast.Lambda):
+            continue
+        for name in sf.free_names(index_map):
+            if name in locals_:
+                findings.append(make_finding(
+                    module, "pallas-indexmap-closure", index_map,
+                    f"index_map closes over local {name!r} of the "
+                    "enclosing wrapper: index maps must be pure "
+                    "functions of the grid indices (closure over traced "
+                    "values or per-call Python state miscompiles or "
+                    "goes stale across calls)"))
+
+
+# ---------------------------------------------------------------------------
+# rule: pallas-vmem-budget
+# ---------------------------------------------------------------------------
+
+def _block_bytes(env: sf.Env, shape_node: ast.AST, itemsize: int,
+                 assumed: int) -> int:
+    """Estimated bytes of one block: constant dims exact, unresolved dims
+    at the assumed extent; non-tuple shapes (``deg.shape``) count as one
+    assumed-extent dim."""
+    if not isinstance(shape_node, (ast.Tuple, ast.List)):
+        return assumed * itemsize
+    total = 1
+    for dim in shape_node.elts:
+        lin = env.lin(dim)
+        c = lin.as_const() if lin is not None else None
+        total *= c if c is not None and c > 0 else assumed
+    return total * itemsize
+
+
+def _out_shape_dtypes(node: ast.AST | None) -> list[int]:
+    """Itemsizes from ``out_shape=`` (ShapeDtypeStruct or list of them)."""
+    if node is None:
+        return []
+    elts = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    sizes = []
+    for e in elts:
+        size = 4
+        if isinstance(e, ast.Call) and len(e.args) >= 2:
+            name = sf.dtype_name(e.args[1])
+            if name is not None:
+                size = sf.DTYPE_BYTES[name]
+        sizes.append(size)
+    return sizes
+
+
+def _check_vmem(module: Module, env: sf.Env, inner: ast.Call,
+                outer: ast.Call | None, config: AnalysisConfig,
+                findings: list[Finding]) -> None:
+    kw = _kwargs(inner)
+    assumed = config.vmem_assumed_extent
+    budget = config.vmem_budget()
+    total = 0
+
+    in_specs = _spec_list(kw.get("in_specs"))
+    operands = list(outer.args) if outer is not None else []
+    for i, spec in enumerate(in_specs):
+        itemsize = 4
+        if i < len(operands):
+            name = env.dtype_of(operands[i])
+            if name is not None:
+                itemsize = sf.DTYPE_BYTES[name]
+        if spec.args:
+            total += _block_bytes(env, spec.args[0], itemsize, assumed)
+
+    out_specs = _spec_list(kw.get("out_specs"))
+    out_sizes = _out_shape_dtypes(kw.get("out_shape"))
+    for j, spec in enumerate(out_specs):
+        itemsize = out_sizes[j] if j < len(out_sizes) else 4
+        if spec.args:
+            total += _block_bytes(env, spec.args[0], itemsize, assumed)
+
+    if total > budget:
+        findings.append(make_finding(
+            module, "pallas-vmem-budget", inner,
+            f"estimated per-step VMEM {total} B exceeds the "
+            f"{config.vmem_platform!r} budget {budget} B (unresolved "
+            f"dims assumed {assumed}); shrink the block sizes or raise "
+            "the budget in [tool.repro-analysis.vmem-budgets]"))
+
+
+# ---------------------------------------------------------------------------
+# rule: int32-narrowing
+# ---------------------------------------------------------------------------
+
+def _is_narrowing_cast(node: ast.Call) -> ast.AST | None:
+    """The operand being narrowed to int32, or None."""
+    d = _dotted(node.func)
+    if d in _NARROW_FUNCS and node.args:
+        return node.args[0]
+    if d in _ASARRAY_FUNCS and node.args:
+        dtype = None
+        for arg in node.args[1:]:
+            dtype = sf.dtype_name(arg) or dtype
+        for kwarg in node.keywords:
+            if kwarg.arg == "dtype":
+                dtype = sf.dtype_name(kwarg.value)
+        if dtype == "int32":
+            return node.args[0]
+        return None
+    if (isinstance(node.func, ast.Attribute) and node.func.attr == "astype"
+            and node.args and sf.dtype_name(node.args[0]) == "int32"):
+        return node.func.value
+    return None
+
+
+def _contains_narrowing(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Call)
+               and _is_narrowing_cast(sub) is not None
+               for sub in ast.walk(node))
+
+
+def _raises_overflow(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Raise) and node.exc is not None:
+            exc = node.exc
+            if isinstance(exc, ast.Call):
+                exc = exc.func
+            name = (_dotted(exc) or "").rsplit(".", 1)[-1]
+            if "Overflow" in name:
+                return True
+    return False
+
+
+def _collect_casters(tree: ast.Module) -> dict[str, bool]:
+    """Module-local narrowing casters: ``name -> guarded`` (guarded =
+    the body raises an ``*Overflow*`` error before narrowing). Covers
+    ``def _i32(...)``, ``i32 = lambda a: np.asarray(a, np.int32)`` and
+    aliases ``i32 = _i32``."""
+    casters: dict[str, bool] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and _contains_narrowing(node):
+            casters[node.name] = _raises_overflow(node)
+    for _ in range(2):  # aliases may precede or follow the definition
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            tname = node.targets[0].id
+            if isinstance(node.value, ast.Lambda) \
+                    and _contains_narrowing(node.value):
+                casters[tname] = _raises_overflow(node.value)
+            elif (isinstance(node.value, ast.Name)
+                  and node.value.id in casters):
+                casters[tname] = casters[node.value.id]
+    return casters
+
+
+def _is_risky(env: sf.Env, operand: ast.AST) -> str | None:
+    """Why a narrowed operand may overflow int32, or None if clean."""
+    if sf.int_expr_has_product(operand):
+        return ("carries a product of non-constant extents "
+                "(the k_index*n + u / K*n+1 packed-offset shape)")
+    if env.dtype_of(operand) == "int64":
+        return "is int64-typed"
+    return None
+
+
+def _check_narrowing(module: Module, tree_casters: dict[str, bool],
+                     fn: ast.AST, env: sf.Env, symbol: str,
+                     findings: list[Finding]) -> None:
+    if _raises_overflow(fn):
+        return  # the checked caster's own implementation
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        operand = _is_narrowing_cast(node)
+        if operand is None and isinstance(node.func, ast.Name):
+            caster = node.func.id
+            if caster in tree_casters and node.args:
+                if tree_casters[caster]:
+                    continue  # guarded caster call — the fix pattern
+                operand = node.args[0]
+        if operand is None:
+            continue
+        why = _is_risky(env, operand)
+        if why is not None:
+            findings.append(make_finding(
+                module, "int32-narrowing", node,
+                f"int32 narrowing of an operand that {why}: silent "
+                "wrap at scale — widen to int64, or route through a "
+                "checked caster that raises a typed *Overflow* error",
+                symbol=symbol))
+
+
+# ---------------------------------------------------------------------------
+# rule: layout-contract
+# ---------------------------------------------------------------------------
+
+def _value_int32_ok(env: sf.Env, node: ast.AST,
+                    casters: dict[str, bool]) -> bool:
+    if isinstance(node, ast.IfExp):
+        return (_value_int32_ok(env, node.body, casters)
+                and _value_int32_ok(env, node.orelse, casters))
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in casters):
+        return casters[node.func.id]
+    return env.dtype_of(node) == "int32"
+
+
+def _check_layout_dicts(module: Module, fn: ast.AST, env: sf.Env,
+                        casters: dict[str, bool], symbol: str,
+                        findings: list[Finding]) -> None:
+    table = _layout_contracts()
+    if not table:
+        return
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Dict):
+            continue
+        keys = [k.value for k in node.keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)]
+        matched = [k for k in keys if k in table]
+        if len(matched) < 3:
+            continue  # not a device-layout construction site
+        for key_node, val in zip(node.keys, node.values):
+            if not (isinstance(key_node, ast.Constant)
+                    and isinstance(key_node.value, str)):
+                continue
+            key = key_node.value
+            if key not in table:
+                findings.append(make_finding(
+                    module, "layout-contract", key_node,
+                    f"layout array {key!r} is not declared in "
+                    "kernels.contracts.LAYOUT_CONTRACTS — declare its "
+                    "dtype+rank or rename it", symbol=symbol))
+                continue
+            if not _value_int32_ok(env, val, casters):
+                findings.append(make_finding(
+                    module, "layout-contract", val,
+                    f"layout value for {key!r} is not provably "
+                    f"{table[key][0]}: construct with an int32 dtype or "
+                    "route through a checked caster", symbol=symbol))
+        missing = sorted(set(table) - set(keys))
+        if missing:
+            findings.append(make_finding(
+                module, "layout-contract", node,
+                f"declared layout arrays absent from this construction "
+                f"site: {', '.join(missing)} — every contract array "
+                "must be built (padded if empty)", symbol=symbol))
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+def pass_kernel_contracts(module: Module,
+                          config: AnalysisConfig) -> Iterable[Finding]:
+    findings: list[Finding] = []
+    consts = sf.module_int_consts(module.tree)
+    casters = _collect_casters(module.tree)
+
+    for fn in _iter_functions(module.tree):
+        env = sf.function_env(fn, consts)
+        symbol = fn.name
+        locals_ = None
+        for inner, outer in _pallas_sites(fn):
+            if locals_ is None:
+                locals_ = _local_names(fn)
+            _check_grid(module, env, inner, findings)
+            _check_index_maps(module, fn, inner, locals_, findings)
+            _check_vmem(module, env, inner, outer, config, findings)
+        _check_narrowing(module, casters, fn, env, symbol, findings)
+        _check_layout_dicts(module, fn, env, casters, symbol, findings)
+    return findings

@@ -57,9 +57,40 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..kernels import contracts as kernel_contracts
 from .pecb_index import PECBIndex, StratifiedPECB
 
 NONE = -1
+
+_I32_MIN = np.iinfo(np.int32).min
+_I32_MAX = np.iinfo(np.int32).max
+
+
+class LayoutOverflowError(OverflowError):
+    """A device-layout value does not fit int32.
+
+    The packed layout keeps every array int32 on device (half the
+    transfer and VMEM footprint of int64), which is only sound while the
+    global id/offset space — the stratified ``K*n+1`` row-pointer rows,
+    the fused entry offsets, the ``k_index*n + u`` query slots — stays
+    below 2**31. The layout builders compute in int64 and narrow through
+    :func:`_i32`, which raises this at *build* time instead of letting
+    the device index silently wrap."""
+
+
+def _i32(a, what: str = "array") -> np.ndarray:
+    """Checked int32 narrowing for layout arrays (the dtype-flow pass
+    treats calls to this as guarded; a raw ``np.asarray(x, np.int32)`` of
+    packed-extent arithmetic is a finding)."""
+    arr = np.asarray(a)
+    if arr.size:
+        mx, mn = int(arr.max()), int(arr.min())
+        if mx > _I32_MAX or mn < _I32_MIN:
+            raise LayoutOverflowError(
+                f"{what}: value range [{mn}, {mx}] exceeds int32; the "
+                "packed device layout cannot address this index — shard "
+                "the workload or shrink the stratum set")
+    return arr.astype(np.int32, copy=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,7 +156,7 @@ def _host_layout(index):
     id space, servable by the same compiled programs)."""
     if isinstance(index, StratifiedPECB):
         return _host_layout_stratified(index)
-    i32 = lambda a: np.asarray(a, np.int32)
+    i32 = _i32
     seg = np.diff(index.row_ptr)
     vseg = np.diff(index.vrow_ptr)
     store = index.versions
@@ -176,7 +207,7 @@ def _host_layout_stratified(sx: StratifiedPECB):
     :func:`batch_query_full_mixed` (the version arrays are the one place
     where records of different strata share an index space).
     """
-    i32 = lambda a: np.asarray(a, np.int32)
+    i32 = _i32
     K = len(sx.ks)
     n = sx.n
     Ntot = sx.num_nodes
@@ -219,12 +250,12 @@ def _host_layout_stratified(sx: StratifiedPECB):
         "node_ct": i32(sx.node_ct),
         "live_from": i32(sx.node_live_from),
         "live_to": i32(sx.node_live_to),
-        "row_ptr": i32(row_ptr),
+        "row_ptr": _i32(row_ptr, "fused entry row_ptr"),
         "ent_ts": i32(sx.ent_ts) if Etot else pad0,
         "ent_left": i32(ent_l) if Etot else padn,
         "ent_right": i32(ent_r) if Etot else padn,
         "ent_parent": i32(ent_p) if Etot else padn,
-        "vrow_ptr": i32(vrow_ptr),
+        "vrow_ptr": _i32(vrow_ptr, "fused K*n vertex row_ptr"),
         "vent_ts": i32(sx.vent_ts) if VEtot else pad0,
         "vent_node": i32(vent_node) if VEtot else padn,
         "ver_ts_from": i32(st.ts_from) if V else np.ones((1,), np.int32),
@@ -249,6 +280,9 @@ def to_device(index) -> DeviceIndex:
     """Upload a :class:`PECBIndex` or a whole :class:`StratifiedPECB`
     (mixed-k servable) to the device."""
     meta, arrays = _host_layout(index)
+    if kernel_contracts.witness_enabled():
+        kernel_contracts.check_layout(arrays,
+                                      witness=kernel_contracts.WITNESS)
     return DeviceIndex(**meta,
                        **{k: jnp.asarray(v) for k, v in arrays.items()})
 
@@ -544,8 +578,11 @@ def mixed_slots(sx: StratifiedPECB,
     """Host-side slot computation for a mixed-k batch: ``(u, k) ->
     k_index(k) * n + u``. Raises ``KeyError`` for an unsupported k — the
     serving planner short-circuits those before batching."""
-    return np.asarray([sx.k_index(k) * sx.n + u for (u, k) in queries],
-                      np.int32)
+    # int64 math first: k_index*n + u walks the fused slot space, which
+    # outgrows int32 long before any single stratum does
+    slots = np.asarray([sx.k_index(k) * sx.n + u for (u, k) in queries],
+                       np.int64)
+    return _i32(slots, "mixed-k entry slots")
 
 
 def batch_query_mixed_np(sx: StratifiedPECB,

@@ -749,7 +749,9 @@ def shrink_core_times(g: TemporalGraph, k: int,
     fin = vo < inf_old
     block = np.full(vo.shape, inf_new, np.int64)
     block[fin] = vo[fin] - shift
-    vct[1:] = block.astype(np.int32)
+    # values are core times bounded by inf_new = g.t_max + 1, int32 by
+    # the CoreTimeTable dtype contract
+    vct[1:] = block.astype(np.int32)  # repro: ignore[int32-narrowing]
 
     # -- records: drop dead, clip the cut straddlers, shift, renumber -----
     keep = prev.ts_to.astype(np.int64) >= t_cut

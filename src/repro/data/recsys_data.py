@@ -32,5 +32,9 @@ class InteractionStream:
             hist[i] = (base + rng.zipf(1.8, self.hist_len)) % self.n_items
             target[i] = (self.cluster_base[rng.choice(cs)] + rng.zipf(1.8)) % self.n_items
         mask = np.ones((batch, self.hist_len), np.float32)
+        # ids are % n_items, int32-safe; the int64 above only absorbs
+        # the unbounded zipf draws pre-modulo
+        # repro: ignore[int32-narrowing]
         return {"hist_ids": hist.astype(np.int32), "hist_mask": mask,
+                # repro: ignore[int32-narrowing] — same % n_items bound
                 "target_id": target.astype(np.int32)}

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .contracts import ANY_FLOAT, ArraySpec, kernel_contract
+
 NEG_INF = -1e30
 
 
@@ -74,6 +76,23 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = (acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
 
 
+def _flash_vmem(a: dict) -> int:
+    # per step (upper bound with the declared bq/bk — the wrapper may
+    # shrink them for short sequences): q tile + k/v tiles + o/acc tiles
+    # + (bq, 1) running stats, f32 bound per element
+    dh = a["q"].shape[3]
+    return 4 * (3 * a["bq"] * dh + 2 * a["bk"] * dh + 2 * a["bq"])
+
+
+@kernel_contract(
+    in_specs={
+        "q": ArraySpec(("B", "S", "H", "dh"), ANY_FLOAT),
+        "k": ArraySpec(("B", "T", "H", "dh"), ANY_FLOAT),
+        "v": ArraySpec(("B", "T", "H", "dh"), ANY_FLOAT),
+    },
+    out_specs=ArraySpec(("B", "S", "H", "dh"), ANY_FLOAT),
+    vmem_bound=_flash_vmem,
+)
 def flash_attention(q, k, v, *, causal: bool = False, bq: int = 128,
                     bk: int = 128, interpret: bool = True):
     """(B, S, H, dh) attention with KV (B, T, H, dh); H == kv-head count
@@ -94,6 +113,10 @@ def flash_attention(q, k, v, *, causal: bool = False, bq: int = 128,
     kernel = functools.partial(_flash_kernel, causal=causal,
                                scale=1.0 / float(np.sqrt(dh)),
                                blocks_kv=blocks_kv, t_real=T)
+    # bq/bk shrink via min() and dh is a model dim (<=256); the static
+    # worst case (2048^2 tiles) is unreachable, and the armed witness
+    # checks the real-tree bound at call time
+    # repro: ignore[pallas-vmem-budget]
     outs = pl.pallas_call(
         kernel,
         grid=(B * H, Sp // bq, blocks_kv),

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .contracts import ANY_INT, ArraySpec, INT_OR_BOOL, kernel_contract
 
 DEFAULT_EDGE_BLOCK = 1024
 DEFAULT_VERT_BLOCK = 512
@@ -48,6 +49,16 @@ def _degree_kernel(src_ref, dst_ref, alive_ref, out_ref):
     out_ref[...] += part
 
 
+@kernel_contract(
+    in_specs={
+        "src": ArraySpec(("E",), ANY_INT),
+        "dst": ArraySpec(("E",), ANY_INT),
+        "alive": ArraySpec(("E",), INT_OR_BOOL),
+    },
+    out_specs=ArraySpec(("n",), ("int32",)),
+    # per step: three edge blocks + the vertex-block output, i32
+    vmem_bound=lambda a: 4 * (3 * a["edge_block"] + a["vert_block"]),
+)
 def degree_count(src, dst, alive, n: int, *,
                  edge_block: int = DEFAULT_EDGE_BLOCK,
                  vert_block: int = DEFAULT_VERT_BLOCK,
@@ -86,6 +97,23 @@ def _threshold_kernel(src_ref, dst_ref, alive_ref, deg_ref, k_ref, out_ref):
     out_ref[...] = (alive_ref[...] > 0) & ok_s & ok_d
 
 
+def _peel_vmem(a: dict) -> int:
+    # the threshold kernel holds the WHOLE padded degree vector in VMEM
+    # (deg.shape BlockSpec) — the dominant term for large n
+    n_pad = (int(np.ceil(max(a["n"], 1) / DEFAULT_VERT_BLOCK))
+             * DEFAULT_VERT_BLOCK)
+    return 4 * (3 * a["edge_block"] + n_pad + 1) + a["edge_block"]
+
+
+@kernel_contract(
+    in_specs={
+        "src": ArraySpec(("E",), ANY_INT),
+        "dst": ArraySpec(("E",), ANY_INT),
+        "alive": ArraySpec(("E",), INT_OR_BOOL),
+    },
+    out_specs=ArraySpec(("E",), ("bool",)),
+    vmem_bound=_peel_vmem,
+)
 def peel_round(src, dst, alive, n: int, k: int, *,
                edge_block: int = DEFAULT_EDGE_BLOCK,
                interpret: bool = True):

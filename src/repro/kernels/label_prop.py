@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .contracts import ANY_INT, ArraySpec, INT_OR_BOOL, kernel_contract
+
 
 def _label_prop_kernel(labels_row_ref, active_row_ref,
                        l_ref, r_ref, p_ref, active_blk_ref, out_ref):
@@ -46,6 +48,25 @@ def _label_prop_kernel(labels_row_ref, active_row_ref,
     out_ref[0, :] = jnp.minimum(new, jumped)
 
 
+def _label_prop_vmem(a: dict) -> int:
+    # per step: two full padded rows (label + active) + five (1, bn)
+    # link/active blocks + the output block, all int32
+    bn = a["bn"]
+    n_pad = int(np.ceil(max(a["labels"].shape[1], 1) / bn)) * bn
+    return 4 * (2 * n_pad + 6 * bn)
+
+
+@kernel_contract(
+    in_specs={
+        "labels": ArraySpec(("B", "N"), ANY_INT),
+        "link_l": ArraySpec(("B", "N"), ANY_INT),
+        "link_r": ArraySpec(("B", "N"), ANY_INT),
+        "link_p": ArraySpec(("B", "N"), ANY_INT),
+        "active": ArraySpec(("B", "N"), INT_OR_BOOL),
+    },
+    out_specs=ArraySpec(("B", "N"), ("int32",)),
+    vmem_bound=_label_prop_vmem,
+)
 def label_prop_round(labels, link_l, link_r, link_p, active, *,
                      bn: int = 2048, interpret: bool = True):
     """One (B, N) propagation + jump round. Matches ref.label_prop_round."""

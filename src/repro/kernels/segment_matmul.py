@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .contracts import ANY_FLOAT, ANY_INT, ArraySpec, kernel_contract
+
 
 def _matmul_kernel(a_ref, b_ref, out_ref):
     k = pl.program_id(2)
@@ -37,6 +39,16 @@ def _matmul_kernel(a_ref, b_ref, out_ref):
                             preferred_element_type=jnp.float32)
 
 
+@kernel_contract(
+    in_specs={
+        "a": ArraySpec(("M", "K"), ANY_FLOAT),
+        "b": ArraySpec(("K", "N"), ANY_FLOAT),
+    },
+    out_specs=ArraySpec(("M", "N"), ("float32",)),
+    # per step: A tile + B tile + f32 accumulator tile
+    vmem_bound=lambda v: 4 * (v["bm"] * v["bk"] + v["bk"] * v["bn"]
+                              + v["bm"] * v["bn"]),
+)
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
            interpret: bool = True):
     """f32[M, N] = a @ b with (bm, bn, bk) VMEM tiles; pads to multiples."""
@@ -79,6 +91,16 @@ def _segsum_kernel(ids_ref, vals_ref, out_ref):
     out_ref[...] += jnp.dot(onehot, vals, preferred_element_type=jnp.float32)
 
 
+@kernel_contract(
+    in_specs={
+        "vals": ArraySpec(("E", "D"), ANY_FLOAT),
+        "ids": ArraySpec(("E",), ANY_INT),
+    },
+    out_specs=ArraySpec(("num_segments", "D"), ("float32",)),
+    # per step: id block + value rows + f32 output tile (d = row width)
+    vmem_bound=lambda a: 4 * (a["bm"] + (a["bm"] + a["bs"])
+                              * a["vals"].shape[1]),
+)
 def segment_sum(vals, ids, num_segments: int, *, bm: int = 512, bs: int = 256,
                 interpret: bool = True):
     """f32[num_segments, d] scatter-add of rows by id, via one-hot GEMM."""

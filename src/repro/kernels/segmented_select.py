@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .contracts import ANY_INT, ArraySpec, kernel_contract
+
 DEFAULT_SLOT_BLOCK = 1024
 DEFAULT_SEG_BLOCK = 512
 
@@ -102,6 +104,16 @@ def _count_le_kernel(seg_ref, w_ref, thr_ref, out_ref):
     out_ref[...] += part
 
 
+@kernel_contract(
+    in_specs={
+        "w": ArraySpec(("E",), ANY_INT),
+        "seg": ArraySpec(("E",), ANY_INT),
+        "thr": ArraySpec(("n",), ANY_INT),
+    },
+    out_specs=ArraySpec(("n",), ("int32",)),
+    # per step: two slot blocks (seg, w) + threshold block + out block, i32
+    vmem_bound=lambda a: 4 * (2 * a["slot_block"] + 2 * a["seg_block"]),
+)
 def segmented_count_le(w, seg, thr, n: int, *,
                        slot_block: int = DEFAULT_SLOT_BLOCK,
                        seg_block: int = DEFAULT_SEG_BLOCK,
@@ -129,6 +141,15 @@ def segmented_count_le(w, seg, thr, n: int, *,
     return out[:n]
 
 
+@kernel_contract(
+    in_specs={
+        "w": ArraySpec(("E",), ANY_INT),
+        "seg": ArraySpec(("E",), ANY_INT),
+        "lo": ArraySpec(("n",), ANY_INT),
+    },
+    out_specs=ArraySpec(("n",), ("int32",)),
+    # the inner segmented_count_le carries the per-step VMEM bound
+)
 def kth_smallest_pallas(w, seg, n: int, k: int, inf_value: int, *,
                         lo=None, interpret: bool = True) -> jnp.ndarray:
     """Per-segment clamped k-th smallest with the Pallas counter as the

@@ -1,4 +1,5 @@
-"""Suite-wide hooks: the dynamic lock-witness gate (DESIGN.md §12.2).
+"""Suite-wide hooks: the dynamic lock-witness and kernel-witness gates
+(DESIGN.md §12.2, §15.4).
 
 With ``REPRO_LOCK_WITNESS=1`` (the CI analysis job sets it around the fast
 suite) every ``named_lock``/``named_condition`` in the serving plane is an
@@ -6,8 +7,14 @@ instrumented wrapper reporting acquisition edges into the process-wide
 :data:`repro.obs.locks.WITNESS`. After the last test, the session-scoped
 teardown below cross-checks the observed edges against the declared
 hierarchy, writes the JSON report (CI artifact), and fails the run on any
-rank inversion, undeclared lock, or cycle. Without the env var the
-fixture is inert and the suite pays nothing.
+rank inversion, undeclared lock, or cycle.
+
+With ``REPRO_KERNEL_WITNESS=1`` every ``@kernel_contract`` Pallas wrapper
+validates its real arrays (rank, dtype family, symbolic-dim consistency)
+and its declared VMEM bound per call into
+:data:`repro.kernels.contracts.WITNESS`; the kernel gate writes that
+report and fails the run on any contract violation. Without the env vars
+both fixtures are inert and the suite pays nothing.
 """
 
 import json
@@ -15,6 +22,9 @@ import os
 
 import pytest
 
+from repro.kernels.contracts import (KernelContractViolation,
+                                     WITNESS as KERNEL_WITNESS,
+                                     witness_enabled as kernel_witness_enabled)
 from repro.obs.locks import WITNESS, witness_enabled
 
 
@@ -36,5 +46,23 @@ def _lock_witness_gate():
     if report["problems"]:
         raise LockHierarchyViolation(
             "observed lock acquisitions violate the declared hierarchy "
+            f"({len(report['problems'])} problem(s); report: {out}):\n"
+            + json.dumps(report["problems"], indent=2))
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _kernel_witness_gate():
+    yield
+    if not kernel_witness_enabled():
+        return
+    report = KERNEL_WITNESS.report()
+    out = os.environ.get("REPRO_KERNEL_WITNESS_REPORT",
+                         "kernel_contract_report.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if report["problems"]:
+        raise KernelContractViolation(
+            "armed kernel calls violate their declared contracts "
             f"({len(report['problems'])} problem(s); report: {out}):\n"
             + json.dumps(report["problems"], indent=2))

@@ -1,0 +1,91 @@
+"""Seeded kernel-contract violations — parsed by tests, never imported.
+
+One deliberate true positive per rule of the ``kernels`` pass family
+(DESIGN.md §15.3). Excluded from the strict tree in pyproject; the test
+suite pins the per-rule finding counts here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+SLOT_BLOCK = 1024
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def unpadded_grid(w):
+    """pallas-grid-divisibility: ep // SLOT_BLOCK drops the tail — w is
+    never padded to a SLOT_BLOCK multiple."""
+    ep = w.shape[0]
+    return pl.pallas_call(
+        _body,
+        grid=(ep // SLOT_BLOCK,),
+        in_specs=[pl.BlockSpec((SLOT_BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((SLOT_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.int32),
+        interpret=True,
+    )(w)
+
+
+def closure_index_map(x, offset):
+    """pallas-indexmap-closure: the in-spec index_map closes over a local
+    of the wrapper (a per-call Python value) instead of being a pure
+    function of the grid indices."""
+    n = x.shape[0]
+    npad = int(np.ceil(n / 128)) * 128
+    xp = jnp.pad(x, (0, npad - n))
+    start = offset // 128
+    return pl.pallas_call(
+        _body,
+        grid=(npad // 128,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i + start,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.int32),
+        interpret=True,
+    )(xp)
+
+
+def vmem_hog(a):
+    """pallas-vmem-budget: a (4096, 4096) f32 tile is 64 MiB — four times
+    the 16 MiB TPU budget before the output tile is even counted."""
+    m = a.shape[0]
+    mp = int(np.ceil(m / 4096)) * 4096
+    ap = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    return pl.pallas_call(
+        _body,
+        grid=(mp // 4096,),
+        in_specs=[pl.BlockSpec((4096, 4096), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 4096), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, 4096), jnp.float32),
+        interpret=True,
+    )(ap)
+
+
+def packed_slots_narrowed(k_index, n, u):
+    """int32-narrowing: the PR-9 fused slot ``k_index * n + u`` outgrows
+    int32 long before any single stratum does, and nothing checks."""
+    return np.asarray(k_index * n + u, np.int32)
+
+
+def row_ptr_narrowed(counts):
+    """int32-narrowing: int64 cumsum (the K*n+1 row-pointer build)
+    silently wrapped back to int32."""
+    row_ptr = np.cumsum(counts.astype(np.int64))
+    return row_ptr.astype(np.int32)
+
+
+def bad_layout(u, v, counts):
+    """layout-contract: an undeclared key, a float64 value nobody casts,
+    an unprovable value, and the other declared arrays missing from the
+    construction site. ``node_ct`` is provably int32 — the in-site
+    negative."""
+    return {
+        "node_u": u.astype(np.float64),
+        "node_v": v,
+        "node_ct": np.asarray(counts, np.int32),
+        "bogus_plane": np.zeros(3),
+    }

@@ -427,3 +427,35 @@ class TestPerKKeyShims:
                 reg.set_ks("g", (2, 3))
         finally:
             reg.close()
+
+
+class TestLayoutOverflowGuard:
+    """§15.2 satellite: the packed slot/row-pointer math raises a typed
+    error instead of silently wrapping past int32."""
+
+    def test_checked_caster_roundtrip_and_raise(self):
+        from repro.core.batch_query import LayoutOverflowError, _i32
+        ok = _i32(np.array([0, 7, 2**31 - 1], np.int64))
+        assert ok.dtype == np.int32
+        with pytest.raises(LayoutOverflowError, match="exceeds int32"):
+            _i32(np.array([2**31], np.int64), "fused entry slots")
+        with pytest.raises(LayoutOverflowError, match="exceeds int32"):
+            _i32(np.array([-2**31 - 1], np.int64))
+        # the typed error stays catchable as the stdlib family
+        assert issubclass(LayoutOverflowError, OverflowError)
+
+    def test_mixed_slots_computes_in_int64_first(self):
+        """k_index * n + u must not wrap *before* the guard sees it: a
+        fake stratified view with a huge n keeps the intermediate exact
+        and the guard raises rather than returning a wrapped slot."""
+        from repro.core.batch_query import LayoutOverflowError
+
+        class FakeSx:
+            n = 2**30
+            ks = (2, 3, 4)
+
+            def k_index(self, k):
+                return self.ks.index(k)
+
+        with pytest.raises(LayoutOverflowError, match="mixed-k entry"):
+            mixed_slots(FakeSx(), [(5, 4)])   # 2*2^30 + 5 > int32 max
